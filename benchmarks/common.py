@@ -1,0 +1,58 @@
+"""Shared benchmark plumbing: one mapping pass per (accelerator, DNN),
+cached for the whole process so every figure module reuses it."""
+
+from __future__ import annotations
+
+import functools
+import time
+
+from repro.core.accelerators import SPECS, AcceleratorSpec, make_specs
+from repro.core.energy import EnergyReport, model_energy, vector_cycles
+from repro.core.mapper import ModelMapping, ReDasMapper
+from repro.core.workloads import WORKLOADS, Workload
+
+ACCELERATORS = ("tpu", "gemmini", "planaria", "dynnamic", "sara", "redas")
+MODELS = tuple(WORKLOADS)  # RE EF TY FR VI BE GN DS
+
+
+@functools.lru_cache(maxsize=None)
+def mapping_for(acc: str, model: str, array_size: int = 128) -> ModelMapping:
+    spec = make_specs(array_size)[acc]
+    return ReDasMapper(spec, array_size=array_size).map_model(
+        WORKLOADS[model].gemms)
+
+
+@functools.lru_cache(maxsize=None)
+def energy_for(acc: str, model: str, array_size: int = 128) -> EnergyReport:
+    spec = make_specs(array_size)[acc]
+    return model_energy(spec, mapping_for(acc, model, array_size),
+                        WORKLOADS[model].vector_elements, array_size)
+
+
+def total_runtime_cycles(acc: str, model: str, array_size: int = 128) -> float:
+    """GEMM cycles + exposed vector (activation) time — Fig. 11's metric."""
+    m = mapping_for(acc, model, array_size)
+    return m.total_cycles + vector_cycles(WORKLOADS[model].vector_elements)
+
+
+def geomean(xs) -> float:
+    xs = list(xs)
+    p = 1.0
+    for x in xs:
+        p *= x
+    return p ** (1.0 / len(xs))
+
+
+class timed:
+    """Context manager for each figure's us_per_call column."""
+
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *exc):
+        self.us = (time.time() - self.t0) * 1e6
+
+
+def csv_row(name: str, us: float, derived: str) -> str:
+    return f"{name},{us:.0f},{derived}"

@@ -1,0 +1,64 @@
+"""Baseline vs optimized dry-run comparison (EXPERIMENTS.md §Perf table).
+
+    PYTHONPATH=src python -m benchmarks.dryrun_compare [--mesh single]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def load(d: str, mesh: str) -> dict:
+    out = {}
+    p = os.path.join(ROOT, d, mesh)
+    if not os.path.isdir(p):
+        return out
+    for f in os.listdir(p):
+        with open(os.path.join(p, f)) as fh:
+            r = json.load(fh)
+        if r.get("status") == "ok":
+            out[(r["arch"], r["shape"])] = r["roofline"]
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    base = load("runs/dryrun", args.mesh)
+    opt = load("runs/dryrun_opt", args.mesh)
+    hdr = ["arch", "shape", "base step_s", "opt step_s", "speedup",
+           "base roofl%", "opt roofl%"]
+    fmt = ("| " + " | ".join("{}" for _ in hdr) + " |") if args.markdown \
+        else "  ".join("{:>12s}" for _ in hdr)
+    if args.markdown:
+        print("| " + " | ".join(hdr) + " |")
+        print("|" + "---|" * len(hdr))
+    else:
+        print(fmt.format(*hdr))
+    gains = []
+    for key in sorted(base):
+        if key not in opt:
+            continue
+        b, o = base[key], opt[key]
+        sp = b["step_s"] / o["step_s"] if o["step_s"] else float("nan")
+        gains.append(sp)
+        print(fmt.format(
+            key[0], key[1], f"{b['step_s']:.4g}", f"{o['step_s']:.4g}",
+            f"{sp:.2f}x", f"{100 * b['roofline_fraction']:.2f}",
+            f"{100 * o['roofline_fraction']:.2f}"))
+    if gains:
+        g = 1.0
+        for x in gains:
+            g *= x
+        print(f"\ngeomean step-bound speedup: {g ** (1 / len(gains)):.2f}x "
+              f"over {len(gains)} cells")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Fig. 11: speedup of each accelerator over TPU on the 8 DNN workloads.
+
+Paper claims: ReDas ~4.6x geomean vs TPU; ~2.31x vs Gemmini, ~1.62x vs
+Planaria, ~1.83x vs DyNNamic, ~parity with SARA; DeepSpeech2 8.19x,
+GNMT 5.66x, ViT 6.01x vs TPU."""
+
+from __future__ import annotations
+
+from .common import (ACCELERATORS, MODELS, csv_row, geomean, timed,
+                     total_runtime_cycles)
+
+
+def compute() -> dict:
+    base = {m: total_runtime_cycles("tpu", m) for m in MODELS}
+    table = {
+        acc: {m: base[m] / total_runtime_cycles(acc, m) for m in MODELS}
+        for acc in ACCELERATORS
+    }
+    summary = {acc: geomean(table[acc].values()) for acc in ACCELERATORS}
+    return {"per_model": table, "geomean": summary}
+
+
+def main() -> list[str]:
+    with timed() as t:
+        r = compute()
+    rows = []
+    g = r["geomean"]
+    rows.append(csv_row("fig11.redas_geomean_speedup_vs_tpu", t.us,
+                        f"{g['redas']:.2f}x (paper 4.6x)"))
+    for acc in ("gemmini", "planaria", "dynnamic", "sara"):
+        rows.append(csv_row(f"fig11.redas_vs_{acc}", 0,
+                            f"{g['redas'] / g[acc]:.2f}x"))
+    for m in MODELS:
+        rows.append(csv_row(f"fig11.redas_speedup.{m}", 0,
+                            f"{r['per_model']['redas'][m]:.2f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,41 @@
+"""Fig. 12: power efficiency (throughput per watt) vs TPU.
+
+Paper: ReDas 1.32-2.52x vs TPU; ~2.11x avg vs SARA; Gemmini beats ReDas
+by ~1.13x on BERT-Large (big square GEMMs — ReDas's roundabout paths
+only add energy there)."""
+
+from __future__ import annotations
+
+from repro.core.workloads import WORKLOADS
+
+from .common import ACCELERATORS, MODELS, csv_row, energy_for, geomean, timed
+
+
+def compute() -> dict:
+    eff = {
+        acc: {m: energy_for(acc, m).power_efficiency(
+            sum(g.flops for g in WORKLOADS[m].gemms)) for m in MODELS}
+        for acc in ACCELERATORS
+    }
+    rel = {acc: {m: eff[acc][m] / eff["tpu"][m] for m in MODELS}
+           for acc in ACCELERATORS}
+    return rel
+
+
+def main() -> list[str]:
+    with timed() as t:
+        rel = compute()
+    rows = [csv_row("fig12.redas_power_eff_geomean_vs_tpu", t.us,
+                    f"{geomean(rel['redas'].values()):.2f}x (paper 1.32-2.52x)")]
+    rows.append(csv_row(
+        "fig12.redas_vs_sara", 0,
+        f"{geomean(rel['redas'][m] / rel['sara'][m] for m in MODELS):.2f}x "
+        f"(paper ~2.11x)"))
+    rows.append(csv_row(
+        "fig12.gemmini_vs_redas_bert", 0,
+        f"{rel['gemmini']['BE'] / rel['redas']['BE']:.2f}x (paper ~1.13x)"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,31 @@
+"""Fig. 14: PE utilization per accelerator x DNN.
+
+Paper: ReDas 4.79x TPU, 1.67x Planaria, 2.42x Gemmini on average; RNNs
+(GNMT, DeepSpeech2) lowest absolute utilization (matrix-vector GEMMs)."""
+
+from __future__ import annotations
+
+from .common import ACCELERATORS, MODELS, csv_row, geomean, mapping_for, timed
+
+
+def compute() -> dict:
+    return {acc: {m: mapping_for(acc, m).pe_utilization(128) for m in MODELS}
+            for acc in ACCELERATORS}
+
+
+def main() -> list[str]:
+    with timed() as t:
+        u = compute()
+    rows = []
+    for ref, paper in (("tpu", 4.79), ("planaria", 1.67), ("gemmini", 2.42)):
+        g = geomean(u["redas"][m] / u[ref][m] for m in MODELS)
+        rows.append(csv_row(f"fig14.redas_util_vs_{ref}", t.us if ref == "tpu" else 0,
+                            f"{g:.2f}x (paper {paper}x)"))
+    for m in MODELS:
+        rows.append(csv_row(f"fig14.redas_util.{m}", 0,
+                            f"{u['redas'][m]:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,56 @@
+"""Fig. 15: ReDas runtime breakdown — GEMM compute, exposed memory time,
+PE-array configuration, activation (SIMD) time, bypass overhead.
+
+Paper: non-overlapping memory 7-25%; config 0.4-7%; activation 0.1-6.9%;
+roundabout bypass ~1.2% average."""
+
+from __future__ import annotations
+
+from repro.core.energy import vector_cycles
+from repro.core.workloads import WORKLOADS
+
+from .common import MODELS, csv_row, geomean, mapping_for, timed
+
+
+def compute() -> dict:
+    out = {}
+    for m in MODELS:
+        mp = mapping_for("redas", m)
+        gemm = mp.total_cycles
+        vec = vector_cycles(WORKLOADS[m].vector_elements)
+        total = gemm + vec
+        compute_c = sum(min(d.report.compute_cycles,
+                            d.report.cycles - d.report.start_cycles
+                            - d.report.end_cycles) for d in mp.decisions)
+        exposed_mem = gemm - compute_c
+        out[m] = {
+            "compute": compute_c / total,
+            "memory": exposed_mem / total,
+            "config": mp.total_config_cycles / total,
+            "activation": vec / total,
+            "bypass": mp.total_bypass_cycles / total,
+        }
+    return out
+
+
+def main() -> list[str]:
+    with timed() as t:
+        r = compute()
+    rows = []
+    mem = [r[m]["memory"] for m in MODELS]
+    rows.append(csv_row("fig15.exposed_memory_range", t.us,
+                        f"{min(mem) * 100:.1f}-{max(mem) * 100:.1f}% (paper 7-25%)"))
+    cfgs = [r[m]["config"] for m in MODELS]
+    rows.append(csv_row("fig15.config_range", 0,
+                        f"{min(cfgs) * 100:.2f}-{max(cfgs) * 100:.2f}% (paper 0.4-7%)"))
+    acts = [r[m]["activation"] for m in MODELS]
+    rows.append(csv_row("fig15.activation_range", 0,
+                        f"{min(acts) * 100:.2f}-{max(acts) * 100:.2f}% (paper 0.1-6.9%)"))
+    byp = geomean(max(r[m]["bypass"], 1e-9) for m in MODELS)
+    rows.append(csv_row("fig15.bypass_mean", 0,
+                        f"{byp * 100:.2f}% (paper ~1.2%)"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

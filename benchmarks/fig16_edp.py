@@ -1,0 +1,31 @@
+"""Fig. 16: energy-delay product vs TPU (lower better; we report the TPU/
+ReDas ratio as 'reduction').  Paper: ReDas ~8.3x EDP reduction vs TPU,
+~2.0x avg (up to 3.3x) vs SARA."""
+
+from __future__ import annotations
+
+from .common import ACCELERATORS, MODELS, csv_row, energy_for, geomean, timed
+
+
+def compute() -> dict:
+    edp = {acc: {m: energy_for(acc, m).edp for m in MODELS}
+           for acc in ACCELERATORS}
+    return edp
+
+
+def main() -> list[str]:
+    with timed() as t:
+        edp = compute()
+    rows = [csv_row(
+        "fig16.redas_edp_reduction_vs_tpu", t.us,
+        f"{geomean(edp['tpu'][m] / edp['redas'][m] for m in MODELS):.2f}x "
+        f"(paper ~8.3x)")]
+    rows.append(csv_row(
+        "fig16.redas_edp_reduction_vs_sara", 0,
+        f"{geomean(edp['sara'][m] / edp['redas'][m] for m in MODELS):.2f}x "
+        f"(paper ~2.0x)"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,34 @@
+"""Fig. 17: area-delay product vs TPU.  Paper: ReDas ~3.4x ADP reduction
+vs TPU; ADP 68% lower than DyNNamic and 71% lower than SARA."""
+
+from __future__ import annotations
+
+from repro.core.accelerators import SPECS
+
+from .common import ACCELERATORS, MODELS, csv_row, energy_for, geomean, timed
+
+
+def compute() -> dict:
+    return {
+        acc: {m: energy_for(acc, m).adp(SPECS[acc].area_mm2) for m in MODELS}
+        for acc in ACCELERATORS
+    }
+
+
+def main() -> list[str]:
+    with timed() as t:
+        adp = compute()
+    rows = [csv_row(
+        "fig17.redas_adp_reduction_vs_tpu", t.us,
+        f"{geomean(adp['tpu'][m] / adp['redas'][m] for m in MODELS):.2f}x "
+        f"(paper ~3.4x)")]
+    for acc, paper in (("dynnamic", 68), ("sara", 71)):
+        frac = geomean(1 - adp["redas"][m] / adp[acc][m] for m in MODELS
+                       if adp["redas"][m] < adp[acc][m])
+        rows.append(csv_row(f"fig17.redas_adp_lower_than_{acc}", 0,
+                            f"{frac * 100:.0f}% (paper {paper}%)"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

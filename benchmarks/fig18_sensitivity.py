@@ -1,0 +1,70 @@
+"""Fig. 18: design-point sensitivity across PE-array scales 16..128.
+
+ReDas-MD: multiple dataflows only (fixed square shape).
+ReDas-FR: fine-grained reshaping only (WS dataflow).
+ReDas-Both: both.  Paper @128: MD ~2.5x, FR ~3.5x, Both ~4.6x vs TPU,
+with the advantage growing with array size."""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.accelerators import make_specs
+from repro.core.dataflow import Dataflow, LogicalShape
+from repro.core.energy import vector_cycles
+from repro.core.mapper import ReDasMapper
+from repro.core.workloads import WORKLOADS
+
+from .common import MODELS, csv_row, geomean, timed
+
+SIZES = (16, 32, 64, 128)
+
+
+def _variants(size: int) -> dict:
+    specs = make_specs(size)
+    redas = specs["redas"]
+    fixed = (LogicalShape(size, size),)
+    return {
+        "tpu": specs["tpu"],
+        "ReDas-MD": dataclasses.replace(redas, shapes=fixed),
+        "ReDas-FR": dataclasses.replace(redas, dataflows=(Dataflow.WS,)),
+        "ReDas-Both": redas,
+    }
+
+
+def compute() -> dict:
+    out: dict = {}
+    for size in SIZES:
+        variants = _variants(size)
+        cyc = {
+            name: {m: (ReDasMapper(spec, array_size=size)
+                       .map_model(WORKLOADS[m].gemms).total_cycles
+                       + vector_cycles(WORKLOADS[m].vector_elements))
+                   for m in MODELS}
+            for name, spec in variants.items()
+        }
+        out[size] = {
+            name: geomean(cyc["tpu"][m] / cyc[name][m] for m in MODELS)
+            for name in ("ReDas-MD", "ReDas-FR", "ReDas-Both")
+        }
+    return out
+
+
+def main() -> list[str]:
+    with timed() as t:
+        r = compute()
+    rows = []
+    paper = {"ReDas-MD": 2.5, "ReDas-FR": 3.5, "ReDas-Both": 4.6}
+    for name, p in paper.items():
+        rows.append(csv_row(f"fig18.{name}@128", t.us if name == "ReDas-MD" else 0,
+                            f"{r[128][name]:.2f}x (paper ~{p}x)"))
+    trend = all(r[s]["ReDas-Both"] <= r[n]["ReDas-Both"] + 0.3
+                for s, n in zip(SIZES, SIZES[1:]))
+    rows.append(csv_row("fig18.rising_trend_with_size", 0,
+                        f"{[round(r[s]['ReDas-Both'], 2) for s in SIZES]} "
+                        f"monotone~{trend}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,37 @@
+"""Fig. 20/21: distribution of chosen dataflows and logical shapes across
+all DNN layers.  Paper: OS ~40.9%, WS ~39.7% of layers; 256x64 the most
+prevalent shape (~27.3%)."""
+
+from __future__ import annotations
+
+from collections import Counter
+
+from .common import MODELS, csv_row, mapping_for, timed
+
+
+def compute() -> tuple[Counter, Counter]:
+    dataflows: Counter = Counter()
+    shapes: Counter = Counter()
+    for m in MODELS:
+        for d in mapping_for("redas", m).decisions:
+            dataflows[d.config.dataflow.value] += 1
+            shapes[str(d.config.shape)] += 1
+    return dataflows, shapes
+
+
+def main() -> list[str]:
+    with timed() as t:
+        df, sh = compute()
+    total = sum(df.values())
+    rows = [csv_row("fig20.dataflow_share", t.us,
+                    " ".join(f"{k}={100 * v / total:.1f}%"
+                             for k, v in df.most_common()))]
+    top = sh.most_common(5)
+    rows.append(csv_row(
+        "fig21.top_shapes", 0,
+        " ".join(f"{k}={100 * v / total:.1f}%" for k, v in top)))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,62 @@
+"""Render the §Roofline / §Dry-run tables from runs/dryrun JSONs.
+
+    PYTHONPATH=src python -m benchmarks.roofline_table [--mesh single]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+RUNS = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                    "runs", "dryrun")
+
+NOTE = {
+    "compute": "more useful FLOPs/step: raise per-device batch or cut remat",
+    "memory": "cut HBM streams: fuse attention (Pallas kernel) / bf16 interms",
+    "collective": "cut resharding: fewer grad-accum trips / better placement",
+}
+
+
+def rows(mesh: str):
+    d = os.path.join(RUNS, mesh)
+    for f in sorted(os.listdir(d)):
+        with open(os.path.join(d, f)) as fh:
+            yield json.load(fh)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single", choices=("single", "multi"))
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    sep = " | " if args.markdown else "  "
+    hdr = ["arch", "shape", "status", "compute_s", "memory_s", "coll_s",
+           "bottleneck", "MODEL/HLO", "roofline%"]
+    if args.markdown:
+        print("| " + " | ".join(hdr) + " |")
+        print("|" + "---|" * len(hdr))
+    else:
+        print(sep.join(hdr))
+    for r in rows(args.mesh):
+        if r["status"] != "ok":
+            cells = [r["arch"], r["shape"], f"SKIP: {r.get('reason', '?')}",
+                     "", "", "", "", "", ""]
+        else:
+            rl = r["roofline"]
+            cells = [
+                r["arch"], r["shape"], "ok",
+                f"{rl['compute_s']:.4g}", f"{rl['memory_s']:.4g}",
+                f"{rl['collective_s']:.4g}", rl["bottleneck"],
+                f"{rl['useful_flops_ratio']:.3f}",
+                f"{100 * rl['roofline_fraction']:.2f}%",
+            ]
+        if args.markdown:
+            print("| " + " | ".join(str(c) for c in cells) + " |")
+        else:
+            print(sep.join(str(c) for c in cells))
+
+
+if __name__ == "__main__":
+    main()

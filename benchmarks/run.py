@@ -1,0 +1,49 @@
+"""Run every paper-table/figure benchmark; print name,us_per_call,derived
+CSV.  ``PYTHONPATH=src python -m benchmarks.run [--only fig11,...]``"""
+
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import traceback
+
+MODULES = (
+    "fig03_ideal",
+    "fig11_speedup",
+    "fig12_power",
+    "fig14_util",
+    "fig15_breakdown",
+    "fig16_edp",
+    "fig17_adp",
+    "fig18_sensitivity",
+    "fig19_mapper",
+    "fig11_sensitivity",
+    "fig20_21_distribution",
+    "fig22_casestudy",
+    "kernel_bench",
+)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module subset")
+    args = ap.parse_args()
+    mods = args.only.split(",") if args.only else MODULES
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in mods:
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            for row in mod.main():
+                print(row, flush=True)
+        except Exception:
+            failures += 1
+            print(f"{name},0,ERROR", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,39 @@
+"""Fig. 22 reproduction as a runnable example: sweep every (logical
+shape x dataflow) for four DNN layers and print the runtime landscape.
+
+    PYTHONPATH=src python examples/mapper_casestudy.py
+"""
+
+from repro.core.accelerators import SPECS
+from repro.core.analytical_model import GEMM
+from repro.core.dataflow import pe_usage
+from repro.core.mapper import ReDasMapper
+
+LAYERS = [
+    GEMM(43264, 144, 32, name="TinyYOLO-V2 L2"),
+    GEMM(50, 3072, 768, name="ViT FFN2"),
+    GEMM(128, 1024, 4096, name="BERT FFN1"),
+    GEMM(1, 1024, 4096, name="GNMT cell"),
+]
+
+mapper = ReDasMapper(SPECS["redas"])
+for g in LAYERS:
+    # landscape: best runtime per (shape, dataflow)
+    best: dict = {}
+    for cand in mapper.candidates(g):
+        rep = mapper.model.estimate(g, cand)
+        if not rep.valid:
+            continue
+        key = (str(cand.shape), cand.dataflow.value)
+        if key not in best or rep.cycles < best[key]:
+            best[key] = rep.cycles
+    top = sorted(best.items(), key=lambda kv: kv[1])[:5]
+    worst = max(best.values())
+    print(f"\n=== {g.name}  (M,K,N)=({g.M},{g.K},{g.N})  "
+          f"{len(best)} configs")
+    for (shape, df), cycles in top:
+        r, c = (int(x) for x in shape.split("x"))
+        from repro.core.dataflow import LogicalShape
+        pe = pe_usage(LogicalShape(r, c), 128)
+        print(f"  {shape:>9s} {df}  {cycles:12.0f} cycles  "
+              f"({worst / cycles:5.1f}x vs worst, PE {pe:.0%})")

@@ -1,0 +1,18 @@
+"""Serve a small model with batched requests: prefill + batched greedy
+decode over the per-arch cache (full KV / ring / recurrent state).
+
+    PYTHONPATH=src python examples/serve_tiny_lm.py [--arch mixtral-8x7b]
+"""
+
+import argparse
+
+from repro.launch.serve import main as serve_main
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="qwen2-1.5b")
+args = ap.parse_args()
+
+for arch in dict.fromkeys([args.arch, "mamba2-780m", "recurrentgemma-2b"]):
+    print(f"=== {arch}")
+    serve_main(["--arch", arch, "--smoke", "--batch", "4",
+                "--prompt-len", "24", "--gen", "24"])

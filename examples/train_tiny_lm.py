@@ -1,0 +1,32 @@
+"""End-to-end driver: train a tiny qwen2-family LM for a few hundred
+steps with checkpointing, then resume.
+
+    PYTHONPATH=src python examples/train_tiny_lm.py [--steps 300]
+"""
+
+import argparse
+import tempfile
+
+from repro.launch.train import main as train_main
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--arch", default="qwen2-1.5b")
+args = ap.parse_args()
+
+ckpt = tempfile.mkdtemp(prefix="redas_tiny_lm_")
+half = args.steps // 2
+
+print(f"=== phase 1: train to step {half}, checkpointing into {ckpt}")
+train_main(["--arch", args.arch, "--smoke", "--steps", str(half),
+            "--batch", "8", "--seq", "64", "--lr", "5e-3",
+            "--microbatches", "2",
+            "--ckpt-dir", ckpt, "--ckpt-every", "50"])
+
+print("=== phase 2: resume (simulated restart after failure)")
+out = train_main(["--arch", args.arch, "--smoke", "--steps",
+                  str(args.steps), "--batch", "8", "--seq", "64",
+                  "--lr", "5e-3", "--microbatches", "2",
+                  "--ckpt-dir", ckpt, "--resume", "auto"])
+print(f"final ce {out['final_ce']:.4f} (start {out['first_ce']:.4f})")
+assert out["final_ce"] < out["first_ce"]

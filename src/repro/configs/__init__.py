@@ -1,0 +1,40 @@
+"""Architecture registry: ``--arch <id>`` resolves here.
+
+Each assigned architecture lives in its own module with the exact public
+config (CONFIG) and a reduced same-family smoke config (SMOKE).  The
+paper's own benchmark suite (ResNet-50 ... DeepSpeech2, Table 3) is the
+plane-1 GEMM-trace workload set in repro.core.workloads — it has no LM
+backbone, so it appears there rather than here.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ArchConfig
+
+_MODULES = {
+    "hubert-xlarge": "hubert_xlarge",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "qwen2-1.5b": "qwen2_1_5b",
+    "mistral-large-123b": "mistral_large_123b",
+    "gemma3-12b": "gemma3_12b",
+    "qwen3-14b": "qwen3_14b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "granite-moe-1b-a400m": "granite_moe_1b",
+    "mamba2-780m": "mamba2_780m",
+    "internvl2-1b": "internvl2_1b",
+}
+
+ARCH_NAMES = tuple(_MODULES)
+
+
+def get_config(name: str, smoke: bool = False) -> ArchConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; choose from {ARCH_NAMES}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def all_configs(smoke: bool = False) -> dict[str, ArchConfig]:
+    return {n: get_config(n, smoke) for n in ARCH_NAMES}

@@ -1,0 +1,51 @@
+"""The assigned input-shape set and (arch x shape) cell applicability.
+
+    train_4k     seq 4,096   global_batch 256   lowers train_step
+    prefill_32k  seq 32,768  global_batch 32    lowers prefill_step
+    decode_32k   seq 32,768  global_batch 128   lowers decode (serve) step
+    long_500k    seq 524,288 global_batch 1     lowers decode step
+
+Skips (documented in DESIGN.md §Arch-applicability):
+  * encoder-only archs have no decode step -> decode_32k/long_500k skipped;
+  * long_500k needs sub-quadratic attention -> skipped for pure
+    full-attention archs, run for SSM / hybrid / SWA / 5:1-local.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.models.config import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    step: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def applicable(cfg: ArchConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """(runs?, reason-if-skipped) for one (arch, shape) cell."""
+    if cfg.kind == "encoder" and shape.step == "decode":
+        return False, "encoder-only: no decode step"
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "pure full attention: long_500k needs sub-quadratic"
+    return True, ""
+
+
+def cells(configs: dict[str, ArchConfig]):
+    """Every (arch, shape) pair with its skip status — the 40-cell grid."""
+    for arch, cfg in configs.items():
+        for shape in SHAPES.values():
+            runs, why = applicable(cfg, shape)
+            yield arch, cfg, shape, runs, why

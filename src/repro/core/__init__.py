@@ -1,0 +1,16 @@
+"""Plane 1: the ReDas accelerator — dataflows/shapes (Eq. 1), the
+Eq. 3-5 analytical model, the interval-sampling mapper (§4), the
+cycle-level functional simulator, the Table-3 workload traces, the
+energy/EDP/ADP model, and the plane-2 TPU v5e cost model."""
+
+from .accelerators import REDAS, SPECS, TPU, AcceleratorSpec, make_specs
+from .analytical_model import GEMM, AnalyticalModel, MappingConfig
+from .dataflow import Dataflow, LogicalShape, enumerate_logical_shapes
+from .mapper import ReDasMapper
+
+__all__ = [
+    "REDAS", "SPECS", "TPU", "AcceleratorSpec", "make_specs",
+    "GEMM", "AnalyticalModel", "MappingConfig",
+    "Dataflow", "LogicalShape", "enumerate_logical_shapes",
+    "ReDasMapper",
+]

@@ -1,0 +1,386 @@
+"""ReDas analytical performance model (paper Sec. 4.2, Eq. 3-5).
+
+Estimates cycles / DRAM traffic / SRAM traffic / PE utilization for one
+GEMM workload under a concrete (hardware config x GEMM mapping) candidate.
+
+    T_total = T_start + NUM_t * max(T_exe, T_rd&wt) + T_end          (Eq. 3)
+
+with the double-buffered (ping-pong) overlap of compute and DRAM.  Our
+implementation evaluates the per-operand DRAM traffic with a closed-form
+loop-nest reuse model (equivalent to the paper's "reuse-sensitive tile
+access sequence" for uniform traffic) and uses
+
+    T_mid = max(NUM_t * T_exe, total_dram_cycles)
+
+which equals Eq. 3's sum-of-maxes when traffic is uniform across
+iterations and is a tight lower bound otherwise; the difference is
+second-order and documented in DESIGN.md.
+
+T_exe (Eq. 4) is dataflow-specific.  The paper prints the WS version; OS
+replaces the preload term with an output-drain term and streams K_t, IS
+streams N_t:
+
+    WS: min(R,C) + (R + C + M_t - 1) + bypass
+    OS:            (R + C + K_t - 1) + min(R,C) + bypass
+    IS: min(R,C) + (R + C + N_t - 1) + bypass
+
+where bypass = 4*min(R,C) when the logical shape differs from the
+physical square (roundabout corner turns), else 0 (Sec. 4.2).
+
+The DRAM access-time functions T_r / T_w (Eq. 5) use the paper's
+linear-interpolation-over-prerecorded-latency approach: effective
+bandwidth ramps with DMA transaction size.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import lru_cache
+
+from .dataflow import Dataflow, LogicalShape, bypass_cycles
+
+# ---------------------------------------------------------------------------
+# Workload and mapping-candidate descriptions
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GEMM:
+    """One GEMM workload: (M x K) @ (K x N), `count` back-to-back instances.
+
+    `name` is a human label ("resnet50/conv2_1/im2col"), `count` collapses
+    repeated identical GEMMs (e.g. the 8 gate matmuls of an LSTM step x
+    timesteps) so model evaluation stays O(#distinct shapes).
+    """
+
+    M: int
+    K: int
+    N: int
+    count: int = 1
+    name: str = ""
+
+    @property
+    def macs(self) -> int:
+        return self.M * self.K * self.N * self.count
+
+    @property
+    def flops(self) -> int:
+        return 2 * self.macs
+
+    def __post_init__(self):
+        if min(self.M, self.K, self.N, self.count) < 1:
+            raise ValueError(f"degenerate GEMM {self}")
+
+
+@dataclasses.dataclass(frozen=True)
+class MappingConfig:
+    """One point of the ReDas search space (Fig. 10).
+
+    Hardware configuration: dataflow + logical shape + buffer allocation.
+    GEMM mapping: tile size + loop order (outermost->innermost over 'mkn').
+    `alloc` = SRAM capacity fractions for (input A, weight B, output O)
+    buffers; sum <= 1 (Eq. 2 generalized to the whole multi-mode SRAM).
+    """
+
+    dataflow: Dataflow
+    shape: LogicalShape
+    tile_m: int
+    tile_k: int
+    tile_n: int
+    loop_order: str = "mnk"
+    alloc: tuple[float, float, float] = (0.3, 0.3, 0.4)
+
+    def __post_init__(self):
+        if sorted(self.loop_order) != ["k", "m", "n"]:
+            raise ValueError(f"loop_order must be a permutation of 'mkn': {self.loop_order}")
+        if min(self.tile_m, self.tile_k, self.tile_n) < 1:
+            raise ValueError("tile dims must be >= 1")
+        if sum(self.alloc) > 1.0 + 1e-9:
+            raise ValueError(f"buffer over-allocated: {self.alloc}")
+
+
+@dataclasses.dataclass(frozen=True)
+class CostReport:
+    """Everything the mapper / energy model / benchmarks need."""
+
+    cycles: float
+    compute_cycles: float
+    dram_cycles: float
+    start_cycles: float
+    end_cycles: float
+    config_cycles: float
+    bypass_cycles_total: float
+    num_tiles: int
+    macs: int
+    dram_read_bytes: float
+    dram_write_bytes: float
+    sram_bytes: float
+    pe_utilization: float  # MACs / (cycles * physical PEs)
+    valid: bool = True
+    reason: str = ""
+
+    @property
+    def dram_bytes(self) -> float:
+        return self.dram_read_bytes + self.dram_write_bytes
+
+
+INVALID = lambda reason: CostReport(  # noqa: E731 - compact sentinel factory
+    cycles=math.inf, compute_cycles=math.inf, dram_cycles=math.inf,
+    start_cycles=0, end_cycles=0, config_cycles=0, bypass_cycles_total=0,
+    num_tiles=0, macs=0, dram_read_bytes=0, dram_write_bytes=0, sram_bytes=0,
+    pe_utilization=0.0, valid=False, reason=reason)
+
+
+# ---------------------------------------------------------------------------
+# DRAM model: T_r(s) / T_w(s) by linear interpolation over a prerecorded
+# efficiency table (Sec. 4.2 "approximation method").
+# ---------------------------------------------------------------------------
+
+# (transaction bytes, fraction of peak bandwidth actually achieved).
+# Shape of the curve follows DRAMsim3-style measurements: small DMA
+# transactions are dominated by row activation / command overhead.
+_DRAM_EFFICIENCY_TABLE: tuple[tuple[float, float], ...] = (
+    (64.0, 0.05),
+    (256.0, 0.15),
+    (1024.0, 0.31),
+    (4096.0, 0.55),
+    (16384.0, 0.76),
+    (65536.0, 0.89),
+    (262144.0, 0.95),
+    (1048576.0, 0.97),
+    (4194304.0, 0.985),
+)
+_DRAM_FIXED_LATENCY_CYCLES = 64.0  # CAS + controller queue at 700 MHz
+
+
+def dram_efficiency(nbytes: float) -> float:
+    """Piecewise-linear interpolation of effective-bandwidth fraction."""
+    table = _DRAM_EFFICIENCY_TABLE
+    if nbytes <= table[0][0]:
+        return table[0][1]
+    if nbytes >= table[-1][0]:
+        return table[-1][1]
+    for (x0, y0), (x1, y1) in zip(table, table[1:]):
+        if x0 <= nbytes <= x1:
+            t = (nbytes - x0) / (x1 - x0)
+            return y0 + t * (y1 - y0)
+    raise AssertionError("unreachable")
+
+
+def dram_access_cycles(nbytes: float, peak_bytes_per_cycle: float) -> float:
+    """T_r(s) == T_w(s): fixed latency + size / effective bandwidth."""
+    if nbytes <= 0:
+        return 0.0
+    return _DRAM_FIXED_LATENCY_CYCLES + nbytes / (peak_bytes_per_cycle * dram_efficiency(nbytes))
+
+
+# ---------------------------------------------------------------------------
+# Closed-form loop-nest reuse model
+# ---------------------------------------------------------------------------
+
+
+def _operand_fetch_count(
+    loop_order: str,
+    trips: dict[str, int],
+    index_dims: frozenset[str],
+    capacity_tiles: int,
+) -> int:
+    """How many tile-granularity DRAM fetches operand X needs.
+
+    Walking the 3-deep loop nest from innermost outward: a loop over a dim
+    d NOT indexing X reuses the buffered working set iff every distinct X
+    tile touched by the loops inner to d fits in X's buffer allocation;
+    otherwise each trip of d re-fetches them.  Dims in `index_dims` always
+    multiply (they address distinct tiles).  Matches an exhaustive LRU walk
+    for all 6 orders (tested in tests/test_analytical_model.py).
+    """
+    if capacity_tiles < 1:
+        return -1  # cannot even hold one tile -> invalid mapping
+    fetches = 1
+    working_set = 1  # distinct X tiles touched by loops inner to current
+    for dim in reversed(loop_order):  # innermost -> outermost
+        n = trips[dim]
+        if dim in index_dims:
+            fetches *= n
+            working_set *= n
+        else:
+            if working_set > capacity_tiles:
+                fetches *= n  # no reuse across this loop: refetch per trip
+            # else: full reuse across this loop; counts unchanged
+    return fetches
+
+
+def _output_k_reuse(loop_order: str, trips: dict[str, int], capacity_tiles: int) -> bool:
+    """True if each output tile's K-reduction completes without HBM spills.
+
+    The output tile (m, n) is revisited across the k loop; partials stay
+    on chip iff all distinct output tiles touched by loops inner to k fit
+    in the output buffer (OS keeps them in the PE array itself: the
+    capacity check still gates the *buffer-side* accumulators for tails).
+    """
+    if capacity_tiles < 1:
+        return False
+    working_set = 1
+    for dim in reversed(loop_order):
+        if dim == "k":
+            return working_set <= capacity_tiles
+        working_set *= trips[dim]
+    raise AssertionError("k not in loop order")
+
+
+# ---------------------------------------------------------------------------
+# Per-dataflow T_exe (Eq. 4 family)
+# ---------------------------------------------------------------------------
+
+
+def tile_exe_cycles(cfg: MappingConfig, eff_m: int, eff_k: int, eff_n: int) -> float:
+    """Cycles for the array to process one tile (Eq. 4, per dataflow).
+
+    eff_* are the tile dims actually used (tail tiles are smaller, but the
+    array still sweeps its pipeline; we charge the configured logical
+    dims for ramp terms and the streaming dim's effective length).
+    """
+    r, c = cfg.shape.rows, cfg.shape.cols
+    byp = bypass_cycles(cfg.shape)
+    ramp = r + c - 1
+    if cfg.dataflow == Dataflow.WS:
+        return min(r, c) + (ramp + eff_m) + byp
+    if cfg.dataflow == Dataflow.OS:
+        return (ramp + eff_k) + min(r, c) + byp
+    return min(r, c) + (ramp + eff_n) + byp  # IS
+
+
+# ---------------------------------------------------------------------------
+# The model
+# ---------------------------------------------------------------------------
+
+
+@lru_cache(maxsize=200_000)
+def _estimate_cached(gemm: GEMM, cfg: MappingConfig, hw_key: tuple) -> CostReport:
+    (r_p, sram_bytes, word_bytes, peak_bpc, config_cycles, bypass_enabled,
+     setup_floor) = hw_key
+
+    # --- tile legality -----------------------------------------------------
+    m_t = min(cfg.tile_m, gemm.M)
+    k_t = min(cfg.tile_k, gemm.K)
+    n_t = min(cfg.tile_n, gemm.N)
+
+    s_i = m_t * k_t * word_bytes  # input tile bytes
+    s_w = k_t * n_t * word_bytes  # weight tile bytes
+    s_o = m_t * n_t * word_bytes  # output tile bytes
+
+    # Ping-pong double buffering halves usable capacity per operand (Eq. 2).
+    cap_a = int(cfg.alloc[0] * sram_bytes / 2)
+    cap_b = int(cfg.alloc[1] * sram_bytes / 2)
+    cap_o = int(cfg.alloc[2] * sram_bytes / 2)
+    if s_i > cap_a or s_w > cap_b or s_o > cap_o:
+        return INVALID(
+            f"tile does not fit buffers: S_i={s_i}/{cap_a} S_w={s_w}/{cap_b} S_o={s_o}/{cap_o}")
+
+    trips = {
+        "m": math.ceil(gemm.M / m_t),
+        "k": math.ceil(gemm.K / k_t),
+        "n": math.ceil(gemm.N / n_t),
+    }
+    num_t = trips["m"] * trips["k"] * trips["n"]
+
+    # --- DRAM traffic via loop-nest reuse (per single GEMM instance) -------
+    fetches_a = _operand_fetch_count(cfg.loop_order, trips, frozenset("mk"), cap_a // max(s_i, 1))
+    fetches_b = _operand_fetch_count(cfg.loop_order, trips, frozenset("kn"), cap_b // max(s_w, 1))
+    if fetches_a < 0 or fetches_b < 0:
+        return INVALID("operand buffer cannot hold one tile")
+    out_tiles = trips["m"] * trips["n"]
+    k_on_chip = _output_k_reuse(cfg.loop_order, trips, cap_o // max(s_o, 1))
+    if k_on_chip:
+        writes_o, reads_o = out_tiles, 0
+    else:
+        # partial sums round-trip through DRAM once per k sweep
+        writes_o = out_tiles * trips["k"]
+        reads_o = out_tiles * (trips["k"] - 1)
+
+    t_r_i = dram_access_cycles(s_i, peak_bpc)
+    t_r_w = dram_access_cycles(s_w, peak_bpc)
+    t_io_o = dram_access_cycles(s_o, peak_bpc)
+    dram_cycles = (fetches_a * t_r_i + fetches_b * t_r_w + (writes_o + reads_o) * t_io_o)
+    dram_read_bytes = fetches_a * s_i + fetches_b * s_w + reads_o * s_o
+    dram_write_bytes = writes_o * s_o
+
+    # --- compute time ------------------------------------------------------
+    t_exe = tile_exe_cycles(cfg, m_t, k_t, n_t)
+    if not bypass_enabled and not cfg.shape.is_square:
+        # accelerators without roundabout paths pay no bypass (they cannot
+        # reshape at all -- their shape space already excludes this).
+        t_exe -= bypass_cycles(cfg.shape)
+    compute_cycles = num_t * t_exe
+
+    # --- Eq. 3 assembly (per instance) --------------------------------------
+    t_start = max(t_r_i + t_r_w, float(max(config_cycles, setup_floor)))
+    t_end = t_io_o
+    t_mid = max(compute_cycles, dram_cycles)
+    cycles_one = t_start + t_mid + t_end
+    cycles = cycles_one * gemm.count
+
+    # SRAM traffic: every tile execution streams its operands through the
+    # multi-mode buffers; DRAM-side fills/spills add their own port traffic.
+    sram_stream = num_t * (s_i + s_w) + (writes_o + reads_o) * s_o
+    sram_bytes_total = (sram_stream + dram_read_bytes + dram_write_bytes) * gemm.count
+
+    macs = gemm.macs
+    util = macs / (cycles * r_p * r_p) if cycles > 0 else 0.0
+    byp_total = (bypass_cycles(cfg.shape) if bypass_enabled else 0) * num_t * gemm.count
+
+    return CostReport(
+        cycles=cycles,
+        compute_cycles=compute_cycles * gemm.count,
+        dram_cycles=dram_cycles * gemm.count,
+        start_cycles=t_start * gemm.count,
+        end_cycles=t_end * gemm.count,
+        config_cycles=float(config_cycles * gemm.count),
+        bypass_cycles_total=float(byp_total),
+        num_tiles=num_t * gemm.count,
+        macs=macs,
+        dram_read_bytes=dram_read_bytes * gemm.count,
+        dram_write_bytes=dram_write_bytes * gemm.count,
+        sram_bytes=sram_bytes_total,
+        pe_utilization=util,
+    )
+
+
+class AnalyticalModel:
+    """Eq. 3-5 evaluator bound to one accelerator's hardware constants."""
+
+    def __init__(
+        self,
+        *,
+        array_size: int = 128,
+        sram_bytes: int = 4 * 2**20,
+        word_bytes: int = 1,  # int8 (Table 4)
+        freq_hz: float = 700e6,
+        dram_bw_bytes_per_s: float = 256e9,
+        config_cycles: int = 128,
+        bypass_enabled: bool = True,
+        setup_floor: int = 0,
+    ):
+        self.array_size = array_size
+        self.sram_bytes = sram_bytes
+        self.word_bytes = word_bytes
+        self.freq_hz = freq_hz
+        self.peak_bytes_per_cycle = dram_bw_bytes_per_s / freq_hz
+        self.config_cycles = config_cycles
+        self.bypass_enabled = bypass_enabled
+        self.setup_floor = setup_floor
+
+    def _hw_key(self) -> tuple:
+        return (
+            self.array_size, self.sram_bytes, self.word_bytes,
+            self.peak_bytes_per_cycle, self.config_cycles,
+            self.bypass_enabled, self.setup_floor,
+        )
+
+    def estimate(self, gemm: GEMM, cfg: MappingConfig) -> CostReport:
+        """Full Eq. 3 cost of `gemm` under mapping `cfg`."""
+        return _estimate_cached(gemm, cfg, self._hw_key())
+
+    def seconds(self, report: CostReport) -> float:
+        return report.cycles / self.freq_hz

@@ -1,0 +1,270 @@
+"""Functional cycle-level systolic-array simulator + roundabout geometry.
+
+Two purposes (DESIGN.md Sec. 2):
+
+1.  `simulate_gemm(a, b, dataflow, shape)` executes a logical R x C array
+    cycle by cycle (`jax.lax.scan` over cycles, explicit per-PE register
+    grids) for all three dataflows and returns (output, cycles).  The
+    output must equal a @ b exactly and the cycle count must match the
+    streaming term of Eq. 4 — this is the correctness oracle for the
+    paper's claim that reshaped/multi-dataflow execution is functionally
+    a GEMM.
+
+2.  `pinwheel_decomposition(r_l, r_p)` produces the physical placement of
+    a reshaped logical array: the four chained sub-arrays of Sec. 3.2
+    occupy a pinwheel around the physical square (top / right / bottom /
+    left strips), so every inter-PE hop on the roundabout path is between
+    *adjacent* PEs (the paper's "internal connection manner", Fig. 7b),
+    with only the center (R_p - 2*R_l)^2 PEs idle.  `roundabout_path`
+    emits the per-hop physical route and the validator checks all hops
+    are Manhattan-distance-1 — the lightweight-wiring claim.
+
+Cycle-count conventions: the simulator counts cycles in which at least
+one PE consumes streaming data; Eq. 4's streaming term (R + C + S - 1)
+additionally counts the final writeback cycle, so
+`cycles_sim == eq4_stream_term(dataflow, shape, tile) - 1`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .dataflow import Dataflow, LogicalShape
+
+
+# ---------------------------------------------------------------------------
+# Cycle-level dataflow simulation
+# ---------------------------------------------------------------------------
+
+
+def eq4_stream_term(dataflow: Dataflow, shape: LogicalShape, m: int, k: int, n: int) -> int:
+    """The (R + C + streaming_dim - 1) pipeline term of Eq. 4."""
+    r, c = shape.rows, shape.cols
+    stream = {Dataflow.WS: m, Dataflow.OS: k, Dataflow.IS: n}[dataflow]
+    return r + c + stream - 1
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3, 4))
+def _simulate_os(a: jax.Array, b: jax.Array, r: int, c: int, k: int):
+    """Output-stationary: C[i,j] accumulates in PE(i,j); A streams east
+    from the west edge (row-skewed), B streams south from the north edge
+    (column-skewed)."""
+    n_cycles = r + c + k - 2
+    row_idx = jnp.arange(r)
+    col_idx = jnp.arange(c)
+
+    def step(carry, t):
+        a_reg, b_reg, acc = carry
+        # west edge input: A[i, t - i], zero outside [0, K)
+        ka = t - row_idx
+        a_in = jnp.where((ka >= 0) & (ka < k), a[row_idx, jnp.clip(ka, 0, k - 1)], 0.0)
+        # north edge input: B[t - j, j]
+        kb = t - col_idx
+        b_in = jnp.where((kb >= 0) & (kb < k), b[jnp.clip(kb, 0, k - 1), col_idx], 0.0)
+        a_reg = jnp.concatenate([a_in[:, None], a_reg[:, :-1]], axis=1)
+        b_reg = jnp.concatenate([b_in[None, :], b_reg[:-1, :]], axis=0)
+        acc = acc + a_reg * b_reg
+        return (a_reg, b_reg, acc), None
+
+    init = (jnp.zeros((r, c)), jnp.zeros((r, c)), jnp.zeros((r, c)))
+    (a_reg, b_reg, acc), _ = jax.lax.scan(step, init, jnp.arange(n_cycles))
+    return acc, n_cycles
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3, 4))
+def _simulate_ws(a: jax.Array, b: jax.Array, m: int, k: int, n: int):
+    """Weight-stationary: B[k,n] preloaded at PE(k,n) (array is K x N);
+    A streams east (element A[t - kk, kk] enters row kk), partial sums
+    flow south and exit the bottom edge skewed by column."""
+    n_cycles = m + k + n - 2
+    row_idx = jnp.arange(k)
+    col_idx = jnp.arange(n)
+
+    def step(carry, t):
+        a_reg, psum, out = carry
+        ma = t - row_idx
+        a_in = jnp.where((ma >= 0) & (ma < m), a[jnp.clip(ma, 0, m - 1), row_idx], 0.0)
+        a_reg = jnp.concatenate([a_in[:, None], a_reg[:, :-1]], axis=1)
+        psum = jnp.concatenate([jnp.zeros((1, n)), psum[:-1, :]], axis=0) + a_reg * b
+        # bottom edge: psum[k-1, j] is output row (t - (k-1) - j), column j
+        mo = t - (k - 1) - col_idx
+        out = out.at[jnp.clip(mo, 0, m - 1), col_idx].add(
+            jnp.where((mo >= 0) & (mo < m), psum[k - 1, :], 0.0))
+        return (a_reg, psum, out), None
+
+    init = (jnp.zeros((k, n)), jnp.zeros((k, n)), jnp.zeros((m, n)))
+    (a_reg, psum, out), _ = jax.lax.scan(step, init, jnp.arange(n_cycles))
+    return out, n_cycles
+
+
+def simulate_gemm(a, b, dataflow: Dataflow, shape: LogicalShape | None = None):
+    """Run one (M x K) @ (K x N) tile through the logical array.
+
+    `shape` defaults to the exact array the tile needs (the caller tiles
+    larger GEMMs; this simulates a single array pass, the unit of Eq. 4).
+    Returns (output [M, N], cycles). Raises if the tile exceeds the array.
+    """
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"GEMM dim mismatch: {a.shape} @ {b.shape}")
+
+    if dataflow == Dataflow.OS:
+        shape = shape or LogicalShape(m, n)
+        if m > shape.rows or n > shape.cols:
+            raise ValueError(f"OS tile {m}x{n} exceeds array {shape}")
+        a_p = jnp.zeros((shape.rows, k)).at[:m, :].set(a)
+        b_p = jnp.zeros((k, shape.cols)).at[:, :n].set(b)
+        out, cycles = _simulate_os(a_p, b_p, shape.rows, shape.cols, k)
+        return out[:m, :n], cycles
+    if dataflow == Dataflow.WS:
+        shape = shape or LogicalShape(k, n)
+        if k > shape.rows or n > shape.cols:
+            raise ValueError(f"WS tile K x N = {k}x{n} exceeds array {shape}")
+        a_p = jnp.zeros((m, shape.rows)).at[:, :k].set(a)
+        b_p = jnp.zeros((shape.rows, shape.cols)).at[:k, :n].set(b)
+        out, cycles = _simulate_ws(a_p, b_p, m, shape.rows, shape.cols)
+        return out[:, :n], cycles
+    if dataflow == Dataflow.IS:
+        # IS is WS on the transposed problem: O^T = B^T @ A^T with the
+        # input matrix stationary (array holds A^T: K x M -> rows=M? no:
+        # logical shape rows=M, cols=K holds A; streaming dim is N).
+        shape = shape or LogicalShape(m, k)
+        if m > shape.rows or k > shape.cols:
+            raise ValueError(f"IS tile M x K = {m}x{k} exceeds array {shape}")
+        out_t, cycles = simulate_gemm(
+            b.T, a.T, Dataflow.WS, LogicalShape(shape.cols, shape.rows))
+        return out_t.T, cycles
+    raise ValueError(dataflow)
+
+
+# ---------------------------------------------------------------------------
+# Roundabout geometry (pinwheel placement)
+# ---------------------------------------------------------------------------
+
+
+def pinwheel_decomposition(r_l: int, r_p: int) -> list[dict]:
+    """Physical placement of the 4 chained sub-arrays for a wide logical
+    shape R_l x 4*(R_p - R_l) on an R_p x R_p array (Sec. 3.2, Fig. 6).
+
+    Returns 4 strips in chain order; each strip dict has:
+      'coords': np.ndarray [R_l, C_s, 2] physical (row, col) per logical
+                (local_row, local_col) position,
+      'orientation': degrees the strip's streaming direction is rotated.
+    """
+    if not (0 < r_l <= r_p // 2):
+        raise ValueError(f"need 0 < R_l <= R_p/2, got R_l={r_l}, R_p={r_p}")
+    c_s = r_p - r_l
+    rows, cols = np.meshgrid(np.arange(r_l), np.arange(c_s), indexing="ij")
+
+    def strip(pr, pc, orientation):
+        return {"coords": np.stack([pr, pc], axis=-1), "orientation": orientation}
+
+    # chain order A (top, ->E), B (right, ->S), C (bottom, ->W), D (left, ->N)
+    return [
+        strip(rows, cols, 0),                                  # top strip
+        strip(cols, r_p - 1 - rows, 90),                       # right strip
+        strip(r_p - 1 - rows, r_p - 1 - cols, 180),            # bottom strip
+        strip(r_p - 1 - cols, rows, 270),                      # left strip
+    ]
+
+
+def logical_to_physical(r_l: int, r_p: int) -> np.ndarray:
+    """Map logical (row, col) of the R_l x 4*C_s shape -> physical (row, col).
+
+    Logical columns [s*C_s, (s+1)*C_s) live on strip s; the chain runs
+    A->B->C->D so data leaving strip s's last column enters strip s+1's
+    first column after a 90-degree corner turn.
+    """
+    strips = pinwheel_decomposition(r_l, r_p)
+    c_s = r_p - r_l
+    out = np.zeros((r_l, 4 * c_s, 2), dtype=np.int64)
+    for s, st in enumerate(strips):
+        out[:, s * c_s:(s + 1) * c_s, :] = st["coords"]
+    return out
+
+
+def _l_route(start: tuple[int, int], end: tuple[int, int], primary: str) -> list[tuple[int, int]]:
+    """L-shaped walk from `start` to `end` (exclusive of start, inclusive of
+    end) moving first along `primary` ('row' or 'col'), then the other."""
+    path = []
+    r, c = start
+    er, ec = end
+    order = ("col", "row") if primary == "col" else ("row", "col")
+    for axis in order:
+        while (c != ec if axis == "col" else r != er):
+            if axis == "col":
+                c += 1 if ec > c else -1
+            else:
+                r += 1 if er > r else -1
+            path.append((r, c))
+    return path
+
+
+def roundabout_ring(r_l: int, r_p: int, lane: int) -> tuple[np.ndarray, list[int]]:
+    """The closed physical route streaming data of logical row `lane` takes:
+    4 strips + 4 corner transits.  Returns (path [steps, 2], corner_hops).
+
+    Corner transits pass through PEs belonging to other lanes' logical
+    positions in pass-through mode (Sec. 3.4: a PE can simultaneously MAC
+    and forward roundabout traffic).  Each corner costs exactly R_l hops —
+    the 4 * R_l bypass term of Eq. 4.
+    """
+    mapping = logical_to_physical(r_l, r_p)
+    c_s = r_p - r_l
+    # strip flow axes: top: east (col), right: south (row),
+    # bottom: west (col), left: north (row)
+    primary = ("col", "row", "col", "row")
+    path: list[tuple[int, int]] = []
+    corner_hops: list[int] = []
+    for s in range(4):
+        seg = mapping[lane, s * c_s:(s + 1) * c_s]
+        path.extend(map(tuple, seg.tolist()))
+        nxt = tuple(mapping[lane, ((s + 1) * c_s) % (4 * c_s)].tolist())
+        corner = _l_route(tuple(seg[-1].tolist()), nxt, primary[s])
+        corner_hops.append(len(corner))
+        path.extend(corner[:-1])  # next strip's first cell re-added next loop
+    return np.asarray(path, dtype=np.int64), corner_hops
+
+
+def validate_roundabout(r_l: int, r_p: int) -> dict:
+    """Check the lightweight-wiring claims; returns stats, raises on violation.
+
+    * placement is injective (no PE used twice) and covers exactly
+      R_l * C_l == R_p^2 - (R_p - 2*R_l)^2 PEs (center square idles);
+    * every hop of every lane's full ring (strips + corner transits) is
+      between Manhattan-adjacent PEs — the "internal connection manner"
+      uses neighbor links only (Fig. 7b);
+    * each of the 4 corner transits costs exactly R_l hops, and the ring
+      closes — Eq. 4's 4*R_l bypass term.
+    """
+    mapping = logical_to_physical(r_l, r_p)
+    flat = mapping.reshape(-1, 2)
+    seen = {tuple(p) for p in flat.tolist()}
+    if len(seen) != flat.shape[0]:
+        raise AssertionError(f"pinwheel placement not injective for R_l={r_l}, R_p={r_p}")
+    expected = r_p * r_p - (r_p - 2 * r_l) ** 2
+    if flat.shape[0] != expected:
+        raise AssertionError(f"used {flat.shape[0]} PEs, expected {expected}")
+    for lane in range(r_l):
+        ring, corner_hops = roundabout_ring(r_l, r_p, lane)
+        closed = np.vstack([ring, ring[:1]])
+        dist = np.abs(np.diff(closed, axis=0)).sum(axis=1)
+        if not np.all(dist == 1):
+            bad = int(np.argmax(dist != 1))
+            raise AssertionError(
+                f"non-adjacent hop lane={lane} step {bad}: {closed[bad]} -> {closed[bad + 1]}")
+        if any(h != r_l for h in corner_hops):
+            raise AssertionError(
+                f"lane {lane}: corner hops {corner_hops}, expected 4 x {r_l}")
+    return {
+        "used_pes": flat.shape[0],
+        "idle_pes": (r_p - 2 * r_l) ** 2,
+        "bypass_hops_per_lane": 4 * r_l,
+    }

@@ -1,0 +1,154 @@
+"""Plane-2 cost model: the ReDas mapper decision surface on TPU v5e.
+
+The paper's mapper picks (logical shape, dataflow, buffer split, tile
+size, loop order) per GEMM from an analytical cycle model.  On TPU the
+same decision surface is (block tile bm x bk x bn, dataflow = residency
+schedule) per GEMM, and the analytical model is the v5e roofline:
+
+    t_compute = padded_flops / MXU_peak         (padding waste explicit!)
+    t_memory  = hbm_bytes(dataflow, blocks) / HBM_bw
+    t_kernel  = max(t_compute, t_memory)        (double-buffered pipeline)
+
+`hbm_bytes` encodes exactly the dataflow trade-off the ReDas multi-mode
+buffer manages: OS refetches the streaming operands but writes each
+output once; WS keeps the weight resident per K-chunk but streams f32
+partial sums through HBM; IS is the transpose.  The search (geometric
+tile ladders, per-shape decision cache) is the interval-sampling engine
+of Sec. 4.3 re-instantiated against TPU constants.
+
+Used by kernels/ops.auto_matmul (per-shape dispatch) and by the roofline
+benchmarks to napkin-math candidate changes before implementing them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+# --- TPU v5e hardware constants (per chip) ---------------------------------
+PEAK_FLOPS = 197e12          # bf16 MXU
+HBM_BW = 819e9               # bytes / s
+ICI_BW = 50e9                # bytes / s / link (rooflines elsewhere)
+VMEM = 16 * 2**20            # bytes / core
+SUBLANE, LANE = 8, 128       # f32/bf16 VREG tiling floor
+MXU = 128                    # systolic side
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class TPUKernelConfig:
+    dataflow: str  # "os" | "ws" | "is"
+    bm: int
+    bk: int
+    bn: int
+
+    def vmem_bytes(self, in_bytes: int = 2) -> int:
+        return 2 * (self.bm * self.bk + self.bk * self.bn) * in_bytes + self.bm * self.bn * 4
+
+
+@dataclasses.dataclass(frozen=True)
+class TPUKernelCost:
+    seconds: float
+    compute_s: float
+    memory_s: float
+    hbm_bytes: float
+    padded_flops: float
+    useful_flops: float
+
+    @property
+    def mxu_utilization(self) -> float:
+        """Useful FLOPs / (time x peak): the plane-2 PE-utilization metric."""
+        return self.useful_flops / (self.seconds * PEAK_FLOPS) if self.seconds else 0.0
+
+    @property
+    def padding_efficiency(self) -> float:
+        return self.useful_flops / self.padded_flops if self.padded_flops else 0.0
+
+
+def hbm_traffic(m: int, k: int, n: int, cfg: TPUKernelConfig,
+                in_bytes: int = 2, out_bytes: int = 2) -> float:
+    """HBM bytes moved by kernels/redas_gemm.gemm on padded dims."""
+    mp, kp, np_ = _round_up(m, cfg.bm), _round_up(k, cfg.bk), _round_up(n, cfg.bn)
+    gm, gk, gn = mp // cfg.bm, kp // cfg.bk, np_ // cfg.bn
+    a, b, o = mp * kp * in_bytes, kp * np_ * in_bytes, mp * np_ * out_bytes
+    if cfg.dataflow == "os":
+        # grid (m, n, k): A refetched per n-trip, B per m-trip, O written once.
+        return a * gn + b * gm + o
+    acc = mp * np_ * 4  # f32 partial-sum stream
+    if cfg.dataflow == "ws":
+        # per K-chunk call: B once (resident across m sweep), A per n-trip,
+        # accumulator read+written per call.
+        return a * gn + b + acc * (2 * gk - 1) + o
+    if cfg.dataflow == "is":
+        return a + b * gm + acc * (2 * gk - 1) + o
+    raise ValueError(cfg.dataflow)
+
+
+def _ramp_factor(m: int, n: int, cfg: TPUKernelConfig) -> float:
+    """MXU pipeline fill/drain — Eq. 4's (R + C + S - 1)/S in TPU form.
+
+    The ramp re-occurs whenever the MXU's resident operand swaps and
+    amortizes over the streaming length until the next swap:
+      OS: the streaming run is one block's bm rows (B block swaps per grid
+          step), so overhead ~ MXU/bm — tiny output tiles pay Eq. 4's
+          fill/drain just like a tiny logical array does;
+      WS: weights stay resident across the whole padded M sweep -> MXU/Mp;
+      IS: the transpose -> MXU/Np.
+    """
+    mp, np_ = _round_up(m, cfg.bm), _round_up(n, cfg.bn)
+    stream = {"os": cfg.bm, "ws": mp, "is": np_}[cfg.dataflow]
+    return 1.0 + MXU / stream
+
+
+def estimate(m: int, k: int, n: int, cfg: TPUKernelConfig,
+             in_bytes: int = 2, out_bytes: int = 2) -> TPUKernelCost:
+    mp, kp, np_ = _round_up(m, cfg.bm), _round_up(k, cfg.bk), _round_up(n, cfg.bn)
+    padded = 2.0 * mp * kp * np_
+    useful = 2.0 * m * k * n
+    t_c = padded * _ramp_factor(m, n, cfg) / PEAK_FLOPS
+    bytes_ = hbm_traffic(m, k, n, cfg, in_bytes, out_bytes)
+    t_m = bytes_ / HBM_BW
+    return TPUKernelCost(
+        seconds=max(t_c, t_m), compute_s=t_c, memory_s=t_m,
+        hbm_bytes=bytes_, padded_flops=padded, useful_flops=useful)
+
+
+def _ladder(dim: int, align: int, cap: int = 1024) -> list[int]:
+    """Geometric tile ladder (interval sampling): aligned, <= padded dim."""
+    top = min(_round_up(dim, align), cap)
+    vals, v = [], align
+    while v < top:
+        vals.append(v)
+        v *= 2
+    vals.append(top)
+    return sorted(set(vals))
+
+
+@functools.lru_cache(maxsize=65536)
+def choose_kernel_config(m: int, k: int, n: int,
+                         in_bytes: int = 2) -> TPUKernelConfig:
+    """Mapper search: dataflows x geometric tile ladders, VMEM-constrained."""
+    best, best_t = None, math.inf
+    for bm in _ladder(m, SUBLANE, 512):
+        for bk in _ladder(k, LANE, 2048):
+            for bn in _ladder(n, LANE, 512):
+                for df in ("os", "ws", "is"):
+                    cfg = TPUKernelConfig(df, bm, bk, bn)
+                    if cfg.vmem_bytes(in_bytes) > VMEM:
+                        continue
+                    t = estimate(m, k, n, cfg, in_bytes).seconds
+                    if t < best_t:
+                        best, best_t = cfg, t
+    assert best is not None, (m, k, n)
+    return best
+
+
+@functools.lru_cache(maxsize=65536)
+def fixed_square_cost(m: int, k: int, n: int, in_bytes: int = 2) -> TPUKernelCost:
+    """The 'conventional' schedule: 128x128x128 OS blocks, no search —
+    plane-2's analogue of the fixed 128x128 WS baseline array."""
+    return estimate(m, k, n, TPUKernelConfig("os", MXU, MXU, MXU), in_bytes)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracles for the kernels package.
+
+Every Pallas kernel in this package is validated (tests/test_kernels.py)
+against these references across dataflows x tile shapes x dtypes x odd
+sizes, in interpret mode on CPU.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jnp.ndarray, b: jnp.ndarray, out_dtype=None) -> jnp.ndarray:
+    """(M, K) @ (K, N) with f32 accumulation — the GEMM oracle."""
+    out = jnp.dot(a, b, preferred_element_type=jnp.float32)
+    return out.astype(out_dtype or a.dtype)
+
+
+def grouped_matmul_ref(x, w, group_sizes, out_dtype=None):
+    """Oracle for the MoE grouped GEMM: rows of `x` are partitioned into
+    len(group_sizes) contiguous groups; group g is multiplied by w[g].
+
+    x: (tokens, K), w: (G, K, N), group_sizes: (G,) ints summing to tokens.
+    """
+    outs = []
+    start = 0
+    for g, size in enumerate(group_sizes):
+        outs.append(matmul_ref(x[start:start + size], w[g], out_dtype))
+        start += size
+    return jnp.concatenate(outs, axis=0)

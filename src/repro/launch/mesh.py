@@ -1,0 +1,30 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module constant: importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before first jax init).
+
+Axes:
+  data   — batch parallelism + FSDP shard axis for params/optimizer
+  model  — tensor parallelism (heads / mlp / vocab / experts)
+  pod    — the multi-pod axis; composes with data for batch parallelism,
+           giving elastic scaling across pod counts (checkpoints restore
+           onto any mesh shape, dist/checkpoint reshards).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(data: int = 1, model: int = 1):
+    """Mesh over however many devices the host actually has (tests)."""
+    n = len(jax.devices())
+    d = min(data, n)
+    m = min(model, n // d)
+    return jax.make_mesh((d, m), ("data", "model"))

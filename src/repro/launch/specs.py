@@ -1,0 +1,127 @@
+"""input_specs: ShapeDtypeStruct stand-ins + shardings for every model
+input of every (arch x shape) cell — weak-type-correct, shardable, no
+device allocation.  The dry-run lowers against these.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.shapes import ShapeSpec
+from repro.dist import sharding as shd
+from repro.models import transformer as T
+from repro.models.config import ArchConfig
+from repro.train_lib import train as train_lib
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _ns(mesh: Mesh, shape, axes) -> NamedSharding:
+    return NamedSharding(mesh, shd.spec(shape, axes, mesh))
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh):
+    """Training-batch SDS + shardings (the {tokens, labels} of the brief)."""
+    b, s = shape.global_batch, shape.seq_len
+    sds: dict[str, Any] = {}
+    if cfg.embed_inputs:
+        sds["embeds"] = SDS((b, s, cfg.d_model), jnp.float32)
+        sds["labels"] = SDS((b, s), jnp.int32)
+    else:
+        sds["tokens"] = SDS((b, s + 1), jnp.int32)
+        if cfg.prefix_tokens:
+            sds["pixel_embeds"] = SDS((b, cfg.prefix_tokens, cfg.d_model),
+                                      jnp.float32)
+    axes = {"embeds": ("batch", None, "embed"), "labels": ("batch", None),
+            "tokens": ("batch", None),
+            "pixel_embeds": ("batch", None, "embed")}
+    sh = {k: _ns(mesh, v.shape, axes[k]) for k, v in sds.items()}
+    return sds, sh
+
+
+_CACHE_AXES = {
+    "k": (None, "batch", "seq_kv", "kv_heads", None),
+    "v": (None, "batch", "seq_kv", "kv_heads", None),
+    "conv": (None, "batch", None, None),
+    "state": (None, "batch", "heads", None, None),
+    "h": (None, "batch", "mlp"),
+}
+
+
+def cache_shardings(cache_tree, mesh: Mesh):
+    """Shardings for an init_cache pytree (abstract or concrete)."""
+    def visit(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        in_tail = any(getattr(p, "key", None) == "tail" for p in path)
+        axes = _CACHE_AXES.get(name)
+        if axes is None or leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        axes = axes[1:] if in_tail else axes  # tail slots lack the stack dim
+        axes = axes[:leaf.ndim]
+        return _ns(mesh, leaf.shape, axes)
+    return jax.tree_util.tree_map_with_path(visit, cache_tree)
+
+
+def abstract_train_state(cfg: ArchConfig, tcfg: train_lib.TrainConfig):
+    return jax.eval_shape(
+        lambda: train_lib.init_state(jax.random.PRNGKey(0), cfg, tcfg))
+
+
+def abstract_params(cfg: ArchConfig, dtype=jnp.bfloat16):
+    out = jax.eval_shape(lambda: T.init_params(jax.random.PRNGKey(0), cfg))
+    return jax.tree.map(lambda x: SDS(x.shape, dtype), out)
+
+
+def abstract_cache(cfg: ArchConfig, max_seq: int, batch: int,
+                   dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        functools.partial(T.init_cache, cfg, T.CacheSpec(max_seq, batch),
+                          dtype=dtype))
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
+                tcfg: train_lib.TrainConfig | None = None):
+    """Everything the cell's step function consumes: (args_sds, args_sh).
+
+    train:   (state, batch)
+    prefill: (params, tokens[, embeds], cache)
+    decode:  (params, cache, token)
+    """
+    if shape.step == "train":
+        assert tcfg is not None
+        state = abstract_train_state(cfg, tcfg)
+        state_sh = shd.params_shardings(state, mesh)
+        batch_sds, batch_sh = batch_specs(cfg, shape, mesh)
+        return (state, batch_sds), (state_sh, batch_sh)
+
+    params = abstract_params(cfg)
+    params_sh = shd.params_shardings(params, mesh)
+    b, s = shape.global_batch, shape.seq_len
+    if shape.step == "prefill":
+        cache = abstract_cache(cfg, s, b)
+        cache_sh = cache_shardings(cache, mesh)
+        if cfg.embed_inputs:
+            tok = SDS((b, s, cfg.d_model), jnp.float32)
+            tok_sh = _ns(mesh, tok.shape, ("batch", None, "embed"))
+        else:
+            tok = SDS((b, s), jnp.int32)
+            tok_sh = _ns(mesh, tok.shape, ("batch", None))
+        args = (params, tok, cache)
+        shs = (params_sh, tok_sh, cache_sh)
+        if cfg.prefix_tokens:
+            emb = SDS((b, cfg.prefix_tokens, cfg.d_model), jnp.float32)
+            args += (emb,)
+            shs += (_ns(mesh, emb.shape, ("batch", None, "embed")),)
+        return args, shs
+
+    # decode: cache is pre-filled to seq_len, one new token comes in
+    cache = abstract_cache(cfg, s, b)
+    cache_sh = cache_shardings(cache, mesh)
+    tok = SDS((b, 1), jnp.int32)
+    tok_sh = _ns(mesh, tok.shape, ("batch", None))
+    return (params, cache, tok), (params_sh, cache_sh, tok_sh)

@@ -1,0 +1,103 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --smoke \
+        --steps 200 --batch 8 --seq 128 --ckpt-dir runs/ckpt --resume auto
+
+Production posture on real hardware: the same entry point under
+`jax.distributed.initialize()` — the mesh comes from launch.mesh, state
+sharding from dist.sharding, checkpoints reshard on restore so the run
+survives pod-count changes (elastic).  On this CPU host it trains the
+reduced configs end-to-end (examples/train_tiny_lm.py drives it).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpoint import Checkpointer
+from repro.configs import ARCH_NAMES, get_config
+from repro.data.pipeline import DataConfig, make_source
+from repro.dist import sharding as shd
+from repro.launch.mesh import make_test_mesh
+from repro.optim.adamw import AdamWConfig
+from repro.optim.schedule import linear_warmup_cosine
+from repro.train_lib import train as train_lib
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES, required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", choices=("auto", "none"), default="none")
+    ap.add_argument("--data-path", default=None,
+                    help="memmap token corpus; default synthetic")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    tcfg = train_lib.TrainConfig(
+        microbatches=args.microbatches,
+        compute_dtype=jnp.float32 if args.smoke else jnp.bfloat16,
+        optimizer=AdamWConfig(
+            lr=linear_warmup_cosine(args.lr, args.warmup, args.steps)),
+    )
+    mesh = make_test_mesh()
+    source = make_source(cfg, DataConfig(args.batch, args.seq, args.seed),
+                         args.data_path)
+
+    with mesh, shd.use_mesh(mesh):
+        state = train_lib.init_state(jax.random.PRNGKey(args.seed), cfg, tcfg)
+        state_sh = shd.params_shardings(state, mesh)
+        state = jax.tree.map(jax.device_put, state, state_sh)
+        step_fn = jax.jit(train_lib.make_train_step(cfg, tcfg),
+                          in_shardings=(state_sh, None),
+                          donate_argnums=(0,))
+
+        start = 0
+        ckpt = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
+        if ckpt and args.resume == "auto":
+            latest = ckpt.latest_step()
+            if latest is not None:
+                like = jax.eval_shape(lambda: train_lib.init_state(
+                    jax.random.PRNGKey(args.seed), cfg, tcfg))
+                state = ckpt.restore(latest, like, state_sh)
+                start = latest
+                print(f"resumed from step {latest}")
+
+        losses = []
+        t0 = time.time()
+        for step in range(start, args.steps):
+            batch = jax.tree.map(jnp.asarray, source.batch(step))
+            state, metrics = step_fn(state, batch)
+            losses.append(float(metrics["ce"]))
+            if step % args.log_every == 0 or step == args.steps - 1:
+                print(f"step {step:5d}  ce {losses[-1]:.4f}  "
+                      f"gnorm {float(metrics['grad_norm']):.3f}  "
+                      f"lr {float(metrics['lr']):.2e}  "
+                      f"{(time.time() - t0):.1f}s", flush=True)
+            if ckpt and (step + 1) % args.ckpt_every == 0:
+                ckpt.save(step + 1, state)
+        if ckpt:
+            ckpt.save(args.steps, state, blocking=True)
+        return {"final_ce": losses[-1], "first_ce": losses[0],
+                "steps": args.steps}
+
+
+if __name__ == "__main__":
+    out = main()
+    print(out)

@@ -1,0 +1,123 @@
+"""Architecture configuration schema covering all 10 assigned archs.
+
+One dataclass describes every family (dense / MoE / SSM / hybrid /
+encoder-only / VLM); per-arch modules in repro/configs instantiate it.
+`layer_pattern` is the repeating block-kind period, e.g.:
+
+    ("attn",)                      homogeneous decoder (qwen2, mistral, ...)
+    ("local",)*5 + ("attn",)      gemma3 5:1 local:global
+    ("rglru", "rglru", "local")   recurrentgemma 1:2 attn:RG-LRU
+    ("ssm",)                       mamba2
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Literal
+
+Kind = Literal["decoder", "encoder", "vlm"]
+BlockKind = Literal["attn", "local", "ssm", "rglru"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    # dispatch implementation: "einsum" (GShard one-hot dispatch — the
+    # §Roofline baseline) or "sort" (argsort + scatter/gather; removes the
+    # tokens x E x C one-hot GEMMs — §Perf iteration for the MoE cells).
+    impl: str = "einsum"
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    conv_width: int = 4
+    chunk: int = 256          # SSD chunk length
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    kind: Kind
+    n_layers: int
+    d_model: int
+    n_heads: int          # 0 for attention-free archs
+    n_kv: int
+    d_ff: int
+    vocab: int
+    layer_pattern: tuple[BlockKind, ...] = ("attn",)
+    head_dim: int = 0     # 0 -> d_model // n_heads
+    window: int = 0       # sliding-window size for "local" blocks / SWA
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    moe: MoEConfig | None = None
+    ssm: SSMConfig | None = None
+    rglru_width: int = 0  # 0 -> d_model
+    gated_mlp: bool = True        # SwiGLU; False -> GELU (encoder archs)
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    # VLM / audio stub frontends: inputs arrive as precomputed embeddings.
+    embed_inputs: bool = False    # audio: whole input is frame embeddings
+    prefix_tokens: int = 0        # vlm: image patch embeds prepended
+    # §Perf knob: cast the norm output to compute dtype before the scale
+    # multiply (wins on every attention cell; see EXPERIMENTS.md §Perf
+    # for the attention-free regression it can cause).
+    norm_cast_early: bool = True
+    sub_quadratic: bool = False   # eligible for long_500k decode
+    max_seq: int = 131072
+
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim or (self.d_model // max(self.n_heads, 1))
+
+    @property
+    def is_causal(self) -> bool:
+        return self.kind != "encoder"
+
+    def param_count(self) -> int:
+        """Exact dense-equivalent parameter count N (for 6*N*D roofline)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        hd, nh, nkv = self.head_dim_, self.n_heads, self.n_kv
+        total = v * d * (1 if self.tie_embeddings else 2)
+        per = {  # per block kind
+            "attn": d * hd * (nh + 2 * nkv) + nh * hd * d + 3 * d * f + 2 * d,
+            "local": d * hd * (nh + 2 * nkv) + nh * hd * d + 3 * d * f + 2 * d,
+        }
+        if self.ssm is not None:
+            s = self.ssm
+            d_in = s.expand * d
+            heads = d_in // s.head_dim
+            conv_ch = d_in + 2 * s.n_groups * s.d_state
+            per["ssm"] = (
+                d * (2 * d_in + 2 * s.n_groups * s.d_state + heads)  # in_proj
+                + conv_ch * s.conv_width + 2 * heads + d_in * d + d)
+        if self.rglru_width or "rglru" in self.layer_pattern:
+            w = self.rglru_width or d
+            per["rglru"] = d * w * 2 + w * d + 3 * w + w * 4 + 3 * d * f + 2 * d
+        if self.moe is not None:
+            e = self.moe.n_experts
+            per["attn"] = d * hd * (nh + 2 * nkv) + nh * hd * d + d * e + e * 3 * d * f + 2 * d
+            per["local"] = per["attn"]
+        if not self.gated_mlp:
+            for k in ("attn", "local"):
+                per[k] = d * hd * (nh + 2 * nkv) + nh * hd * d + 2 * d * f + 2 * d
+        for i in range(self.n_layers):
+            total += per[self.layer_pattern[i % len(self.layer_pattern)]]
+        return total
+
+    def active_param_count(self) -> int:
+        """MoE: experts scaled to top_k/n_experts (for 6*N_active*D)."""
+        if self.moe is None:
+            return self.param_count()
+        full = self.param_count()
+        e, k = self.moe.n_experts, self.moe.top_k
+        moe_blocks = self.n_layers  # all blocks are MoE in assigned archs
+        expert_params = moe_blocks * e * 3 * self.d_model * self.d_ff
+        return full - expert_params + math.ceil(expert_params * k / e)

@@ -1,0 +1,367 @@
+"""Core model layers, pure JAX (no flax): params are plain dict pytrees.
+
+Numerics follow the assigned-architecture families: RMSNorm, rotary
+embeddings, grouped-query attention (optional QKV bias / qk-norm /
+sliding window / bidirectional), SwiGLU or GELU MLPs.
+
+Attention is a chunked online-softmax ("flash") implementation with a
+custom VJP so the S x S logits never materialize in either pass — the
+requirement that makes prefill_32k / train_4k shapes fit HBM.  Sliding-
+window ("local") attention slices exactly the two KV chunks a query
+chunk can see, so its FLOPs are O(S * window), not O(S^2).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# --------------------------------------------------------------------------
+# Param init helpers
+# --------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, *, bias: bool = False, scale: float | None = None):
+    std = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": jax.random.normal(key, (d_in, d_out), jnp.float32) * std}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+# When True (kernels.ops.use_redas_kernels context), every dense matmul
+# routes through the mapper-dispatched Pallas GEMM — interpret mode on
+# CPU, real pallas_call on TPU.  Default False: XLA einsum (the dry-run
+# path; Pallas does not lower on the CPU host-device backend).
+USE_REDAS_KERNEL = False
+
+
+def dense(p, x: Array) -> Array:
+    w = p["w"].astype(x.dtype)
+    if USE_REDAS_KERNEL:
+        from repro.kernels.ops import auto_matmul
+        y = auto_matmul(x.reshape(-1, x.shape[-1]), w,
+                        out_dtype=x.dtype).reshape(*x.shape[:-1], w.shape[-1])
+    else:
+        y = x @ w
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def rms_norm(scale: Array, x: Array, eps: float = 1e-6,
+             cast_early: bool = True) -> Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    if cast_early:
+        # Cast back to the compute dtype BEFORE the scale multiply: the
+        # norm output feeds matmuls whose operands GSPMD may reshard —
+        # keeping the f32 intermediate out of that path halves any
+        # resharding traffic (§Perf iteration 4/H8).  On attention-free
+        # cells the partitioner instead trades collectives for local
+        # traffic; ArchConfig.norm_cast_early=False restores the f32 path
+        # per arch (EXPERIMENTS.md §Perf regressions note).
+        normed = (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+        return normed * (1.0 + scale).astype(x.dtype)
+    return ((x32 * jax.lax.rsqrt(var + eps))
+            * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings
+# --------------------------------------------------------------------------
+
+
+def rotary(x: Array, positions: Array, theta: float) -> Array:
+    """x: (B, S, H, D), positions: (B, S) -> rotated x."""
+    d = x.shape[-1]
+    freq = theta ** (-jnp.arange(0, d, 2, dtype=jnp.float32) / d)
+    angle = positions[..., None].astype(jnp.float32) * freq  # (B, S, D/2)
+    cos, sin = jnp.cos(angle)[:, :, None, :], jnp.sin(angle)[:, :, None, :]
+    x1, x2 = x[..., ::2].astype(jnp.float32), x[..., 1::2].astype(jnp.float32)
+    out = jnp.stack([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Flash attention (chunked online softmax, custom VJP)
+# --------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _chunk_mask(q_pos, k_pos, kv_len, causal: bool, window: int):
+    """(B, Sq, C) boolean mask for one KV chunk. q_pos (B,Sq), k_pos (C,)."""
+    m = k_pos[None, None, :] < kv_len[:, None, None]
+    if causal:
+        m &= k_pos[None, None, :] <= q_pos[:, :, None]
+    if window > 0:
+        m &= q_pos[:, :, None] - k_pos[None, None, :] < window
+    return m
+
+
+def _flash_scan(q, k, v, q_pos, kv_len, causal, window, chunk, also_lse):
+    """q (B,Sq,H,D); k,v (B,Sk,K,D); returns o (+ lse).  f32 internally."""
+    b, sq, h, d = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = 1.0 / math.sqrt(d)
+    nck = -(-sk // chunk)
+    pad = nck * chunk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, nck, chunk, kv, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nck, chunk, kv, d).transpose(1, 0, 2, 3, 4)
+    qg = (q.reshape(b, sq, kv, g, d) * scale).astype(jnp.float32)
+
+    def body(carry, inp):
+        acc, m_run, l_run = carry
+        ck, k_ck, v_ck = inp
+        k_pos = ck * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bqkgd,bckd->bkgqc", qg, k_ck.astype(jnp.float32))
+        mask = _chunk_mask(q_pos, k_pos, kv_len, causal, window)
+        s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
+        m_new = jnp.maximum(m_run, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_run - m_new)
+        l_run = l_run * corr + p.sum(axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgqc,bckd->bkgqd", p, v_ck.astype(jnp.float32))
+        return (acc, m_new, l_run), None
+
+    init = (
+        jnp.zeros((b, kv, g, sq, d), jnp.float32),
+        jnp.full((b, kv, g, sq), NEG_INF, jnp.float32),
+        jnp.zeros((b, kv, g, sq), jnp.float32),
+    )
+    (acc, m_run, l_run), _ = jax.lax.scan(body, init, (jnp.arange(nck), kc, vc))
+    l_safe = jnp.maximum(l_run, 1e-30)
+    o = (acc / l_safe[..., None]).transpose(0, 3, 1, 2, 4).reshape(b, sq, h, d)
+    o = o.astype(q.dtype)
+    if not also_lse:
+        return o
+    lse = m_run + jnp.log(l_safe)  # (B, KV, G, Sq)
+    return o, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+def flash_attention(q, k, v, q_pos, kv_len, causal: bool = True,
+                    window: int = 0, chunk: int = 512):
+    """Memory-efficient attention.
+
+    q: (B, Sq, H, D); k, v: (B, Sk, KV, D) with H % KV == 0 (GQA).
+    q_pos: (B, Sq) absolute query positions; kv_len: (B,) valid KV length
+    (kv slots at positions >= kv_len are masked — supports ragged decode
+    and ring-buffer caches).  causal/window are static.
+    """
+    return _flash_scan(q, k, v, q_pos, kv_len, causal, window, chunk, False)
+
+
+def _flash_fwd(q, k, v, q_pos, kv_len, causal, window, chunk):
+    o, lse = _flash_scan(q, k, v, q_pos, kv_len, causal, window, chunk, True)
+    return o, (q, k, v, q_pos, kv_len, o, lse)
+
+
+def _flash_bwd(causal, window, chunk, res, do):
+    q, k, v, q_pos, kv_len, o, lse = res
+    b, sq, h, d = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = 1.0 / math.sqrt(d)
+    nck = -(-sk // chunk)
+    pad = nck * chunk - sk
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else k
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else v
+    kc = kp.reshape(b, nck, chunk, kv, d).transpose(1, 0, 2, 3, 4)
+    vc = vp.reshape(b, nck, chunk, kv, d).transpose(1, 0, 2, 3, 4)
+    qg = (q.reshape(b, sq, kv, g, d) * scale).astype(jnp.float32)
+    do_g = do.reshape(b, sq, kv, g, d).transpose(0, 2, 3, 1, 4).astype(jnp.float32)
+    o_g = o.reshape(b, sq, kv, g, d).transpose(0, 2, 3, 1, 4).astype(jnp.float32)
+    delta = jnp.sum(do_g * o_g, axis=-1)  # (B, KV, G, Sq)
+
+    def body(dq_acc, inp):
+        ck, k_ck, v_ck = inp
+        k_pos = ck * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bqkgd,bckd->bkgqc", qg, k_ck.astype(jnp.float32))
+        mask = _chunk_mask(q_pos, k_pos, kv_len, causal, window)
+        s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
+        p = jnp.exp(s - lse[..., None])  # (B, KV, G, Sq, C)
+        dv_ck = jnp.einsum("bkgqc,bkgqd->bckd", p, do_g)
+        dp = jnp.einsum("bkgqd,bckd->bkgqc", do_g, v_ck.astype(jnp.float32))
+        ds = p * (dp - delta[..., None])
+        dq_acc = dq_acc + jnp.einsum("bkgqc,bckd->bqkgd", ds, k_ck.astype(jnp.float32))
+        dk_ck = jnp.einsum("bkgqc,bqkgd->bckd", ds, qg)
+        return dq_acc, (dk_ck, dv_ck)
+
+    dq0 = jnp.zeros((b, sq, kv, g, d), jnp.float32)
+    dq, (dk_c, dv_c) = jax.lax.scan(body, dq0, (jnp.arange(nck), kc, vc))
+    dq = (dq * scale).reshape(b, sq, h, d).astype(q.dtype)
+    dk = dk_c.transpose(1, 0, 2, 3, 4).reshape(b, nck * chunk, kv, d)[:, :sk].astype(k.dtype)
+    dv = dv_c.transpose(1, 0, 2, 3, 4).reshape(b, nck * chunk, kv, d)[:, :sk].astype(v.dtype)
+    return dq, dk, dv, None, None
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)
+
+
+# --------------------------------------------------------------------------
+# Exact sliding-window attention: O(S * window) FLOPs via 2-chunk slices
+# --------------------------------------------------------------------------
+
+
+def local_attention(q, k, v, window: int) -> Array:
+    """Causal sliding-window attention, chunk == window: each query chunk
+    attends (prev chunk, own chunk) only.  q (B,S,H,D); k,v (B,S,KV,D)."""
+    b, s, h, d = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    c = window
+    nc = -(-s // c)
+    pad = nc * c - s
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qc = q.reshape(b, nc, c, kv, g, d).astype(jnp.float32) / math.sqrt(d)
+    kc = k.reshape(b, nc, c, kv, d)
+    vc = v.reshape(b, nc, c, kv, d)
+    prev = lambda x: jnp.pad(x, ((0, 0), (1, 0)) + ((0, 0),) * (x.ndim - 2))[:, :-1]
+    k2 = jnp.concatenate([prev(kc), kc], axis=2)  # (B, nc, 2C, KV, D)
+    v2 = jnp.concatenate([prev(vc), vc], axis=2)
+    srel = jnp.einsum("bnqkgd,bnckd->bnkgqc", qc, k2.astype(jnp.float32))
+    q_idx = jnp.arange(c)[:, None] + c            # position within [prev|own]
+    k_idx = jnp.arange(2 * c)[None, :]
+    first = jnp.arange(nc) == 0                   # chunk 0 has no prev
+    mask = (k_idx <= q_idx) & (q_idx - k_idx < window)
+    mask = mask[None, :, :] & ~(first[:, None, None] & (k_idx < c))
+    srel = jnp.where(mask[None, :, None, None, :, :], srel, NEG_INF)
+    p = jax.nn.softmax(srel, axis=-1)
+    o = jnp.einsum("bnkgqc,bnckd->bnqkgd", p, v2.astype(jnp.float32))
+    return o.reshape(b, nc * c, h, d)[:, :s].astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+
+
+def mlp_init(key, d_model: int, d_ff: int, gated: bool):
+    ks = jax.random.split(key, 3)
+    if gated:
+        return {
+            "wi": dense_init(ks[0], d_model, d_ff),
+            "wg": dense_init(ks[1], d_model, d_ff),
+            "wo": dense_init(ks[2], d_ff, d_model),
+        }
+    return {
+        "wi": dense_init(ks[0], d_model, d_ff),
+        "wo": dense_init(ks[2], d_ff, d_model),
+    }
+
+
+def mlp(p, x: Array) -> Array:
+    h = dense(p["wi"], x)
+    if "wg" in p:
+        h = jax.nn.silu(dense(p["wg"], x)) * h
+    else:
+        h = jax.nn.gelu(h)
+    return dense(p["wo"], h)
+
+
+# --------------------------------------------------------------------------
+# GQA attention block (projections + rotary + flash / local / cached)
+# --------------------------------------------------------------------------
+
+
+def attn_init(key, cfg) -> dict:
+    hd, nh, nkv = cfg.head_dim_, cfg.n_heads, cfg.n_kv
+    ks = jax.random.split(key, 5)
+    p = {
+        "wq": dense_init(ks[0], cfg.d_model, nh * hd, bias=cfg.qkv_bias),
+        "wk": dense_init(ks[1], cfg.d_model, nkv * hd, bias=cfg.qkv_bias),
+        "wv": dense_init(ks[2], cfg.d_model, nkv * hd, bias=cfg.qkv_bias),
+        "wo": dense_init(ks[3], nh * hd, cfg.d_model),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), jnp.float32)
+        p["k_norm"] = jnp.zeros((hd,), jnp.float32)
+    return p
+
+
+def attn_qkv(p, cfg, x: Array, positions: Array):
+    """Project + (qk-norm) + rotary.  Returns q (B,S,H,D), k/v (B,S,KV,D)."""
+    b, s, _ = x.shape
+    hd = cfg.head_dim_
+    q = dense(p["wq"], x).reshape(b, s, cfg.n_heads, hd)
+    k = dense(p["wk"], x).reshape(b, s, cfg.n_kv, hd)
+    v = dense(p["wv"], x).reshape(b, s, cfg.n_kv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(p["q_norm"], q, cfg.norm_eps)
+        k = rms_norm(p["k_norm"], k, cfg.norm_eps)
+    q = rotary(q, positions, cfg.rope_theta)
+    k = rotary(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_block(p, cfg, x: Array, positions: Array, *, window: int = 0) -> Array:
+    """Self-attention over the full sequence (train / prefill path)."""
+    from ..dist.sharding import active_mesh, constrain
+    b, s, _ = x.shape
+    q, k, v = attn_qkv(p, cfg, x, positions)
+    # Pin the model-axis placement of the flash scan explicitly — GSPMD
+    # otherwise reshards the (B, KV, G, Sq, C) chunk tensors per step
+    # (§Perf iteration 5's 27 TB/device failure mode).  Heads shard when
+    # they divide the model axis; otherwise fall back to sharding the
+    # QUERY sequence (context parallelism) — without it, archs whose head
+    # count is model-axis-hostile (internvl2: 14 heads on model=16)
+    # replicate the whole attention 16x (§Perf iteration 9).
+    mesh = active_mesh()
+    model = dict(mesh.shape).get("model", 1) if mesh is not None else 1
+    if model > 1 and cfg.n_heads % model == 0:
+        q = constrain(q, "batch", None, "heads", None)
+        k = constrain(k, "batch", None, "kv_heads", None)
+        v = constrain(v, "batch", None, "kv_heads", None)
+    elif model > 1 and s % model == 0:
+        q = constrain(q, "batch", "residual", None, None)  # seq over model
+        k = constrain(k, "batch", None, None, None)
+        v = constrain(v, "batch", None, None, None)
+    kv_len = jnp.full((b,), s, jnp.int32)
+    if window > 0 and cfg.is_causal:
+        o = local_attention(q, k, v, window)
+    else:
+        o = flash_attention(q, k, v, positions, kv_len,
+                            cfg.is_causal, window, min(512, s))
+    return dense(p["wo"], o.reshape(b, s, cfg.n_heads * cfg.head_dim_))
+
+
+def cached_attention(p, cfg, q: Array, k_cache: Array, v_cache: Array,
+                     q_pos: Array, kv_len: Array) -> Array:
+    """Decode-path attention: q (B,1,H,D) over a cache (B,Smax,KV,D) whose
+    slots beyond kv_len are masked.  The caller inserts the new token's
+    k/v into the cache *before* calling (see serve_lib), so causality is
+    already structural; ring caches work because keys are stored rotated
+    at absolute positions and softmax is permutation-invariant over kv
+    slots.
+
+    Direct (non-chunked) masked softmax: with q_len == 1 the logits are
+    (B, H, 1, Smax) — tiny — and a plain einsum over the cache keeps the
+    SPMD story clean when the cache's sequence dim is sharded over 'data'
+    (long_500k): GSPMD turns the softmax reductions into psums instead of
+    gathering the cache."""
+    b, sq, h, d = q.shape
+    kv = k_cache.shape[2]
+    g = h // kv
+    qg = (q.reshape(b, sq, kv, g, d) / math.sqrt(d)).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k_cache.astype(jnp.float32))
+    valid = jnp.arange(k_cache.shape[1])[None, :] < kv_len[:, None]  # (B,S)
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    p_attn = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p_attn, v_cache.astype(jnp.float32))
+    o = o.reshape(b, sq, h, d).astype(q.dtype)
+    return dense(p["wo"], o.reshape(b, sq, cfg.n_heads * cfg.head_dim_))

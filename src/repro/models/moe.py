@@ -1,0 +1,169 @@
+"""Token-choice top-k Mixture-of-Experts (mixtral 8e/top2, granite 32e/top8).
+
+GShard-style capacity dispatch: every (token, choice) gets a position in
+its expert's buffer by a causal cumulative count; positions beyond the
+static capacity C = ceil(S * top_k * cf / E) are dropped (their combine
+weight is zero, the residual passes through).  Dispatch/combine are
+einsums, so the whole block is one dense program — shardable with the
+expert dim on the 'model' mesh axis (expert parallelism) and the token
+dims on ('pod','data').
+
+The expert GEMMs are exactly the small/irregular shapes ReDas targets
+(granite: d_ff=512); on TPU the mapper picks their Pallas schedule via
+kernels/ops.auto_matmul when enabled.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import constrain
+from .layers import dense_init
+
+Array = jax.Array
+
+
+def moe_init(key, cfg) -> dict:
+    m = cfg.moe
+    ks = jax.random.split(key, 4)
+    d, f, e = cfg.d_model, cfg.d_ff, m.n_experts
+    std = 1.0 / math.sqrt(d)
+    return {
+        "router": dense_init(ks[0], d, e, scale=std),
+        "experts": {
+            "wi": jax.random.normal(ks[1], (e, d, f), jnp.float32) * std,
+            "wg": jax.random.normal(ks[2], (e, d, f), jnp.float32) * std,
+            "wo": jax.random.normal(ks[3], (e, f, d), jnp.float32) / math.sqrt(f),
+        },
+    }
+
+
+def capacity(cfg, seq: int) -> int:
+    m = cfg.moe
+    c = math.ceil(seq * m.top_k * m.capacity_factor / m.n_experts)
+    return max(4 * ((c + 3) // 4), 4)  # pad to a lane-friendly multiple
+
+
+def moe_block(p, cfg, x: Array) -> tuple[Array, Array]:
+    """x: (B, S, D) -> (y, aux_loss); dispatch impl per cfg.moe.impl."""
+    if cfg.moe.impl == "sort":
+        return moe_block_sorted(p, cfg, x)
+    return moe_block_einsum(p, cfg, x)
+
+
+def _route(p, cfg, x: Array):
+    """Shared router: (gates (B,S,k), sel (B,S,k), aux scalar)."""
+    e, k = cfg.moe.n_experts, cfg.moe.top_k
+    logits = (x.astype(jnp.float32) @ p["router"]["w"]).astype(jnp.float32)
+    gates, sel = jax.lax.top_k(logits, k)
+    gates = jax.nn.softmax(gates, axis=-1)
+    probs = jax.nn.softmax(logits, axis=-1)
+    one_hot_sel = jax.nn.one_hot(sel[..., 0], e, dtype=jnp.float32)
+    aux = e * jnp.sum(jnp.mean(one_hot_sel, axis=(0, 1)) *
+                       jnp.mean(probs, axis=(0, 1)))
+    return gates, sel, aux
+
+
+def _expert_ffn(we, x_in: Array) -> Array:
+    """x_in (E, ..., D) -> (E, ..., D) through per-expert SwiGLU."""
+    h = jnp.einsum("e...d,edf->e...f", x_in, we["wi"].astype(x_in.dtype))
+    g = jnp.einsum("e...d,edf->e...f", x_in, we["wg"].astype(x_in.dtype))
+    return jnp.einsum("e...f,efd->e...d", jax.nn.silu(g) * h,
+                      we["wo"].astype(x_in.dtype))
+
+
+def moe_block_sorted(p, cfg, x: Array) -> tuple[Array, Array]:
+    """Sort-based dispatch: argsort selections by expert, scatter tokens
+    into (E, C) buffers, gather back weighted.  Same capacity/priority
+    semantics as the einsum path (stable sort keeps token-major priority)
+    but with zero dispatch FLOPs — removes the tokens x E x C one-hot
+    GEMMs that dominate the granite-moe roofline (useful-FLOPs 0.16 ->
+    see EXPERIMENTS.md §Perf)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    e, k = m.n_experts, m.top_k
+    c = capacity(cfg, s)
+    gates, sel, aux = _route(p, cfg, x)
+
+    def per_example(xb, selb, gateb):
+        sk = s * k
+        e_flat = selb.reshape(sk)                       # expert id / selection
+        order = jnp.argsort(e_flat, stable=True)        # token-major priority
+        sorted_e = e_flat[order]
+        first = jnp.searchsorted(sorted_e, sorted_e, side="left")
+        pos = jnp.arange(sk) - first                    # slot within expert
+        keep = pos < c
+        dst = jnp.where(keep, sorted_e * c + pos, e * c)  # dump slot at E*C
+        tok = order // k                                # source token index
+        buf = jnp.zeros((e * c + 1, d), x.dtype).at[dst].set(xb[tok])
+        # inverse permutation: where did selection i land?
+        slot_of_sel = jnp.zeros((sk,), jnp.int32).at[order].set(dst)
+        return buf[: e * c].reshape(e, c, d), slot_of_sel
+
+    bufs, slots = jax.vmap(per_example)(x, sel, gates)   # (B,E,C,D), (B,Sk)
+    # Constrain on BOTH sides of the transpose so the token->expert move
+    # lowers as an all-to-all over (batch x experts) instead of an
+    # all-gather of the whole buffer (§Perf iteration G3).
+    bufs = constrain(bufs, "batch", "experts", None, None)
+    xin = constrain(bufs.transpose(1, 0, 2, 3), "experts", "batch", None, None)
+    out = _expert_ffn(p["experts"], xin)                 # (E,B,C,D)
+    out = constrain(out, "experts", "batch", None, None)
+    out_be = constrain(out.transpose(1, 0, 2, 3), "batch", "experts",
+                       None, None)
+    out_b = out_be.reshape(b, e * c, d)
+    # pad a zero row so dumped selections gather zeros
+    out_b = jnp.concatenate(
+        [out_b, jnp.zeros((b, 1, d), out_b.dtype)], axis=1)
+    slots = jnp.minimum(slots, e * c)                    # (B, S*k)
+    picked = jnp.take_along_axis(out_b, slots[..., None], axis=1)
+    y = (picked.reshape(b, s, k, d)
+         * gates.astype(x.dtype)[..., None]).sum(axis=2)
+    return y, aux
+
+
+def moe_block_einsum(p, cfg, x: Array) -> tuple[Array, Array]:
+    """GShard one-hot dispatch (the §Roofline baseline path)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    e, k = m.n_experts, m.top_k
+    c = capacity(cfg, s)
+
+    logits = (x.astype(jnp.float32) @ p["router"]["w"]).astype(jnp.float32)
+    gates, sel = jax.lax.top_k(logits, k)            # (B,S,k)
+    gates = jax.nn.softmax(gates, axis=-1)           # normalize over chosen k
+
+    # Load-balancing auxiliary loss (Switch): E * mean(frac_tokens * frac_prob)
+    probs = jax.nn.softmax(logits, axis=-1)
+    one_hot_sel = jax.nn.one_hot(sel[..., 0], e, dtype=jnp.float32)
+    aux = e * jnp.sum(jnp.mean(one_hot_sel, axis=(0, 1)) *
+                       jnp.mean(probs, axis=(0, 1)))
+
+    # Position of each (token, choice) in its expert's buffer — causal
+    # count over the flattened (S*k) selection stream, per example group.
+    flat = jax.nn.one_hot(sel.reshape(b, s * k), e, dtype=jnp.int32)  # (B,Sk,E)
+    pos = jnp.cumsum(flat, axis=1) - flat            # selections before this one
+    pos_sel = jnp.sum(pos * flat, axis=-1)           # (B, S*k)
+    keep = (pos_sel < c).astype(x.dtype)
+    oh_pos = jax.nn.one_hot(pos_sel, c, dtype=x.dtype)              # (B,Sk,C)
+    sel_e = flat.astype(x.dtype) * keep[..., None]                  # (B,Sk,E)
+    w_flat = gates.reshape(b, s * k).astype(x.dtype)
+
+    # dispatch (B,S,E,C): sum over the k choice slots
+    disp = jnp.einsum("bte,btc->btec", sel_e, oh_pos)
+    disp = disp.reshape(b, s, k, e, c).sum(axis=2)
+    comb = jnp.einsum("bte,btc,bt->btec", sel_e, oh_pos, w_flat)
+    comb = comb.reshape(b, s, k, e, c).sum(axis=2)
+
+    xin = jnp.einsum("bsec,bsd->ebcd", disp, x)      # (E,B,C,D)
+    xin = constrain(xin, "experts", "batch", None, None)
+    we = p["experts"]
+    h = jnp.einsum("ebcd,edf->ebcf", xin, we["wi"].astype(x.dtype))
+    g = jnp.einsum("ebcd,edf->ebcf", xin, we["wg"].astype(x.dtype))
+    h = jax.nn.silu(g) * h
+    out = jnp.einsum("ebcf,efd->ebcd", h, we["wo"].astype(x.dtype))
+    out = constrain(out, "experts", "batch", None, None)
+    y = jnp.einsum("bsec,ebcd->bsd", comb, out)
+    return y, aux

@@ -1,0 +1,92 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+The temporal-mixing branch: linear_x -> causal conv(4) -> RG-LRU gated
+linear recurrence, multiplied by a GELU side branch, projected back.
+
+    r_t = sigmoid(W_a u_t)            recurrence gate
+    i_t = sigmoid(W_x u_t)            input gate
+    a_t = exp(-c * softplus(Lambda) * r_t),  c = 8
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+Training/prefill uses `jax.lax.associative_scan` over the sequence (the
+recurrence h_t = a_t h_{t-1} + b_t is associative), so the whole layer is
+parallel — this is what makes long_500k viable for the hybrid arch.
+Decode is the O(1) per-token update.  W_a/W_x are dense here (the paper
+uses block-diagonal; recorded in DESIGN.md §Assumptions).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense, dense_init
+from .ssm import _causal_conv
+
+Array = jax.Array
+_C = 8.0
+
+
+def rglru_init(key, cfg) -> dict:
+    w = cfg.rglru_width or cfg.d_model
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    return {
+        "lin_x": dense_init(ks[0], d, w),
+        "lin_y": dense_init(ks[1], d, w),
+        "conv_w": jax.random.normal(ks[2], (4, w), jnp.float32) / 2.0,
+        "conv_b": jnp.zeros((w,), jnp.float32),
+        "w_a": dense_init(ks[3], w, w),
+        "w_x": dense_init(ks[4], w, w),
+        # Lambda init so a^(1/c) ~ U[0.9, 0.999] as in the paper
+        "lam": jnp.log(jnp.expm1(-jnp.log(
+            jnp.linspace(0.9, 0.999, w, dtype=jnp.float32)))),
+        "lin_out": dense_init(ks[5], w, d),
+    }
+
+
+def _gates(p, u: Array):
+    r = jax.nn.sigmoid(dense(p["w_a"], u).astype(jnp.float32))
+    i = jax.nn.sigmoid(dense(p["w_x"], u).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i * u.astype(jnp.float32))
+    return a, b
+
+
+def rglru_scan(p, u: Array, h0: Array | None = None):
+    """u (B, S, W) -> (h (B, S, W), h_last (B, W)) via associative scan."""
+    a, b = _gates(p, u)
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(u.dtype), h[:, -1]
+
+
+def rglru_block(p, cfg, x: Array) -> Array:
+    """Full-sequence temporal-mixing block (train / prefill)."""
+    y = jax.nn.gelu(dense(p["lin_y"], x))
+    u = dense(p["lin_x"], x)
+    u, _ = _causal_conv(p["conv_w"], p["conv_b"], u, act=False)
+    h, _ = rglru_scan(p, u)
+    return dense(p["lin_out"], h * y)
+
+
+def rglru_decode_step(p, cfg, x: Array, conv_state: Array, h: Array):
+    """x (B, 1, D); conv_state (B, 3, W); h (B, W) -> (out, states)."""
+    y = jax.nn.gelu(dense(p["lin_y"], x))
+    u, conv_state = _causal_conv(p["conv_w"], p["conv_b"],
+                                 dense(p["lin_x"], x), conv_state, act=False)
+    a, b = _gates(p, u)
+    h_new = (a[:, 0] * h.astype(jnp.float32) + b[:, 0])
+    out = dense(p["lin_out"], h_new[:, None].astype(x.dtype) * y)
+    return out, conv_state, h_new.astype(x.dtype)

@@ -1,0 +1,183 @@
+"""Mamba-2 SSD (state-space duality) blocks — mamba2-780m.
+
+Chunked SSD form (Dao & Gu 2024): within a chunk the recurrence is the
+masked matrix product (C B^T ⊙ L) x̄ (the "dual" attention-like GEMM —
+exactly the irregular-GEMM payload the ReDas mapper schedules); across
+chunks a short `lax.scan` carries the (H, N, P) state.  Decode is the
+O(1) recurrent update on the same state, so long_500k runs with constant
+memory.
+
+Layer i/o follows Mamba-2: in_proj -> (z, x, B, C, dt), causal depthwise
+conv over (x, B, C), SSD, gated RMSNorm, out_proj.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, rms_norm
+
+Array = jax.Array
+
+
+def _dims(cfg):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    heads = d_in // s.head_dim
+    conv_ch = d_in + 2 * s.n_groups * s.d_state
+    return s, d_in, heads, conv_ch
+
+
+def ssm_init(key, cfg) -> dict:
+    s, d_in, heads, conv_ch = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    d_proj = 2 * d_in + 2 * s.n_groups * s.d_state + heads
+    return {
+        "in_proj": dense_init(ks[0], cfg.d_model, d_proj),
+        "conv_w": jax.random.normal(ks[1], (s.conv_width, conv_ch), jnp.float32)
+        / math.sqrt(s.conv_width),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, heads)),
+        "D": jnp.ones((heads,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[2], (heads,), jnp.float32,
+                                       math.log(1e-3), math.log(1e-1))))),
+        "norm": jnp.zeros((d_in,), jnp.float32),
+        "out_proj": dense_init(ks[3], d_in, cfg.d_model),
+    }
+
+
+def _causal_conv(w: Array, b: Array, x: Array, state: Array | None = None,
+                 act: bool = True):
+    """Depthwise causal conv, width W.  x (B, L, C); state (B, W-1, C) for
+    decode.  Returns (y, new_state)."""
+    width = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype) for i in range(width))
+    y = y + b.astype(x.dtype)
+    new_state = xp[:, -(width - 1):]
+    return (jax.nn.silu(y) if act else y), new_state
+
+
+def _split(p, cfg, u: Array):
+    s, d_in, heads, _ = _dims(cfg)
+    gn = s.n_groups * s.d_state
+    z, xbc, dt = jnp.split(u, [d_in, 2 * d_in + 2 * gn], axis=-1)
+    return z, xbc, dt, (s, d_in, heads, gn)
+
+
+def ssd_chunked(x, dt, a_log, b_mat, c_mat, d_skip, chunk: int, h0=None):
+    """x (B,L,H,P); dt (B,L,H) (post-softplus); b_mat,c_mat (B,L,G,N).
+
+    Returns (y (B,L,H,P), final_state (B,H,N,P))."""
+    bsz, l, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    nc = -(-l // chunk)
+    pad = nc * chunk - l
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    a = -jnp.exp(a_log.astype(jnp.float32))                    # (H,) negative
+    da = dt.astype(jnp.float32) * a                            # (B,L,H)
+    xbar = (x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None])
+
+    def reshape_c(t, extra):  # (B, L, ...) -> (nc, B, chunk, ...)
+        return t.reshape((bsz, nc, chunk) + extra).transpose(1, 0, 2, *range(3, 3 + len(extra)))
+
+    da_c = reshape_c(da, (h,))
+    x_c = reshape_c(xbar, (h, p))
+    b_c = reshape_c(b_mat.astype(jnp.float32), (g, n))
+    c_c = reshape_c(c_mat.astype(jnp.float32), (g, n))
+
+    cs = jnp.cumsum(da_c, axis=2)                              # (nc,B,C,H)
+    seg = cs[:, :, :, None, :] - cs[:, :, None, :, :]          # t,s
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    l_mat = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+
+    # intra-chunk: (C B^T ⊙ L) x̄  — heads grouped over G
+    cb = jnp.einsum("ubtgn,ubsgn->ubtsg", c_c, b_c)
+    hpg = h // g
+    cb_h = jnp.repeat(cb, hpg, axis=-1)                        # (nc,B,C,C,H)
+    y_intra = jnp.einsum("ubtsh,ubtsh,ubshp->ubthp", cb_h, l_mat, x_c)
+
+    # per-chunk terminal state and decay-to-end
+    decay_end = jnp.exp(cs[:, :, -1:, :] - cs)                 # (nc,B,C,H)
+    s_chunk = jnp.einsum("ubsh,ubshn,ubshp->ubhnp",
+                         decay_end, _expand_groups(b_c, h), x_c)
+    chunk_decay = jnp.exp(jnp.sum(da_c, axis=2))               # (nc,B,H)
+
+    def scan_body(carry, inp):
+        s_prev = carry
+        s_new, dec = inp
+        s_next = s_prev * dec[..., None, None] + s_new
+        return s_next, s_prev
+
+    init = (jnp.zeros((bsz, h, n, p), jnp.float32) if h0 is None
+            else h0.astype(jnp.float32))
+    s_final, s_starts = jax.lax.scan(scan_body, init, (s_chunk, chunk_decay))
+
+    # inter-chunk: C_t · exp(cs_t) S_start
+    y_inter = jnp.einsum("ubth,ubthn,ubhnp->ubthp",
+                         jnp.exp(cs), _expand_groups(c_c, h), s_starts)
+    y = (y_intra + y_inter).transpose(1, 0, 2, 3, 4).reshape(bsz, nc * chunk, h, p)
+    y = y + d_skip.astype(jnp.float32)[None, None, :, None] * x.astype(jnp.float32)
+    return y[:, :l].astype(jnp.float32), s_final
+
+
+def _expand_groups(t: Array, h: int) -> Array:
+    """(nc,B,C,G,N) -> (nc,B,C,H,N) by repeating groups."""
+    g = t.shape[3]
+    if g == h:
+        return t
+    return jnp.repeat(t, h // g, axis=3)
+
+
+def ssm_block(p, cfg, x: Array) -> Array:
+    """Full-sequence SSD block (train / prefill). x (B, S, D)."""
+    u = x @ p["in_proj"]["w"].astype(x.dtype)
+    z, xbc, dt, (s, d_in, heads, gn) = _split(p, cfg, u)
+    xbc, _ = _causal_conv(p["conv_w"], p["conv_b"], xbc)
+    xs, b_mat, c_mat = jnp.split(xbc, [d_in, d_in + gn], axis=-1)
+    bsz, length = x.shape[0], x.shape[1]
+    xs = xs.reshape(bsz, length, heads, s.head_dim)
+    b_mat = b_mat.reshape(bsz, length, s.n_groups, s.d_state)
+    c_mat = c_mat.reshape(bsz, length, s.n_groups, s.d_state)
+    dt_full = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    y, _ = ssd_chunked(xs, dt_full, p["A_log"], b_mat, c_mat, p["D"], s.chunk)
+    y = y.reshape(bsz, length, d_in).astype(x.dtype)
+    y = rms_norm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return y @ p["out_proj"]["w"].astype(x.dtype)
+
+
+def ssm_decode_step(p, cfg, x, conv_state, ssd_state):
+    """Single-token recurrent update.  x (B, 1, D); conv_state
+    (B, W-1, conv_ch); ssd_state (B, H, N, P)."""
+    u = x @ p["in_proj"]["w"].astype(x.dtype)
+    z, xbc, dt, (s, d_in, heads, gn) = _split(p, cfg, u)
+    xbc, conv_state = _causal_conv(p["conv_w"], p["conv_b"], xbc, conv_state)
+    xs, b_mat, c_mat = jnp.split(xbc, [d_in, d_in + gn], axis=-1)
+    bsz = x.shape[0]
+    xs = xs.reshape(bsz, heads, s.head_dim).astype(jnp.float32)
+    b_mat = _expand_groups(
+        b_mat.reshape(1, bsz, 1, s.n_groups, s.d_state), heads)[0, :, 0]
+    c_mat = _expand_groups(
+        c_mat.reshape(1, bsz, 1, s.n_groups, s.d_state), heads)[0, :, 0]
+    dt_f = jax.nn.softplus(dt.astype(jnp.float32)[:, 0] + p["dt_bias"])  # (B,H)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt_f * a)                                   # (B,H)
+    xbar = xs * dt_f[..., None]
+    ssd_state = (ssd_state * decay[..., None, None]
+                 + jnp.einsum("bhn,bhp->bhnp", b_mat.astype(jnp.float32), xbar))
+    y = jnp.einsum("bhn,bhnp->bhp", c_mat.astype(jnp.float32), ssd_state)
+    y = y + p["D"].astype(jnp.float32)[None, :, None] * xs
+    y = y.reshape(bsz, 1, d_in).astype(x.dtype)
+    y = rms_norm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return y @ p["out_proj"]["w"].astype(x.dtype), conv_state, ssd_state

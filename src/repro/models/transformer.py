@@ -1,0 +1,408 @@
+"""Model assembly: decoder / encoder / hybrid / SSM / VLM from ArchConfig.
+
+Layers are grouped by the repeating `layer_pattern` period and scanned
+(`jax.lax.scan` over stacked period params) with a rematerialized body —
+compile time and HLO size are O(period), not O(n_layers), which is what
+makes the 88-layer mistral-large dry-run tractable; saved residuals are
+sharding-constrained to the 'residual' logical axis so remat checkpoints
+spread across the model axis.
+
+Three execution paths share the same block code:
+  forward()       full-sequence (training / encoder / prefill-as-forward)
+  prefill()       forward + KV/state cache construction
+  decode_step()   one token against the cache (scan over periods again)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import constrain
+from . import layers, moe, rglru, ssm
+from .config import ArchConfig
+from .layers import dense, mlp, mlp_init, rms_norm
+
+Array = jax.Array
+
+
+# --------------------------------------------------------------------------
+# Init
+# --------------------------------------------------------------------------
+
+
+def _block_init(key, cfg: ArchConfig, kind: str) -> dict:
+    ks = jax.random.split(key, 3)
+    p: dict[str, Any] = {"norm1": jnp.zeros((cfg.d_model,), jnp.float32)}
+    if kind in ("attn", "local"):
+        p["attn"] = layers.attn_init(ks[0], cfg)
+        p["norm2"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        if cfg.moe is not None:
+            p["moe"] = moe.moe_init(ks[1], cfg)
+        else:
+            p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.gated_mlp)
+    elif kind == "ssm":
+        p["ssm"] = ssm.ssm_init(ks[0], cfg)
+    elif kind == "rglru":
+        p["rec"] = rglru.rglru_init(ks[0], cfg)
+        p["norm2"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.gated_mlp)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def _period_split(cfg: ArchConfig) -> tuple[int, int]:
+    period = len(cfg.layer_pattern)
+    return cfg.n_layers // period, cfg.n_layers % period
+
+
+def init_params(key, cfg: ArchConfig) -> dict:
+    n_periods, n_tail = _period_split(cfg)
+    ks = jax.random.split(key, 4 + len(cfg.layer_pattern) + n_tail)
+    params: dict[str, Any] = {}
+    if not cfg.embed_inputs:
+        params["embed"] = (
+            jax.random.normal(ks[0], (cfg.vocab, cfg.d_model), jnp.float32)
+            / jnp.sqrt(cfg.d_model).astype(jnp.float32))
+    stack = {}
+    for j, kind in enumerate(cfg.layer_pattern):
+        keys = jax.random.split(ks[2 + j], max(n_periods, 1))
+        stack[f"b{j}"] = jax.vmap(
+            lambda k, kd=kind: _block_init(k, cfg, kd))(keys)
+    params["stack"] = stack
+    params["tail"] = [
+        _block_init(ks[2 + len(cfg.layer_pattern) + t], cfg,
+                    cfg.layer_pattern[t])
+        for t in range(n_tail)
+    ]
+    params["final_norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init_head(ks[1], cfg)
+    return params
+
+
+def dense_init_head(key, cfg: ArchConfig):
+    return (jax.random.normal(key, (cfg.d_model, cfg.vocab), jnp.float32)
+            / jnp.sqrt(cfg.d_model).astype(jnp.float32))
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+# --------------------------------------------------------------------------
+# Blocks (full-sequence path)
+# --------------------------------------------------------------------------
+
+
+def _norm_in(scale, cfg: ArchConfig, x: Array) -> Array:
+    """Norm input path.  §Perf iteration 7 tried an explicit bf16
+    all-gather here (Megatron-SP style); GSPMD responded by saving the
+    gathered replicas across remat (temp 15 -> 111 GB/device) — REFUTED,
+    so the norm runs on whatever sharding the residual carries."""
+    return rms_norm(scale, x, cfg.norm_eps, cast_early=cfg.norm_cast_early)
+
+
+def _to_residual(h: Array) -> Array:
+    return h
+
+
+def _block_apply(kind: str, p, cfg: ArchConfig, x: Array, positions: Array):
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("attn", "local"):
+        window = cfg.window if kind == "local" else 0
+        h = layers.attention_block(
+            p["attn"], cfg, _norm_in(p["norm1"], cfg, x),
+            positions, window=window)
+        x = x + _to_residual(h)
+        h2in = _norm_in(p["norm2"], cfg, x)
+        if cfg.moe is not None:
+            h2, aux = moe.moe_block(p["moe"], cfg, h2in)
+        else:
+            h2 = mlp(p["mlp"], h2in)
+        x = x + _to_residual(h2)
+    elif kind == "ssm":
+        x = x + _to_residual(
+            ssm.ssm_block(p["ssm"], cfg, _norm_in(p["norm1"], cfg, x)))
+    elif kind == "rglru":
+        x = x + _to_residual(
+            rglru.rglru_block(p["rec"], cfg, _norm_in(p["norm1"], cfg, x)))
+        x = x + _to_residual(mlp(p["mlp"], _norm_in(p["norm2"], cfg, x)))
+    else:
+        raise ValueError(kind)
+    return x, aux
+
+
+def _embed_in(params, cfg: ArchConfig, tokens, embeds, compute_dtype):
+    if cfg.embed_inputs:
+        x = embeds.astype(compute_dtype)
+    else:
+        x = params["embed"].astype(compute_dtype)[tokens]
+        if embeds is not None:  # VLM: prefix patch embeddings
+            x = jnp.concatenate([embeds.astype(compute_dtype), x], axis=1)
+    return constrain(x, "batch", "seq", "embed")
+
+
+def _logits_out(params, cfg: ArchConfig, x: Array):
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = x @ head.astype(x.dtype)
+    return constrain(logits, "batch", "seq", "vocab")
+
+
+def forward(params, cfg: ArchConfig, tokens: Array | None = None, *,
+            embeds: Array | None = None, compute_dtype=jnp.bfloat16):
+    """Full-sequence logits.  tokens (B, S) int32; embeds (B, P, D) for the
+    VLM prefix or (B, S, D) for audio (embed_inputs).  Returns
+    (logits (B, S_total, V), aux_loss scalar)."""
+    x = _embed_in(params, cfg, tokens, embeds, compute_dtype)
+    b, s = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    n_periods, _ = _period_split(cfg)
+
+    def body(carry, pp):
+        x, aux = carry
+        for j, kind in enumerate(cfg.layer_pattern):
+            x, a = _block_apply(kind, pp[f"b{j}"], cfg, x, positions)
+            aux = aux + a
+        # Carry saved embed-sharded over 'model' (remat memory /16); the
+        # per-block bf16 gather lives in _block_apply._norm_in.  (§Perf
+        # iterations 3/5 tried seq-sharded and replicated carries: both
+        # made GSPMD reshard inside the attention scans — 1.5-6x worse.)
+        x = constrain(x, "batch", None, "residual")
+        return (x, aux), None
+
+    if n_periods > 0:
+        body_rm = jax.checkpoint(body, prevent_cse=False)
+        (x, aux), _ = jax.lax.scan(
+            body_rm, (x, jnp.zeros((), jnp.float32)), params["stack"])
+    else:  # pragma: no cover - all assigned archs have >= 1 period
+        aux = jnp.zeros((), jnp.float32)
+    for t, p_tail in enumerate(params["tail"]):
+        x, a = _block_apply(cfg.layer_pattern[t], p_tail, cfg, x, positions)
+        aux = aux + a
+    return _logits_out(params, cfg, x), aux
+
+
+# --------------------------------------------------------------------------
+# Cache + decode path
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheSpec:
+    """Static description of the per-block cache for a serving config."""
+    max_seq: int
+    batch: int
+
+
+def _slot_cache_shape(kind: str, cfg: ArchConfig, spec: CacheSpec,
+                      dtype) -> dict:
+    b, hd, kv = spec.batch, cfg.head_dim_, cfg.n_kv
+    if kind == "attn":
+        s = spec.max_seq
+        return {"k": jnp.zeros((b, s, kv, hd), dtype),
+                "v": jnp.zeros((b, s, kv, hd), dtype)}
+    if kind == "local":
+        s = min(cfg.window, spec.max_seq)
+        return {"k": jnp.zeros((b, s, kv, hd), dtype),
+                "v": jnp.zeros((b, s, kv, hd), dtype)}
+    if kind == "ssm":
+        sc, d_in = cfg.ssm, cfg.ssm.expand * cfg.d_model
+        heads = d_in // sc.head_dim
+        conv_ch = d_in + 2 * sc.n_groups * sc.d_state
+        return {"conv": jnp.zeros((b, sc.conv_width - 1, conv_ch), dtype),
+                "state": jnp.zeros((b, heads, sc.d_state, sc.head_dim),
+                                   jnp.float32)}
+    if kind == "rglru":
+        w = cfg.rglru_width or cfg.d_model
+        return {"conv": jnp.zeros((b, 3, w), dtype),
+                "h": jnp.zeros((b, w), dtype)}
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ArchConfig, spec: CacheSpec, dtype=jnp.bfloat16) -> dict:
+    n_periods, n_tail = _period_split(cfg)
+    tile = lambda t: jnp.broadcast_to(t, (n_periods,) + t.shape).copy()
+    slots = {
+        f"b{j}": jax.tree.map(tile, _slot_cache_shape(kind, cfg, spec, dtype))
+        for j, kind in enumerate(cfg.layer_pattern)
+    }
+    tail = [_slot_cache_shape(cfg.layer_pattern[t], cfg, spec, dtype)
+            for t in range(n_tail)]
+    return {"t": jnp.zeros((), jnp.int32), "slots": slots, "tail": tail}
+
+
+def _decode_block(kind: str, p, cfg: ArchConfig, x: Array, t: Array, c: dict):
+    """One-token step for one block; returns (x, new_cache_slice)."""
+    b = x.shape[0]
+    pos = jnp.broadcast_to(t[None], (b, 1)).astype(jnp.int32)
+    if kind in ("attn", "local"):
+        q, k_new, v_new = layers.attn_qkv(
+            p["attn"], cfg, rms_norm(p["norm1"], x, cfg.norm_eps), pos)
+        size = c["k"].shape[1]
+        idx = (t % size).astype(jnp.int32)
+        k_c = jax.lax.dynamic_update_slice(c["k"], k_new.astype(c["k"].dtype),
+                                           (0, idx, 0, 0))
+        v_c = jax.lax.dynamic_update_slice(c["v"], v_new.astype(c["v"].dtype),
+                                           (0, idx, 0, 0))
+        kv_len = jnp.minimum(t + 1, size)
+        h = layers.cached_attention(
+            p["attn"], cfg, q, k_c, v_c, pos,
+            jnp.broadcast_to(kv_len[None], (b,)))
+        x = x + h
+        h2in = rms_norm(p["norm2"], x, cfg.norm_eps)
+        if cfg.moe is not None:
+            h2, _ = moe.moe_block(p["moe"], cfg, h2in)
+        else:
+            h2 = mlp(p["mlp"], h2in)
+        return x + h2, {"k": k_c, "v": v_c}
+    if kind == "ssm":
+        h, conv, state = ssm.ssm_decode_step(
+            p["ssm"], cfg, rms_norm(p["norm1"], x, cfg.norm_eps),
+            c["conv"], c["state"])
+        return x + h, {"conv": conv.astype(c["conv"].dtype), "state": state}
+    if kind == "rglru":
+        h, conv, hstate = rglru.rglru_decode_step(
+            p["rec"], cfg, rms_norm(p["norm1"], x, cfg.norm_eps),
+            c["conv"], c["h"])
+        x = x + h
+        x = x + mlp(p["mlp"], rms_norm(p["norm2"], x, cfg.norm_eps))
+        return x, {"conv": conv.astype(c["conv"].dtype),
+                   "h": hstate.astype(c["h"].dtype)}
+    raise ValueError(kind)
+
+
+def decode_step(params, cfg: ArchConfig, cache: dict, token: Array, *,
+                compute_dtype=jnp.bfloat16):
+    """token (B, 1) int32 -> (logits (B, 1, V), new_cache)."""
+    t = cache["t"]
+    x = params["embed"].astype(compute_dtype)[token]
+    x = constrain(x, "batch", None, "embed")
+
+    def body(x, inp):
+        pp, cc = inp
+        for j, kind in enumerate(cfg.layer_pattern):
+            x, cc_new = _decode_block(kind, pp[f"b{j}"], cfg, x, t, cc[f"b{j}"])
+            cc = {**cc, f"b{j}": cc_new}
+        return x, cc
+
+    x, new_slots = jax.lax.scan(body, x, (params["stack"], cache["slots"]))
+    new_tail = []
+    for i, p_tail in enumerate(params["tail"]):
+        x, c_new = _decode_block(cfg.layer_pattern[i], p_tail, cfg, x, t,
+                                 cache["tail"][i])
+        new_tail.append(c_new)
+    logits = _logits_out(params, cfg, x)
+    return logits, {"t": t + 1, "slots": new_slots, "tail": new_tail}
+
+
+def prefill(params, cfg: ArchConfig, tokens: Array, cache: dict, *,
+            embeds: Array | None = None, compute_dtype=jnp.bfloat16):
+    """Run the prompt, filling `cache`; returns (last-token logits, cache).
+
+    Implementation: the full-sequence path plus per-block cache writes —
+    attention caches receive rows [0, S); recurrent caches receive the
+    final state (recomputed per block kind via its scan)."""
+    x = _embed_in(params, cfg, tokens, embeds, compute_dtype)
+    b, s = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(carry, inp):
+        x, = carry
+        pp, cc = inp
+        for j, kind in enumerate(cfg.layer_pattern):
+            x, cc_new = _prefill_block(kind, pp[f"b{j}"], cfg, x, positions,
+                                       cc[f"b{j}"])
+            cc = {**cc, f"b{j}": cc_new}
+        x = constrain(x, "batch", "residual", None)
+        return (x,), cc
+
+    body_rm = jax.checkpoint(body, prevent_cse=False)
+    (x,), new_slots = jax.lax.scan(body_rm, (x,),
+                                   (params["stack"], cache["slots"]))
+    new_tail = []
+    for i, p_tail in enumerate(params["tail"]):
+        x, c_new = _prefill_block(cfg.layer_pattern[i], p_tail, cfg, x,
+                                  positions, cache["tail"][i])
+        new_tail.append(c_new)
+    logits = _logits_out(params, cfg, x[:, -1:])
+    return logits, {"t": jnp.asarray(s, jnp.int32), "slots": new_slots,
+                    "tail": new_tail}
+
+
+def _prefill_block(kind: str, p, cfg: ArchConfig, x, positions, c):
+    b, s = x.shape[0], x.shape[1]
+    if kind in ("attn", "local"):
+        window = cfg.window if kind == "local" else 0
+        xin = rms_norm(p["norm1"], x, cfg.norm_eps)
+        q, k, v = layers.attn_qkv(p["attn"], cfg, xin, positions)
+        size = c["k"].shape[1]
+        if size >= s:  # full cache: write rows [0, s)
+            k_c = jax.lax.dynamic_update_slice(
+                c["k"], k.astype(c["k"].dtype), (0, 0, 0, 0))
+            v_c = jax.lax.dynamic_update_slice(
+                c["v"], v.astype(c["v"].dtype), (0, 0, 0, 0))
+        else:  # ring cache: keep the last `size` rows at their ring slots
+            tail_k, tail_v = k[:, -size:], v[:, -size:]
+            roll = (s % size)
+            k_c = jnp.roll(tail_k, roll, axis=1).astype(c["k"].dtype)
+            v_c = jnp.roll(tail_v, roll, axis=1).astype(c["v"].dtype)
+        kv_len = jnp.full((b,), s, jnp.int32)
+        if window > 0 and cfg.is_causal:
+            o = layers.local_attention(q, k, v, window)
+        else:
+            o = layers.flash_attention(q, k, v, positions, kv_len,
+                                       cfg.is_causal, window, min(512, s))
+        x = x + dense(p["attn"]["wo"],
+                      o.reshape(b, s, cfg.n_heads * cfg.head_dim_))
+        h2in = rms_norm(p["norm2"], x, cfg.norm_eps)
+        if cfg.moe is not None:
+            h2, _ = moe.moe_block(p["moe"], cfg, h2in)
+        else:
+            h2 = mlp(p["mlp"], h2in)
+        return x + h2, {"k": k_c, "v": v_c}
+    if kind == "ssm":
+        xin = rms_norm(p["norm1"], x, cfg.norm_eps)
+        h, conv, state = _ssm_prefill(p["ssm"], cfg, xin)
+        return x + h, {"conv": conv.astype(c["conv"].dtype), "state": state}
+    if kind == "rglru":
+        xin = rms_norm(p["norm1"], x, cfg.norm_eps)
+        h, conv, hstate = _rglru_prefill(p["rec"], cfg, xin)
+        x = x + h
+        x = x + mlp(p["mlp"], rms_norm(p["norm2"], x, cfg.norm_eps))
+        return x, {"conv": conv.astype(c["conv"].dtype),
+                   "h": hstate.astype(c["h"].dtype)}
+    raise ValueError(kind)
+
+
+def _ssm_prefill(p, cfg, x):
+    sc = cfg.ssm
+    d_in = sc.expand * cfg.d_model
+    u = x @ p["in_proj"]["w"].astype(x.dtype)
+    z, xbc, dt, (s_, d_in, heads, gn) = ssm._split(p, cfg, u)
+    xbc_c, conv_state = ssm._causal_conv(p["conv_w"], p["conv_b"], xbc)
+    xs, b_mat, c_mat = jnp.split(xbc_c, [d_in, d_in + gn], axis=-1)
+    bsz, length = x.shape[0], x.shape[1]
+    xs = xs.reshape(bsz, length, heads, s_.head_dim)
+    b_mat = b_mat.reshape(bsz, length, s_.n_groups, s_.d_state)
+    c_mat = c_mat.reshape(bsz, length, s_.n_groups, s_.d_state)
+    dt_full = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    y, state = ssm.ssd_chunked(xs, dt_full, p["A_log"], b_mat, c_mat,
+                               p["D"], s_.chunk)
+    y = y.reshape(bsz, length, d_in).astype(x.dtype)
+    y = rms_norm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return y @ p["out_proj"]["w"].astype(x.dtype), conv_state, state
+
+
+def _rglru_prefill(p, cfg, x):
+    y = jax.nn.gelu(dense(p["lin_y"], x))
+    u, conv_state = ssm._causal_conv(p["conv_w"], p["conv_b"],
+                                     dense(p["lin_x"], x), act=False)
+    h, h_last = rglru.rglru_scan(p, u)
+    return dense(p["lin_out"], h * y), conv_state, h_last

@@ -1,0 +1,85 @@
+"""AdamW in pure JAX: fp32 master weights + moments over bf16 compute
+params, global-norm clipping, decoupled weight decay.
+
+State is a plain pytree so the checkpoint layer and the FSDP sharding
+rules treat it like params (moments inherit each param's PartitionSpec —
+optimizer state is sharded exactly as its parameter).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: Callable[[jax.Array], jax.Array] | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def init_state(params) -> dict[str, Any]:
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "mu": jax.tree.map(f32, params),
+        "nu": jax.tree.map(f32, params),
+        # jnp.array copies: master must never alias the compute params
+        # (donation would otherwise free one while the other lives).
+        "master": jax.tree.map(lambda p: jnp.array(p, jnp.float32), params),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def _decayable(path) -> bool:
+    """No decay on norms / scalars / biases (ndim < 2)."""
+    return True  # resolved per-leaf by ndim below
+
+
+def apply_updates(cfg: AdamWConfig, state, grads, param_dtype=jnp.bfloat16):
+    """One AdamW step.  grads match params' structure (any float dtype —
+    bf16 grads are the 'compressed all-reduce' path; moments are fp32).
+
+    Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = cfg.lr(step) if callable(cfg.lr) else cfg.lr
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, mu, nu, master):
+        g = g.astype(jnp.float32) * scale
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * jnp.square(g)
+        mhat = mu / b1c
+        vhat = nu / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if master.ndim >= 2:  # decoupled decay on matrices only
+            delta = delta + cfg.weight_decay * master
+        master = master - lr * delta
+        return mu, nu, master
+
+    flat, treedef = jax.tree.flatten(grads)
+    mu_f = treedef.flatten_up_to(state["mu"])
+    nu_f = treedef.flatten_up_to(state["nu"])
+    ma_f = treedef.flatten_up_to(state["master"])
+    out = [upd(g, m, n, w) for g, m, n, w in zip(flat, mu_f, nu_f, ma_f)]
+    mu = jax.tree.unflatten(treedef, [o[0] for o in out])
+    nu = jax.tree.unflatten(treedef, [o[1] for o in out])
+    master = jax.tree.unflatten(treedef, [o[2] for o in out])
+    params = jax.tree.map(lambda w: w.astype(param_dtype), master)
+    new_state = {"step": step, "mu": mu, "nu": nu, "master": master}
+    return params, new_state, {"grad_norm": gnorm, "lr": jnp.asarray(lr)}

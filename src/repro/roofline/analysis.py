@@ -1,0 +1,173 @@
+"""Three-term roofline from a compiled dry-run artifact (TPU v5e target).
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s        (197 TF bf16)
+    memory term     = HLO_bytes_per_device / HBM_bw             (819 GB/s)
+    collective term = collective_bytes_per_device / link_bw     (~50 GB/s)
+
+`compiled.cost_analysis()` reports the *partitioned per-device* module,
+so the terms come out per-chip directly.  collective_bytes is parsed
+from the partitioned HLO text: we sum the result-shape bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (ring-algorithm factors ~2(n-1)/n are folded into the
+single-link bandwidth constant; documented approximation).
+
+MODEL_FLOPS uses 6*N*D (train) / 2*N*D (inference) with N = active
+params — the ratio MODEL_FLOPS / HLO_FLOPs exposes remat recompute,
+attention quadratic terms and padding waste.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+# --- TPU v5e constants (per chip) -------------------------------------------
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g. "bf16[2,4096,1536]{2,1,0}" — possibly inside a tuple "(bf16[..], ..)"
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?\S+\s*=\s*(\([^)]*\)|\S+)\s+(" +
+    "|".join(_COLLECTIVES) + r")\(", re.M)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Result-shape bytes per collective kind in a partitioned HLO dump."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        out[kind] += _shape_bytes(shape_str)
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class Roofline:
+    flops_per_device: float
+    hbm_bytes_per_device: float
+    coll_bytes_per_device: float
+    model_flops_per_device: float = 0.0
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes_per_device / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes_per_device / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        """Perfect-overlap bound: the dominant term IS the step time."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs: how much compiled compute is useful."""
+        if self.flops_per_device <= 0:
+            return 0.0
+        return self.model_flops_per_device / self.flops_per_device
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Achievable MFU bound for this program: useful flops / (step
+        time x peak) under perfect overlap of the three engines."""
+        if self.step_s <= 0:
+            return 0.0
+        return self.model_flops_per_device / (self.step_s * PEAK_FLOPS)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "hbm_bytes_per_device": self.hbm_bytes_per_device,
+            "coll_bytes_per_device": self.coll_bytes_per_device,
+            "model_flops_per_device": self.model_flops_per_device,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "step_s": self.step_s,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def from_compiled(compiled, *, model_flops_total: float, n_devices: int,
+                  hlo_text: str | None = None) -> Roofline:
+    """Loop-aware terms from the partitioned HLO (roofline/hlo_costs).
+
+    NB: `compiled.cost_analysis()` visits while bodies once and therefore
+    undercounts scanned programs by the product of trip counts; the
+    hlo_costs walker multiplies by each loop's known_trip_count.  The raw
+    cost_analysis numbers are kept in the dry-run reports for comparison.
+    """
+    from . import hlo_costs
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    cost = hlo_costs.module_costs(text)
+    return Roofline(
+        flops_per_device=cost.flops,
+        hbm_bytes_per_device=cost.bytes,
+        coll_bytes_per_device=cost.coll_bytes,
+        model_flops_per_device=model_flops_total / n_devices,
+    )
+
+
+def raw_cost_analysis(compiled) -> dict:
+    """XLA's own (loop-body-once) numbers, for the methodology comparison."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    if hbm == 0.0:
+        hbm = sum(float(v) for k, v in cost.items()
+                  if k.startswith("bytes accessed"))
+    return {"flops": flops, "bytes_accessed": hbm}
+
+
+def model_flops(cfg, shape, *, active: bool = True) -> float:
+    """6*N*D (train) / 2*N*D (prefill) / 2*N per token (decode), N=active."""
+    n = cfg.active_param_count() if active else cfg.param_count()
+    if shape.step == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.step == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence per step
+    return 2.0 * n * shape.global_batch

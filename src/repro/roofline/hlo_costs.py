@@ -1,0 +1,299 @@
+"""Loop-aware cost extraction from compiled (partitioned) HLO text.
+
+`compiled.cost_analysis()` visits each while-loop body ONCE — with
+scan-over-layers and grad-accumulation scans that undercounts FLOPs,
+bytes and collective traffic by the product of trip counts (verified
+~12-28x on our cells; see EXPERIMENTS.md §Roofline-methodology).  The
+compiled HLO, however, carries every loop's exact trip count in
+`backend_config={"known_trip_count":{"n":...}}` — so this module parses
+the module text into a computation graph and walks it with loop
+multipliers:
+
+  FLOPs   — every `dot` (2 * prod(result dims) * contract size), including
+            dots inside fusion computations;
+  bytes   — operand + result bytes of every non-free op at its call site;
+            fusion internals are on-chip by definition, so a fusion's
+            traffic is exactly its call-site operands + result (this is
+            the post-fusion HBM traffic model, same as HloCostAnalysis);
+  coll    — result bytes of all-gather / all-reduce / reduce-scatter /
+            all-to-all / collective-permute, trip-multiplied, plus a
+            per-op-name attribution map for the §Perf hillclimb.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# ops that move no HBM bytes at their call site
+_FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "call", "conditional", "after-all", "add-dependency",
+    "partition-id", "replica-id", "custom-call",  # custom-call: see below
+}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_dims(shape_str: str) -> list[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    shape: str            # result shape string
+    kind: str
+    operands: list[str]
+    attrs: str            # everything after the operand list
+
+
+_NAME_EQ = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*")
+_KIND = re.compile(r"^([\w\-]+)\(")
+
+
+def _parse_op_line(line: str) -> tuple[str, str, str, str, str] | None:
+    """(name, shape, kind, operand_str, attrs) — robust to tuple shapes
+    containing /*index=N*/ comments (regexes are not)."""
+    m = _NAME_EQ.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    rest = line[m.end():]
+    if rest.startswith("("):  # tuple-shaped result: bracket-match
+        depth, i = 0, 0
+        for i, ch in enumerate(rest):
+            depth += ch == "("
+            depth -= ch == ")"
+            if depth == 0:
+                break
+        shape, rest = rest[: i + 1], rest[i + 1:].lstrip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        shape, rest = rest[:sp], rest[sp + 1:].lstrip()
+    k = _KIND.match(rest)
+    if not k:
+        return None
+    kind = k.group(1)
+    rest = rest[k.end() - 1:]
+    depth, i = 0, 0
+    for i, ch in enumerate(rest):
+        depth += ch == "("
+        depth -= ch == ")"
+        if depth == 0:
+            break
+    operands, attrs = rest[1:i], rest[i + 1:]
+    return name, shape, kind, operands, attrs
+
+_COMP_HEADER = re.compile(r"^(ENTRY\s+)?%([\w.\-]+)\s+\(.*->.*\{\s*$")
+_OPERAND = re.compile(r"%([\w.\-]+)")
+_TRIPS = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS = re.compile(r"calls=%([\w.\-]+)")
+_TO_APPLY = re.compile(r"to_apply=%([\w.\-]+)")
+_BODY = re.compile(r"body=%([\w.\-]+)")
+_COND = re.compile(r"condition=%([\w.\-]+)")
+_OPNAME_META = re.compile(r'op_name="([^"]*)"')
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: dict[str, Op]
+    is_entry: bool = False
+
+
+def parse_module(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in text.splitlines():
+        h = _COMP_HEADER.match(line)
+        if h:
+            cur = Computation(h.group(2), {}, is_entry=bool(h.group(1)))
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        parsed = _parse_op_line(line)
+        if parsed:
+            name, shape, kind, opnds, attrs = parsed
+            cur.ops[name] = Op(name, shape, kind,
+                               _OPERAND.findall(opnds), attrs)
+    return comps
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    coll_by_opname: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    bytes_by_opname: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    flops_by_opname: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.flops += mult * other.flops
+        self.bytes += mult * other.bytes
+        self.coll_bytes += mult * other.coll_bytes
+        for k, v in other.coll_by_kind.items():
+            self.coll_by_kind[k] += mult * v
+        for k, v in other.coll_by_opname.items():
+            self.coll_by_opname[k] += mult * v
+        for k, v in other.bytes_by_opname.items():
+            self.bytes_by_opname[k] += mult * v
+        for k, v in other.flops_by_opname.items():
+            self.flops_by_opname[k] += mult * v
+
+
+class ModuleCosts:
+    def __init__(self, text: str):
+        self.comps = parse_module(text)
+        self._memo: dict[str, Cost] = {}
+        entries = [c for c in self.comps.values() if c.is_entry]
+        assert entries, "no ENTRY computation found"
+        self.entry = entries[0]
+
+    # -- per-op helpers ------------------------------------------------------
+
+    def _dot_flops(self, comp: Computation, op: Op) -> float:
+        lhs = comp.ops.get(op.operands[0]) if op.operands else None
+        if lhs is None:
+            return 0.0
+        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.attrs)
+        cdims = [int(x) for x in m.group(1).split(",") if x] if m else []
+        ldims = _shape_dims(lhs.shape)
+        contract = math.prod(ldims[i] for i in cdims) if cdims else 1
+        out = math.prod(_shape_dims(op.shape)) if _shape_dims(op.shape) else 1
+        return 2.0 * out * contract
+
+    def _op_bytes(self, comp: Computation, op: Op) -> float:
+        if op.kind in _FREE_OPS and op.kind != "custom-call":
+            return 0.0
+        total = float(_shape_bytes(op.shape))
+        for o in op.operands:
+            d = comp.ops.get(o)
+            if d is not None:
+                total += _shape_bytes(d.shape)
+        return total
+
+    def _flops_only(self, name: str) -> float:
+        """dot FLOPs inside a fusion computation (bytes stay at call site)."""
+        comp = self.comps[name]
+        total = 0.0
+        for op in comp.ops.values():
+            if op.kind == "dot":
+                total += self._dot_flops(comp, op)
+            elif op.kind == "fusion":
+                m = _CALLS.search(op.attrs)
+                if m and m.group(1) in self.comps:
+                    total += self._flops_only(m.group(1))
+        return total
+
+    def _trip_count(self, op: Op) -> int:
+        m = _TRIPS.search(op.attrs)
+        if m:
+            return int(m.group(1))
+        # fallback: max s32 constant in the condition computation
+        c = _COND.search(op.attrs)
+        if c and c.group(1) in self.comps:
+            consts = [
+                int(x) for o in self.comps[c.group(1)].ops.values()
+                for x in re.findall(r"constant\((\d+)\)", o.kind + "(" + ",".join(o.operands) + ")" + o.attrs)
+            ]
+            if consts:
+                return max(consts)
+        return 1
+
+    # -- the walk --------------------------------------------------------------
+
+    def cost_of(self, name: str) -> Cost:
+        if name in self._memo:
+            return self._memo[name]
+        self._memo[name] = Cost()  # break cycles defensively
+        comp = self.comps[name]
+        c = Cost()
+        for op in comp.ops.values():
+            ob = self._op_bytes(comp, op)
+            c.bytes += ob
+            if ob:
+                meta_b = _OPNAME_META.search(op.attrs)
+                c.bytes_by_opname[
+                    (op.kind, meta_b.group(1) if meta_b else op.name)] += ob
+            if op.kind == "dot":
+                df = self._dot_flops(comp, op)
+                c.flops += df
+                meta_f = _OPNAME_META.search(op.attrs)
+                c.flops_by_opname[
+                    meta_f.group(1) if meta_f else op.name] += df
+            elif op.kind == "fusion":
+                m = _CALLS.search(op.attrs)
+                if m and m.group(1) in self.comps:
+                    c.flops += self._flops_only(m.group(1))
+            elif op.kind == "while":
+                b, cond = _BODY.search(op.attrs), _COND.search(op.attrs)
+                trips = self._trip_count(op)
+                if b and b.group(1) in self.comps:
+                    c.add(self.cost_of(b.group(1)), mult=trips)
+                if cond and cond.group(1) in self.comps:
+                    c.add(self.cost_of(cond.group(1)), mult=trips + 1)
+            elif op.kind == "call":
+                m = _TO_APPLY.search(op.attrs)
+                if m and m.group(1) in self.comps:
+                    c.add(self.cost_of(m.group(1)))
+            elif op.kind == "conditional":
+                for br in re.findall(r"%([\w.\-]+)", op.attrs):
+                    if br in self.comps:
+                        c.add(self.cost_of(br))
+            if op.kind in COLLECTIVES:
+                nbytes = float(_shape_bytes(op.shape))
+                c.coll_bytes += nbytes
+                c.coll_by_kind[op.kind] += nbytes
+                meta = _OPNAME_META.search(op.attrs)
+                key = meta.group(1) if meta else op.name
+                c.coll_by_opname[key] += nbytes
+        self._memo[name] = c
+        return c
+
+    def total(self) -> Cost:
+        return self.cost_of(self.entry.name)
+
+
+def module_costs(hlo_text: str) -> Cost:
+    return ModuleCosts(hlo_text).total()

@@ -1,0 +1,73 @@
+"""Serving: batched prefill + decode over the per-arch cache pytree.
+
+Cache kinds (models/transformer.init_cache):
+  full attention  -> (B, max_seq, KV, hd) per layer, seq shardable over
+                     'data' for long contexts (the SP decode path);
+  sliding window  -> ring buffer of `window` slots;
+  SSM / RG-LRU    -> O(1) recurrent state.
+
+`generate` is the end-to-end driver: greedy (or temperature) sampling
+with the decode loop as a host loop of jitted steps — each step is one
+XLA program, so serving latency is step-latency x tokens.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_seq: int
+    batch: int
+    compute_dtype: object = jnp.bfloat16
+    cache_dtype: object = jnp.bfloat16
+
+
+def init_cache(cfg: ArchConfig, scfg: ServeConfig):
+    return T.init_cache(cfg, T.CacheSpec(scfg.max_seq, scfg.batch),
+                        dtype=scfg.cache_dtype)
+
+
+def make_prefill_step(cfg: ArchConfig, scfg: ServeConfig):
+    def prefill_step(params, tokens, cache, embeds=None):
+        return T.prefill(params, cfg, tokens, cache, embeds=embeds,
+                         compute_dtype=scfg.compute_dtype)
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, scfg: ServeConfig):
+    def decode_step(params, cache, token):
+        return T.decode_step(params, cfg, cache, token,
+                             compute_dtype=scfg.compute_dtype)
+    return decode_step
+
+
+def generate(params, cfg: ArchConfig, scfg: ServeConfig, prompt: jax.Array,
+             n_tokens: int, *, temperature: float = 0.0, key=None,
+             embeds=None):
+    """prompt (B, S_prompt) int32 -> (B, n_tokens) greedy/sampled tokens."""
+    prefill_step = jax.jit(make_prefill_step(cfg, scfg))
+    decode_step = jax.jit(make_decode_step(cfg, scfg))
+    cache = init_cache(cfg, scfg)
+    logits, cache = prefill_step(params, prompt, cache, embeds)
+
+    outs = []
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    for i in range(n_tokens):
+        outs.append(tok)
+        logits, cache = decode_step(params, cache, tok)
+        if temperature > 0.0:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(
+                sub, logits[:, -1] / temperature)[:, None].astype(jnp.int32)
+        else:
+            tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    return jnp.concatenate(outs, axis=1)

@@ -1,0 +1,142 @@
+"""train_step builder: loss, grad-accumulation microbatching, AdamW.
+
+Distribution posture (DESIGN.md §4):
+  * params/grads are bf16 -> GSPMD's gradient all-reduces move half the
+    bytes (the "gradient compression" trick); moments/master are fp32;
+  * microbatches run as a `lax.scan` with an fp32 grad accumulator, so
+    global_batch scales without activation memory scaling;
+  * remat is inside the model (checkpointed scan body per layer period);
+  * the whole step is one jit — XLA's latency-hiding scheduler overlaps
+    the backward all-reduces with remaining compute.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import sharding as shd
+from repro.dist.sharding import constrain
+from repro.models import transformer as T
+from repro.models.config import ArchConfig
+from repro.optim import adamw
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1
+    compute_dtype: Any = jnp.bfloat16
+    aux_weight: float = 0.01          # MoE load-balance loss weight
+    optimizer: adamw.AdamWConfig = adamw.AdamWConfig()
+    # §Perf iteration 1 (EXPERIMENTS.md): constrain the fp32 grad
+    # accumulator to the params' PartitionSpecs.  Without it GSPMD keeps
+    # the scan carry replicated and all-reduces full f32 gradients every
+    # microbatch trip (measured 2.0 TB/device/step on mistral-large);
+    # with it the reductions become reduce-scatters into the FSDP shards.
+    shard_grad_accum: bool = True
+
+
+def init_state(key, cfg: ArchConfig, tcfg: TrainConfig) -> dict:
+    params_f32 = T.init_params(key, cfg)
+    params = jax.tree.map(lambda p: p.astype(tcfg.compute_dtype), params_f32)
+    return {"params": params, "opt": adamw.init_state(params_f32)}
+
+
+def _split_batch(batch: dict, cfg: ArchConfig):
+    """(inputs, labels, extras) from a host batch dict."""
+    if cfg.embed_inputs:
+        return {"embeds": batch["embeds"]}, batch["labels"]
+    toks = batch["tokens"]
+    inputs = {"tokens": toks[:, :-1]}
+    labels = toks[:, 1:]
+    if cfg.prefix_tokens:
+        inputs["embeds"] = batch["pixel_embeds"]
+    return inputs, labels
+
+
+def make_loss_fn(cfg: ArchConfig, tcfg: TrainConfig):
+    def loss_fn(params, inputs, labels):
+        logits, aux = T.forward(
+            params, cfg, inputs.get("tokens"), embeds=inputs.get("embeds"),
+            compute_dtype=tcfg.compute_dtype)
+        if cfg.prefix_tokens:       # VLM: loss only on text positions
+            logits = logits[:, cfg.prefix_tokens:]
+        logits = logits.astype(jnp.float32)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ll = jnp.take_along_axis(logp, labels[..., None].astype(jnp.int32),
+                                 axis=-1)[..., 0]
+        ce = -jnp.mean(ll)
+        return ce + tcfg.aux_weight * aux, (ce, aux)
+    return loss_fn
+
+
+def make_train_step(cfg: ArchConfig, tcfg: TrainConfig):
+    """Returns train_step(state, batch) -> (state, metrics); jit it with
+    donate_argnums=(0,) and the state's shardings."""
+    loss_fn = make_loss_fn(cfg, tcfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def _constrain_like_params(tree, params):
+        mesh = shd.active_mesh()
+        if mesh is None or not tcfg.shard_grad_accum:
+            return tree
+        pspecs = shd.params_pspecs(params, mesh)
+        return jax.tree.map(
+            lambda t, s: jax.lax.with_sharding_constraint(
+                t, jax.sharding.NamedSharding(mesh, s)), tree, pspecs)
+
+    def train_step(state: dict, batch: dict):
+        params = state["params"]
+        inputs, labels = _split_batch(batch, cfg)
+        n_micro = tcfg.microbatches
+
+        def reshape_micro(x):
+            b = x.shape[0]
+            return x.reshape((n_micro, b // n_micro) + x.shape[1:])
+
+        micro_inputs = jax.tree.map(reshape_micro, inputs)
+        micro_labels = reshape_micro(labels)
+
+        def micro_step(acc, inp):
+            mb_in, mb_lab = inp
+            (loss, (ce, aux)), grads = grad_fn(params, mb_in, mb_lab)
+            grads32 = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), acc["g"], grads)
+            grads32 = _constrain_like_params(grads32, params)
+            return {"g": grads32, "loss": acc["loss"] + loss,
+                    "ce": acc["ce"] + ce, "aux": acc["aux"] + aux}, None
+
+        zeros = _constrain_like_params(
+            jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            params)
+        acc0 = {"g": zeros, "loss": jnp.zeros((), jnp.float32),
+                "ce": jnp.zeros((), jnp.float32),
+                "aux": jnp.zeros((), jnp.float32)}
+        if n_micro == 1:
+            acc, _ = micro_step(acc0, (jax.tree.map(lambda x: x[0], micro_inputs),
+                                       micro_labels[0]))
+        else:
+            acc, _ = jax.lax.scan(micro_step, acc0,
+                                  (micro_inputs, micro_labels))
+        grads = jax.tree.map(lambda g: g / n_micro, acc["g"])
+        new_params, new_opt, om = adamw.apply_updates(
+            tcfg.optimizer, state["opt"], grads,
+            param_dtype=tcfg.compute_dtype)
+        metrics = {
+            "loss": acc["loss"] / n_micro,
+            "ce": acc["ce"] / n_micro,
+            "aux": acc["aux"] / n_micro,
+            **om,
+        }
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def device_batch(batch: dict) -> dict:
+    return jax.tree.map(jnp.asarray, batch)

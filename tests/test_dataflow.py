@@ -1,0 +1,75 @@
+"""Property tests for Eq. (1) logical-shape enumeration and dataflows."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dataflow import (ALL_DATAFLOWS, Dataflow, LogicalShape,
+                                 bypass_cycles, enumerate_logical_shapes,
+                                 n_logical_shapes, pe_usage,
+                                 subarray_decomposition, tile_dims_for)
+
+even_sides = st.integers(min_value=1, max_value=64).map(lambda k: 2 * k)
+
+
+@given(even_sides)
+@settings(max_examples=50, deadline=None)
+def test_shape_count_matches_closed_form(r_p):
+    shapes = enumerate_logical_shapes(r_p)
+    assert len(shapes) == n_logical_shapes(r_p) == r_p + 1
+    assert len(set(shapes)) == len(shapes)  # no duplicates
+
+
+@given(even_sides)
+@settings(max_examples=50, deadline=None)
+def test_shapes_satisfy_eq1(r_p):
+    for s in enumerate_logical_shapes(r_p):
+        wide = 0 < s.rows <= r_p // 2 and s.cols == 4 * (r_p - s.rows)
+        tall = 0 < s.cols <= r_p // 2 and s.rows == 4 * (r_p - s.cols)
+        native = s.rows == s.cols == r_p
+        assert wide or tall or native
+        # reshaped shapes never exceed the physical PE count
+        (r_s, c_s), n = subarray_decomposition(s, r_p)
+        assert r_s * c_s * n <= r_p * r_p
+        assert 0 < pe_usage(s, r_p) <= 1.0
+
+
+@given(even_sides, st.integers(min_value=1, max_value=8))
+@settings(max_examples=50, deadline=None)
+def test_granularity_restricts_multiples(r_p, g):
+    for s in enumerate_logical_shapes(r_p, granularity=g):
+        if s.rows == s.cols == r_p:
+            continue
+        assert min(s.rows, s.cols) % g == 0
+
+
+def test_paper_6x6_example():
+    got = {str(s) for s in enumerate_logical_shapes(6)}
+    assert got == {"1x20", "20x1", "2x16", "16x2", "3x12", "12x3", "6x6"}
+
+
+def test_paper_128_count():
+    assert n_logical_shapes(128) == 129  # the paper's headline count
+    assert n_logical_shapes(128, granularity=4) == 33
+
+
+@given(even_sides)
+@settings(max_examples=30, deadline=None)
+def test_bypass_cycles(r_p):
+    for s in enumerate_logical_shapes(r_p):
+        b = bypass_cycles(s)
+        assert b == (0 if s.is_square else 4 * min(s.rows, s.cols))
+
+
+def test_tile_dims_pin_two_of_three():
+    s = LogicalShape(16, 448)
+    for df in ALL_DATAFLOWS:
+        dims = tile_dims_for(df, s)
+        pinned = {k for k in dims if k.endswith("_t")}
+        assert len(pinned) == 2 and dims["free"] not in pinned
+
+
+def test_invalid_physical_sides():
+    with pytest.raises(ValueError):
+        enumerate_logical_shapes(7)
+    with pytest.raises(ValueError):
+        enumerate_logical_shapes(0)

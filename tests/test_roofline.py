@@ -1,0 +1,93 @@
+"""Roofline: loop-aware HLO walker vs known-FLOPs programs; term math."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline import analysis, hlo_costs
+
+
+def test_walker_multiplies_scan_trips():
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        out, _ = jax.lax.scan(body, x, None, length=14)
+        return out
+
+    x, w = jnp.zeros((256, 512)), jnp.zeros((512, 512))
+    comp = jax.jit(f).lower(x, w).compile()
+    cost = hlo_costs.module_costs(comp.as_text())
+    assert cost.flops == pytest.approx(2 * 256 * 512 * 512 * 14)
+    # XLA's own analysis counts the body once — the walker must not
+    raw = analysis.raw_cost_analysis(comp)
+    assert raw["flops"] < cost.flops / 10
+
+
+def test_walker_nested_scans():
+    def f(x, w):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ w, None
+            c2, _ = jax.lax.scan(inner, c, None, length=3)
+            return c2, None
+        out, _ = jax.lax.scan(outer, x, None, length=5)
+        return out
+
+    x, w = jnp.zeros((64, 64)), jnp.zeros((64, 64))
+    comp = jax.jit(f).lower(x, w).compile()
+    cost = hlo_costs.module_costs(comp.as_text())
+    assert cost.flops == pytest.approx(2 * 64 ** 3 * 15)
+
+
+def test_walker_plain_matmul():
+    comp = jax.jit(lambda a, b: a @ b).lower(
+        jnp.zeros((128, 256)), jnp.zeros((256, 64))).compile()
+    cost = hlo_costs.module_costs(comp.as_text())
+    assert cost.flops == pytest.approx(2 * 128 * 256 * 64)
+    assert cost.bytes >= (128 * 256 + 256 * 64 + 128 * 64) * 4
+
+
+def test_collective_parse_fixture():
+    text = """
+ENTRY %main (p: f32[16,16]) -> f32[16,16] {
+  %p = f32[16,16]{1,0} parameter(0)
+  %ag = f32[64,16]{1,0} all-gather(%p), replica_groups={}, dimensions={0}
+  %ar = f32[16,16]{1,0} all-reduce(%p), to_apply=%add
+  ROOT %out = f32[16,16]{1,0} add(%p, %p)
+}
+"""
+    c = hlo_costs.module_costs(text)
+    assert c.coll_by_kind["all-gather"] == 64 * 16 * 4
+    assert c.coll_by_kind["all-reduce"] == 16 * 16 * 4
+
+
+def test_roofline_terms_and_bottleneck():
+    r = analysis.Roofline(
+        flops_per_device=197e12,        # exactly 1s of compute
+        hbm_bytes_per_device=819e9 / 2,  # 0.5s memory
+        coll_bytes_per_device=50e9 / 4,  # 0.25s collective
+        model_flops_per_device=98.5e12)
+    assert r.compute_s == pytest.approx(1.0)
+    assert r.memory_s == pytest.approx(0.5)
+    assert r.collective_s == pytest.approx(0.25)
+    assert r.bottleneck == "compute"
+    assert r.useful_flops_ratio == pytest.approx(0.5)
+    assert r.roofline_fraction == pytest.approx(0.5)
+
+
+def test_model_flops_kinds():
+    from repro.configs import get_config
+    from repro.configs.shapes import SHAPES
+    cfg = get_config("qwen2-1.5b")
+    n = cfg.param_count()
+    t = analysis.model_flops(cfg, SHAPES["train_4k"])
+    assert t == pytest.approx(6.0 * n * 256 * 4096)
+    p = analysis.model_flops(cfg, SHAPES["prefill_32k"])
+    assert p == pytest.approx(2.0 * n * 32 * 32768)
+    d = analysis.model_flops(cfg, SHAPES["decode_32k"])
+    assert d == pytest.approx(2.0 * n * 128)
+    # MoE: active params, not total
+    mx = get_config("mixtral-8x7b")
+    assert analysis.model_flops(mx, SHAPES["train_4k"]) < \
+        6.0 * mx.param_count() * 256 * 4096

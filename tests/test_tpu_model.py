@@ -1,0 +1,50 @@
+"""Plane-2 TPU cost model: constraints, traffic accounting, search."""
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.tpu_model import (MXU, VMEM, TPUKernelConfig,
+                                  choose_kernel_config, estimate,
+                                  fixed_square_cost, hbm_traffic)
+
+dims = st.integers(1, 8192)
+
+
+@given(dims, dims, dims)
+@settings(max_examples=25, deadline=None)
+def test_chosen_config_fits_vmem_and_beats_fixed(m, k, n):
+    cfg = choose_kernel_config(m, k, n)
+    assert cfg.vmem_bytes() <= VMEM
+    opt = estimate(m, k, n, cfg)
+    fix = fixed_square_cost(m, k, n)
+    assert opt.seconds <= fix.seconds * 1.0001
+    assert 0 < opt.mxu_utilization <= 1.0 + 1e-9
+
+
+def test_os_traffic_writes_output_once():
+    cfg = TPUKernelConfig("os", 128, 128, 128)
+    t = hbm_traffic(1024, 1024, 1024, cfg)
+    # A refetched per n-trip (8), B per m-trip (8), O once
+    assert t == 1024 * 1024 * 2 * 8 * 2 + 1024 * 1024 * 2
+
+
+def test_ws_traffic_streams_partials():
+    cfg = TPUKernelConfig("ws", 128, 128, 128)
+    t_1k = hbm_traffic(1024, 128, 1024, cfg)   # gk=1: no partial stream
+    t_2k = hbm_traffic(1024, 256, 1024, cfg)   # gk=2: f32 partials round-trip
+    acc_extra = 1024 * 1024 * 4 * 2            # one extra read+write
+    assert t_2k > t_1k + acc_extra * 0.9
+
+
+def test_skinny_gemm_prefers_nonsquare():
+    cfg = choose_kernel_config(43264, 144, 32)
+    assert (cfg.bm, cfg.bn) != (MXU, MXU)
+    opt = estimate(43264, 144, 32, cfg)
+    fix = fixed_square_cost(43264, 144, 32)
+    assert fix.seconds / opt.seconds > 1.2  # the ReDas effect on TPU
+
+
+def test_padding_efficiency_accounting():
+    c = estimate(100, 100, 100, TPUKernelConfig("os", 128, 128, 128))
+    assert c.padding_efficiency < 0.5  # heavy padding waste visible
+    c2 = estimate(128, 128, 128, TPUKernelConfig("os", 128, 128, 128))
+    assert c2.padding_efficiency == 1.0
