@@ -1,0 +1,20 @@
+"""Distribution plane: named-axis sharding rules + elastic resharding.
+
+The package between the model/optimizer plane and every distributed
+entry point (launch/train, launch/serve, launch/dryrun, launch/specs):
+
+  sharding  mesh context (`use_mesh` / `active_mesh`), logical-axis
+            activation specs (`spec` / `constrain`), and the auto
+            param-sharding rule table (`_auto_spec`,
+            `params_pspecs` / `params_shardings`) — DESIGN.md §5;
+  reshard   elastic checkpoint restore onto a different mesh shape
+            (DESIGN.md §4).
+
+Everything degrades to replication on a single device, so the same
+model/train/serve code runs unchanged from a laptop CPU to a multi-pod
+mesh.
+"""
+
+from . import reshard, sharding
+
+__all__ = ["reshard", "sharding"]

@@ -1,0 +1,41 @@
+"""Elastic resharding: move a state pytree onto a (different) mesh.
+
+The checkpoint layer saves host-side arrays keyed by pytree path with no
+record of the mesh they were computed on (checkpoint/checkpoint.py,
+DESIGN.md §4).  Restoring therefore only needs the *target* placement:
+`elastic_restore` derives it from the auto rule table on the target
+mesh, so a run saved on a (4, 2) mesh restarts bit-identically on a
+(2, 4) — or any other — mesh shape.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+from repro.checkpoint import checkpoint as _ckpt_lib
+
+from . import sharding
+
+
+def reshard(tree, shardings):
+    """device_put every leaf onto its target sharding (host -> device or
+    device -> device; XLA inserts the collective moves)."""
+    return jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)
+
+
+def elastic_restore(ckpt, step: int, like, mesh: Mesh):
+    """Restore checkpoint `step` placed for `mesh`, whatever mesh shape
+    it was saved under.
+
+    `like` is the abstract state tree (jax.eval_shape of the init);
+    placement comes from sharding.params_shardings on the target mesh."""
+    return ckpt.restore(step, like, sharding.params_shardings(like, mesh))
+
+
+def resume_or_init(ckpt, init_fn, mesh: Mesh | None = None):
+    """checkpoint.resume_or_init with placement derived from `mesh` via
+    the auto rule table — the elastic-restart entry point."""
+    shardings = (sharding.params_shardings(jax.eval_shape(init_fn), mesh)
+                 if mesh is not None else None)
+    return _ckpt_lib.resume_or_init(ckpt, init_fn, shardings)

@@ -1,0 +1,232 @@
+"""Named-axis sharding rules: the TP/FSDP/EP plane (DESIGN.md §5).
+
+Two rule tables drive every placement decision in the repo:
+
+1.  Activations are constrained by *logical* axis names (MaxText-style):
+    model code says what a dimension *is* ("batch", "heads", "residual")
+    and `LOGICAL_AXIS_RULES` says which mesh axes that meaning may shard
+    over.  `spec()` resolves names -> `PartitionSpec` with two safety
+    degradations, so the same constraint works on any mesh:
+      * divisibility — a dim that does not divide the mesh-axis product
+        replicates instead (e.g. long_500k's batch=1 frees 'data' for
+        the kv sequence dim);
+      * dedup — a mesh axis already consumed by an earlier dim of the
+        same spec is skipped (a PartitionSpec may not repeat axes).
+
+2.  Parameters are sharded by *name pattern* via `_auto_spec`.  The rule
+    table (first match wins, matched on the '/'-joined key path):
+
+    | pattern             | rule                                        |
+    |---------------------|---------------------------------------------|
+    | ndim <= 1           | replicate (norms, biases, scalars)          |
+    | last part == embed  | vocab dim (dim 0) on 'model' iff divisible; |
+    |                     | the gathered feature dim is NEVER sharded   |
+    |                     | (spec has a single entry)                   |
+    | stack/...           | leading stacked-layer axis NEVER sharded;   |
+    |                     | remaining dims fall through to the rules    |
+    |                     | below, shifted by one                       |
+    | .../experts/...     | expert dim (first unstacked dim) on 'model' |
+    |                     | (expert parallelism); the d_model dim on    |
+    |                     | 'data' (FSDP, wi/wg dim 1 / wo last dim);   |
+    |                     | d_ff replicated                             |
+    | any other matmul    | last dim on 'model' (tensor parallelism),   |
+    |                     | second-to-last on 'data' (FSDP)             |
+
+    Every entry degrades to `None` independently when the dim does not
+    divide the mesh axis.  Optimizer moments (opt/mu/..., opt/nu/...,
+    opt/master/...) contain their parameter's key path as a suffix, so
+    they inherit its spec for free — optimizer state is sharded exactly
+    as its parameter (optim/adamw.py).
+
+Mesh axes (launch/mesh.py): 'data' (batch + FSDP), 'model' (TP/EP),
+optional 'pod' (composes with 'data' for batch parallelism).  All
+helpers treat a missing or size-1 axis as "do not shard".
+"""
+
+from __future__ import annotations
+
+import contextlib
+import math
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Mesh context
+# ---------------------------------------------------------------------------
+
+_MESH_STACK: list[Mesh] = []
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh):
+    """Make `mesh` the active mesh for `constrain` within the block.
+
+    Single-controller convention: the stack is process-global (jit
+    tracing happens on the thread that entered the context)."""
+    _MESH_STACK.append(mesh)
+    try:
+        yield mesh
+    finally:
+        _MESH_STACK.pop()
+
+
+def active_mesh() -> Mesh | None:
+    return _MESH_STACK[-1] if _MESH_STACK else None
+
+
+# ---------------------------------------------------------------------------
+# Activation specs: logical axis names -> mesh axes
+# ---------------------------------------------------------------------------
+
+LOGICAL_AXIS_RULES: dict[str, tuple[str, ...]] = {
+    "batch":    ("pod", "data"),
+    "seq":      ("data",),
+    "seq_kv":   ("data",),    # long-context: kv sequence over 'data' (SP)
+    "embed":    ("model",),
+    "residual": ("model",),   # remat carry / context parallelism
+    "vocab":    ("model",),
+    "heads":    ("model",),
+    "kv_heads": ("model",),
+    "mlp":      ("model",),
+    "experts":  ("model",),
+}
+
+
+def spec(shape, names, mesh: Mesh) -> P:
+    """Resolve logical axis `names` (str | None per dim) to a
+    PartitionSpec for an array of `shape` on `mesh`.
+
+    Divisibility-safe: a name resolves to the longest suffix of its rule
+    tuple whose axis-size product divides the dim (so 'batch' drops
+    'pod' before 'data'); anything that still does not fit, or whose
+    mesh axes were consumed by an earlier dim, replicates."""
+    sizes = dict(mesh.shape)
+    used: set[str] = set()
+    entries = []
+    for dim, name in zip(shape, names):
+        if name is None:
+            entries.append(None)
+            continue
+        if name not in LOGICAL_AXIS_RULES:
+            raise ValueError(
+                f"unknown logical axis {name!r}; add it to "
+                f"LOGICAL_AXIS_RULES (DESIGN.md §5)")
+        axes = tuple(a for a in LOGICAL_AXIS_RULES[name]
+                     if sizes.get(a, 1) > 1 and a not in used)
+        picked: tuple[str, ...] | None = None
+        for i in range(len(axes)):
+            cand = axes[i:]
+            if dim % math.prod(sizes[a] for a in cand) == 0:
+                picked = cand
+                break
+        if picked:
+            used.update(picked)
+            entries.append(picked[0] if len(picked) == 1 else picked)
+        else:
+            entries.append(None)
+    return P(*entries)
+
+
+def constrain(x, *names):
+    """with_sharding_constraint under the active mesh; identity (the
+    same object) when no mesh is active — model code calls this
+    unconditionally and stays single-device-clean."""
+    mesh = active_mesh()
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec(x.shape, names, mesh)))
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs: name patterns -> mesh axes
+# ---------------------------------------------------------------------------
+
+
+def _path_name(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:  # pragma: no cover - GetAttrKey etc.
+            parts.append(str(getattr(p, "name", p)))
+    return "/".join(parts)
+
+
+def _auto_spec(name: str, shape, sizes: dict[str, int]) -> tuple:
+    """Param-name pattern -> per-dim mesh-axis tuple (see the module
+    docstring's rule table; trailing None entries may be omitted —
+    PartitionSpec pads with replication)."""
+    data = sizes.get("data", 1)
+    model = sizes.get("model", 1)
+    ndim = len(shape)
+    if ndim <= 1:
+        return ()
+    off = 1 if (name.startswith("stack/") or "/stack/" in name) else 0
+    if off == 0 and name.rsplit("/", 1)[-1] == "embed":
+        if model > 1 and shape[0] % model == 0:
+            return ("model",)
+        return ()
+    specs = [None] * ndim
+    if "experts/" in name and ndim - off >= 3:
+        if model > 1 and shape[off] % model == 0:
+            specs[off] = "model"
+        # FSDP the d_model dim: last for wo (E, d_ff, d_model), first
+        # non-expert dim for wi/wg (E, d_model, d_ff).
+        d_model_dim = ndim - 1 if name.rsplit("/", 1)[-1] == "wo" else off + 1
+        if data > 1 and shape[d_model_dim] % data == 0:
+            specs[d_model_dim] = "data"
+        return tuple(specs)
+    if ndim - off >= 2:
+        if model > 1 and shape[-1] % model == 0:
+            specs[-1] = "model"
+        if data > 1 and shape[-2] % data == 0:
+            specs[-2] = "data"
+    return tuple(specs)
+
+
+def params_pspecs(tree, mesh: Mesh):
+    """Same-structure tree of PartitionSpec for a params/opt-state tree
+    (leaves: arrays or ShapeDtypeStructs)."""
+    sizes = dict(mesh.shape)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: P(*_auto_spec(_path_name(path),
+                                         tuple(leaf.shape), sizes)),
+        tree)
+
+
+def params_shardings(tree, mesh: Mesh):
+    """Same-structure tree of NamedSharding (for jit in_shardings /
+    device_put)."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        params_pspecs(tree, mesh))
+
+
+# ---------------------------------------------------------------------------
+# Cache specs (serving): slot-name -> logical axes
+# ---------------------------------------------------------------------------
+
+_CACHE_AXES = {
+    "k": (None, "batch", "seq_kv", "kv_heads", None),
+    "v": (None, "batch", "seq_kv", "kv_heads", None),
+    "conv": (None, "batch", None, None),
+    "state": (None, "batch", "heads", None, None),
+    "h": (None, "batch", "mlp"),
+}
+
+
+def cache_shardings(cache_tree, mesh: Mesh):
+    """Shardings for a models.transformer.init_cache pytree (abstract or
+    concrete).  Slots under 'tail' lack the leading stack dim."""
+    def visit(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        in_tail = any(getattr(p, "key", None) == "tail" for p in path)
+        axes = _CACHE_AXES.get(name)
+        if axes is None or leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        axes = axes[1:] if in_tail else axes
+        return NamedSharding(mesh, spec(leaf.shape, axes[:leaf.ndim], mesh))
+    return jax.tree_util.tree_map_with_path(visit, cache_tree)

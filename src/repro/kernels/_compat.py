@@ -1,0 +1,16 @@
+"""jax version compatibility for Pallas TPU symbols.
+
+jax renamed `pltpu.TPUCompilerParams` to `pltpu.CompilerParams` in 0.5;
+off-TPU builds may lack the tpu module entirely (interpret mode ignores
+compiler params, so callers treat None as "no params")."""
+
+try:
+    from jax.experimental.pallas import tpu as _pltpu
+except ImportError:  # pragma: no cover
+    _pltpu = None
+
+if _pltpu is None:  # pragma: no cover
+    CompilerParams = None
+else:
+    CompilerParams = getattr(_pltpu, "CompilerParams", None) or \
+        _pltpu.TPUCompilerParams

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import CompilerParams
+
 
 def _kernel(x_ref, w_ref, o_ref, acc_ref, *, n_d: int):
     @pl.when(pl.program_id(3) == 0)
@@ -60,7 +62,7 @@ def grouped_matmul(x: jax.Array, w: jax.Array, *, bc: int = 128,
         out_specs=pl.BlockSpec((1, bc, bf), lambda ee, i, j, k: (ee, i, j)),
         out_shape=jax.ShapeDtypeStruct((e, cp, fp), x.dtype),
         scratch_shapes=[pltpu.VMEM((bc, bf), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

@@ -52,6 +52,8 @@ try:  # TPU compiler params are optional off-TPU (interpret mode ignores them)
 except ImportError:  # pragma: no cover
     pltpu = None
 
+from ._compat import CompilerParams
+
 DataflowName = Literal["os", "ws", "is"]
 
 # TPU v5e tiling floor for f32/bf16 operands: (sublane, lane).
@@ -107,10 +109,10 @@ def _streaming_kernel(a_ref, b_ref, acc_ref, o_ref):
 
 
 def _compiler_params(n_axes: int):
-    if pltpu is None:
+    if CompilerParams is None:
         return None
     # Revisited output blocks require sequential ("arbitrary") grid axes.
-    return pltpu.CompilerParams(dimension_semantics=("arbitrary",) * n_axes)
+    return CompilerParams(dimension_semantics=("arbitrary",) * n_axes)
 
 
 @functools.partial(

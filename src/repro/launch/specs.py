@@ -10,7 +10,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding
 
 from repro.configs.shapes import ShapeSpec
 from repro.dist import sharding as shd
@@ -44,27 +44,9 @@ def batch_specs(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh):
     return sds, sh
 
 
-_CACHE_AXES = {
-    "k": (None, "batch", "seq_kv", "kv_heads", None),
-    "v": (None, "batch", "seq_kv", "kv_heads", None),
-    "conv": (None, "batch", None, None),
-    "state": (None, "batch", "heads", None, None),
-    "h": (None, "batch", "mlp"),
-}
-
-
-def cache_shardings(cache_tree, mesh: Mesh):
-    """Shardings for an init_cache pytree (abstract or concrete)."""
-    def visit(path, leaf):
-        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
-        in_tail = any(getattr(p, "key", None) == "tail" for p in path)
-        axes = _CACHE_AXES.get(name)
-        if axes is None or leaf.ndim == 0:
-            return NamedSharding(mesh, P())
-        axes = axes[1:] if in_tail else axes  # tail slots lack the stack dim
-        axes = axes[:leaf.ndim]
-        return _ns(mesh, leaf.shape, axes)
-    return jax.tree_util.tree_map_with_path(visit, cache_tree)
+# Cache slot-name -> logical-axis rules live with the rest of the
+# sharding tables in dist/sharding.py (DESIGN.md §5).
+cache_shardings = shd.cache_shardings
 
 
 def abstract_train_state(cfg: ArchConfig, tcfg: train_lib.TrainConfig):

@@ -22,7 +22,7 @@ import numpy as np
 from repro.checkpoint.checkpoint import Checkpointer
 from repro.configs import ARCH_NAMES, get_config
 from repro.data.pipeline import DataConfig, make_source
-from repro.dist import sharding as shd
+from repro.dist import reshard, sharding as shd
 from repro.launch.mesh import make_test_mesh
 from repro.optim.adamw import AdamWConfig
 from repro.optim.schedule import linear_warmup_cosine
@@ -61,23 +61,29 @@ def main(argv=None) -> dict:
                          args.data_path)
 
     with mesh, shd.use_mesh(mesh):
-        state = train_lib.init_state(jax.random.PRNGKey(args.seed), cfg, tcfg)
-        state_sh = shd.params_shardings(state, mesh)
-        state = jax.tree.map(jax.device_put, state, state_sh)
+        def init_fn():
+            return train_lib.init_state(jax.random.PRNGKey(args.seed), cfg,
+                                        tcfg)
+
+        state_sh = shd.params_shardings(jax.eval_shape(init_fn), mesh)
         step_fn = jax.jit(train_lib.make_train_step(cfg, tcfg),
                           in_shardings=(state_sh, None),
                           donate_argnums=(0,))
 
-        start = 0
         ckpt = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
         if ckpt and args.resume == "auto":
-            latest = ckpt.latest_step()
-            if latest is not None:
-                like = jax.eval_shape(lambda: train_lib.init_state(
-                    jax.random.PRNGKey(args.seed), cfg, tcfg))
-                state = ckpt.restore(latest, like, state_sh)
-                start = latest
-                print(f"resumed from step {latest}")
+            # Elastic: the checkpoint may come from any mesh shape;
+            # placement is re-derived for *this* mesh (DESIGN.md §4).
+            start, state = reshard.resume_or_init(ckpt, init_fn, mesh)
+        else:
+            start, state = 0, init_fn()
+        if start:
+            print(f"resumed from step {start}")
+        if start >= args.steps:
+            print(f"checkpoint already at step {start} >= --steps "
+                  f"{args.steps}; nothing to train")
+            return {"final_ce": None, "first_ce": None, "steps": start}
+        state = reshard.reshard(state, state_sh)
 
         losses = []
         t0 = time.time()

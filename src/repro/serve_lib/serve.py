@@ -19,6 +19,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.dist import sharding as shd
 from repro.models import transformer as T
 from repro.models.config import ArchConfig
 
@@ -56,7 +57,18 @@ def generate(params, cfg: ArchConfig, scfg: ServeConfig, prompt: jax.Array,
     """prompt (B, S_prompt) int32 -> (B, n_tokens) greedy/sampled tokens."""
     prefill_step = jax.jit(make_prefill_step(cfg, scfg))
     decode_step = jax.jit(make_decode_step(cfg, scfg))
-    cache = init_cache(cfg, scfg)
+    mesh = shd.active_mesh()
+    if mesh is not None:
+        # Place params (TP/FSDP rule table) before the first step, and
+        # build the cache *born sharded* (seq over 'data') — a long-
+        # context cache may not fit any single device — DESIGN.md §5.
+        params = jax.device_put(params, shd.params_shardings(params, mesh))
+        cache_sh = shd.cache_shardings(
+            jax.eval_shape(lambda: init_cache(cfg, scfg)), mesh)
+        cache = jax.jit(lambda: init_cache(cfg, scfg),
+                        out_shardings=cache_sh)()
+    else:
+        cache = init_cache(cfg, scfg)
     logits, cache = prefill_step(params, prompt, cache, embeds)
 
     outs = []
