@@ -1,0 +1,175 @@
+"""Benchmark lane: batched mapper engine vs the scalar oracle + kernel benches.
+
+Times the vectorized search (`ReDasMapper`, the default) against the
+per-candidate scalar loop (`vectorized=False`) over the paper's Table-3
+DNN traces *and* the GEMM traces of every assigned LM architecture in
+``src/repro/configs``, plus kernel micro-benches (candidate-tensor
+evaluation, plane-2 config search, batched tile simulation).  Emits
+machine-readable ``BENCH_PR2.json`` rows ``{name, us_per_call,
+speedup_vs_scalar}`` and enforces the regression gate: batched and
+scalar chosen-mapping modeled cycles must agree per GEMM within 0.1%.
+
+    PYTHONPATH=src python -m benchmarks.bench [--smoke] [--out BENCH_PR2.json]
+                                              [--min-speedup 20]
+
+Exit code: 0 iff the parity gate (and, when given, --min-speedup) holds.
+The CI `bench` job runs ``--smoke`` and uploads the JSON artifact.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+PARITY_THRESHOLD = 1e-3  # 0.1% modeled-cycles divergence (the CI gate)
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# Paper Table-3 workloads benched per mode (abbr); arch traces always cover
+# every registered config — the acceptance gate spans src/repro/configs.
+PAPER_MODELS = {"smoke": ("TY", "VI"), "full": None}  # None -> all
+
+
+def _row(name: str, us_per_call: float, speedup) -> dict:
+    return {"name": name, "us_per_call": round(us_per_call, 3),
+            "speedup_vs_scalar": None if speedup is None else round(speedup, 3)}
+
+
+def _bench_mapper_suite(traces: dict, results: list, parity: dict) -> list[float]:
+    """Map every trace with both engines; record timing + per-GEMM parity."""
+    from repro.core.accelerators import SPECS
+    from repro.core.mapper import ReDasMapper
+
+    speedups = []
+    for name, gemms in traces.items():
+        t0 = time.perf_counter()
+        batched = ReDasMapper(SPECS["redas"]).map_model(gemms)
+        t_b = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        scalar = ReDasMapper(SPECS["redas"], vectorized=False).map_model(gemms)
+        t_s = time.perf_counter() - t0
+        div = max(
+            abs(db.report.cycles - ds.report.cycles) / ds.report.cycles
+            for db, ds in zip(batched.decisions, scalar.decisions))
+        speedups.append(t_s / t_b)
+        parity[name] = div
+        results.append(_row(f"mapper/{name}", t_b * 1e6 / len(gemms), t_s / t_b))
+        print(f"  mapper/{name:24s} batched {t_b * 1e3:8.1f} ms  "
+              f"scalar {t_s * 1e3:9.1f} ms  {t_s / t_b:7.1f}x  "
+              f"divergence {div:.2e}", flush=True)
+    return speedups
+
+
+def _bench_kernels(results: list, *, smoke: bool) -> None:
+    """Micro-benches of the engines under the mapper (no parity gate)."""
+    import numpy as np
+
+    from repro.core.accelerators import SPECS
+    from repro.core.analytical_model import GEMM
+    from repro.core.mapper import ReDasMapper
+
+    # candidate-tensor evaluation throughput (one full pruned space / call)
+    g = GEMM(43264, 144, 32, name="tinyyolo_l2")
+    mapper = ReDasMapper(SPECS["redas"])
+    reps = 20 if smoke else 100
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        mapper._search_batched(g)
+    us = (time.perf_counter() - t0) * 1e6 / reps
+    n_cand = len(mapper.candidate_batch(g))
+    results.append(_row(f"kernel/estimate_batch_{n_cand}cand", us, None))
+    print(f"  kernel/estimate_batch      {us:9.1f} us/search "
+          f"({n_cand} candidates)", flush=True)
+
+    # plane-2 TPU mapper search (interval-sampled ladder, lru-cached)
+    from repro.core.tpu_model import choose_kernel_config
+    choose_kernel_config.cache_clear()
+    t0 = time.perf_counter()
+    choose_kernel_config(12544, 147, 64)
+    us = (time.perf_counter() - t0) * 1e6
+    results.append(_row("kernel/tpu_choose_config", us, None))
+    print(f"  kernel/tpu_choose_config   {us:9.1f} us/search", flush=True)
+
+    # batched cycle-level tile simulation vs a per-tile Python loop
+    from repro.core.dataflow import Dataflow
+    from repro.core.simulator import simulate_gemm, simulate_gemm_batch
+    rng = np.random.default_rng(0)
+    n_tiles, side = (16, 8) if smoke else (64, 16)
+    a = rng.normal(size=(n_tiles, side, side))
+    b = rng.normal(size=(n_tiles, side, side))
+    simulate_gemm_batch(a, b, Dataflow.OS)  # jit warmup
+    simulate_gemm(a[0], b[0], Dataflow.OS)
+    t0 = time.perf_counter()
+    simulate_gemm_batch(a, b, Dataflow.OS)[0].block_until_ready()
+    t_b = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for i in range(n_tiles):
+        simulate_gemm(a[i], b[i], Dataflow.OS)[0].block_until_ready()
+    t_s = time.perf_counter() - t0
+    results.append(_row(f"kernel/simulate_tiles_x{n_tiles}",
+                        t_b * 1e6 / n_tiles, t_s / t_b))
+    print(f"  kernel/simulate_tiles      {t_b * 1e6 / n_tiles:9.1f} us/tile  "
+          f"{t_s / t_b:6.1f}x vs loop", flush=True)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: paper-model subset + smoke arch configs")
+    ap.add_argument("--out", default=os.path.join(ROOT, "BENCH_PR2.json"))
+    ap.add_argument("--min-speedup", type=float, default=0.0,
+                    help="fail unless the geomean mapper speedup reaches this")
+    ap.add_argument("--seq", type=int, default=None,
+                    help="arch-trace prefill length (default 512, smoke 128)")
+    args = ap.parse_args(argv)
+
+    from repro.core.workloads import WORKLOADS, arch_traces
+
+    mode = "smoke" if args.smoke else "full"
+    papers = PAPER_MODELS[mode] or tuple(WORKLOADS)
+    traces = {m: WORKLOADS[m].gemms for m in papers}
+    seq = args.seq or (128 if args.smoke else 512)
+    traces.update(arch_traces(smoke=args.smoke, seq_len=seq))
+
+    results: list[dict] = []
+    parity: dict[str, float] = {}
+    print(f"bench ({mode}): {len(traces)} mapper traces", flush=True)
+    speedups = _bench_mapper_suite(traces, results, parity)
+    _bench_kernels(results, smoke=args.smoke)
+
+    geo = 1.0
+    for s in speedups:
+        geo *= s
+    geo **= 1.0 / len(speedups)
+    max_div = max(parity.values())
+    gate_ok = max_div <= PARITY_THRESHOLD
+    speed_ok = geo >= args.min_speedup
+    payload = {
+        "bench": "BENCH_PR2",
+        "mode": mode,
+        "results": results,
+        "parity": {"threshold": PARITY_THRESHOLD, "max_divergence": max_div,
+                   "per_model": {k: round(v, 9) for k, v in parity.items()},
+                   "ok": gate_ok},
+        "summary": {"mapper_speedup_geomean": round(geo, 2),
+                    "min_speedup_gate": args.min_speedup or None,
+                    "speedup_ok": speed_ok},
+    }
+    with open(args.out, "w") as fh:
+        json.dump(payload, fh, indent=2)
+        fh.write("\n")
+    print(f"\nwrote {args.out}")
+    print(f"mapper speedup geomean: {geo:.1f}x   max divergence: {max_div:.2e}")
+    if not gate_ok:
+        print(f"FAIL: batched-vs-scalar divergence {max_div:.2e} > "
+              f"{PARITY_THRESHOLD}", file=sys.stderr)
+    if not speed_ok:
+        print(f"FAIL: speedup {geo:.1f}x < --min-speedup {args.min_speedup}",
+              file=sys.stderr)
+    return 0 if (gate_ok and speed_ok) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

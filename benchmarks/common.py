@@ -1,15 +1,20 @@
 """Shared benchmark plumbing: one mapping pass per (accelerator, DNN),
-cached for the whole process so every figure module reuses it."""
+cached for the whole process so every figure module reuses it.
+
+Mapping runs on the mapper's default *batched* search engine (flat
+candidate tensor + argmin); the scalar loop survives behind
+``ReDasMapper(..., vectorized=False)`` and is exercised (with a 0.1%
+parity gate) by benchmarks/bench.py."""
 
 from __future__ import annotations
 
 import functools
 import time
 
-from repro.core.accelerators import SPECS, AcceleratorSpec, make_specs
+from repro.core.accelerators import make_specs
 from repro.core.energy import EnergyReport, model_energy, vector_cycles
 from repro.core.mapper import ModelMapping, ReDasMapper
-from repro.core.workloads import WORKLOADS, Workload
+from repro.core.workloads import WORKLOADS
 
 ACCELERATORS = ("tpu", "gemmini", "planaria", "dynnamic", "sara", "redas")
 MODELS = tuple(WORKLOADS)  # RE EF TY FR VI BE GN DS

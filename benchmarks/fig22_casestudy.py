@@ -7,7 +7,7 @@ mapping; 75% of PEs active vs 25%."""
 from __future__ import annotations
 
 from repro.core.accelerators import SPECS
-from repro.core.analytical_model import GEMM, MappingConfig
+from repro.core.analytical_model import GEMM
 from repro.core.dataflow import Dataflow, LogicalShape, pe_usage
 from repro.core.mapper import ReDasMapper
 

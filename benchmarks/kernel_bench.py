@@ -7,7 +7,6 @@ mode on a scaled-down version of the same shape."""
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -1,5 +1,9 @@
 """Run every paper-table/figure benchmark; print name,us_per_call,derived
-CSV.  ``PYTHONPATH=src python -m benchmarks.run [--only fig11,...]``"""
+CSV.  ``PYTHONPATH=src python -m benchmarks.run [--only fig11,...] [--list]``
+
+Exit code is the number of failed modules (capped at 125 so it never
+collides with signal exit statuses); ``--list`` prints the module names
+and exits without importing anything heavy (no jax import)."""
 
 from __future__ import annotations
 
@@ -29,7 +33,12 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated module subset")
+    ap.add_argument("--list", action="store_true",
+                    help="print module names and exit (imports nothing)")
     args = ap.parse_args()
+    if args.list:
+        print("\n".join(MODULES))
+        return 0
     mods = args.only.split(",") if args.only else MODULES
     print("name,us_per_call,derived")
     failures = 0
@@ -42,7 +51,7 @@ def main() -> int:
             failures += 1
             print(f"{name},0,ERROR", flush=True)
             traceback.print_exc(file=sys.stderr)
-    return 1 if failures else 0
+    return min(failures, 125)  # exit status == failure count
 
 
 if __name__ == "__main__":

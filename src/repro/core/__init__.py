@@ -4,13 +4,15 @@ cycle-level functional simulator, the Table-3 workload traces, the
 energy/EDP/ADP model, and the plane-2 TPU v5e cost model."""
 
 from .accelerators import REDAS, SPECS, TPU, AcceleratorSpec, make_specs
-from .analytical_model import GEMM, AnalyticalModel, MappingConfig
+from .analytical_model import GEMM, LOOP_ORDERS, AnalyticalModel, MappingConfig
 from .dataflow import Dataflow, LogicalShape, enumerate_logical_shapes
-from .mapper import ReDasMapper
+from .mapper import CandidateBatch, ReDasMapper
+from .workloads import WORKLOADS, arch_gemms
 
 __all__ = [
     "REDAS", "SPECS", "TPU", "AcceleratorSpec", "make_specs",
-    "GEMM", "AnalyticalModel", "MappingConfig",
+    "GEMM", "LOOP_ORDERS", "AnalyticalModel", "MappingConfig",
     "Dataflow", "LogicalShape", "enumerate_logical_shapes",
-    "ReDasMapper",
+    "CandidateBatch", "ReDasMapper",
+    "WORKLOADS", "arch_gemms",
 ]

@@ -30,6 +30,15 @@ physical square (roundabout corner turns), else 0 (Sec. 4.2).
 The DRAM access-time functions T_r / T_w (Eq. 5) use the paper's
 linear-interpolation-over-prerecorded-latency approach: effective
 bandwidth ramps with DMA transaction size.
+
+Every piece of the model (reuse walk, DRAM ramp, Eq. 4 pipeline terms,
+Eq. 3 assembly) is written as a *shape-polymorphic* NumPy kernel: the
+same code evaluates one candidate (0-d arrays, the scalar oracle used by
+`AnalyticalModel.estimate`) or a flat tensor of thousands of candidates
+(`AnalyticalModel.estimate_batch`, the mapper's vectorized search
+engine).  Scalar and batched paths therefore agree bit-for-bit; the
+batched path is what makes full-model mapping cheap enough for compile
+time (DESIGN.md §Batched search engine).
 """
 
 from __future__ import annotations
@@ -38,7 +47,13 @@ import dataclasses
 import math
 from functools import lru_cache
 
+import numpy as np
+
 from .dataflow import Dataflow, LogicalShape, bypass_cycles
+
+# Canonical loop-order vocabulary (outermost -> innermost over 'mkn').
+# Batched candidates refer to orders by index into this tuple.
+LOOP_ORDERS: tuple[str, ...] = ("mnk", "mkn", "nmk", "nkm", "kmn", "knm")
 
 # ---------------------------------------------------------------------------
 # Workload and mapping-candidate descriptions
@@ -153,26 +168,33 @@ _DRAM_EFFICIENCY_TABLE: tuple[tuple[float, float], ...] = (
 )
 _DRAM_FIXED_LATENCY_CYCLES = 64.0  # CAS + controller queue at 700 MHz
 
-
-def dram_efficiency(nbytes: float) -> float:
-    """Piecewise-linear interpolation of effective-bandwidth fraction."""
-    table = _DRAM_EFFICIENCY_TABLE
-    if nbytes <= table[0][0]:
-        return table[0][1]
-    if nbytes >= table[-1][0]:
-        return table[-1][1]
-    for (x0, y0), (x1, y1) in zip(table, table[1:]):
-        if x0 <= nbytes <= x1:
-            t = (nbytes - x0) / (x1 - x0)
-            return y0 + t * (y1 - y0)
-    raise AssertionError("unreachable")
+_DRAM_X = np.array([p[0] for p in _DRAM_EFFICIENCY_TABLE])
+_DRAM_Y = np.array([p[1] for p in _DRAM_EFFICIENCY_TABLE])
 
 
-def dram_access_cycles(nbytes: float, peak_bytes_per_cycle: float) -> float:
-    """T_r(s) == T_w(s): fixed latency + size / effective bandwidth."""
-    if nbytes <= 0:
-        return 0.0
-    return _DRAM_FIXED_LATENCY_CYCLES + nbytes / (peak_bytes_per_cycle * dram_efficiency(nbytes))
+def dram_efficiency(nbytes):
+    """Piecewise-linear interpolation of effective-bandwidth fraction.
+
+    Shape-polymorphic: accepts a scalar or an ndarray of transaction
+    sizes (clamped to the table's ends, exact at the knots).
+    """
+    x = np.clip(np.asarray(nbytes, dtype=np.float64), _DRAM_X[0], _DRAM_X[-1])
+    i = np.clip(np.searchsorted(_DRAM_X, x, side="right") - 1, 0, len(_DRAM_X) - 2)
+    x0, y0 = _DRAM_X[i], _DRAM_Y[i]
+    t = (x - x0) / (_DRAM_X[i + 1] - x0)
+    out = y0 + t * (_DRAM_Y[i + 1] - y0)
+    return float(out) if np.ndim(nbytes) == 0 else out
+
+
+def dram_access_cycles(nbytes, peak_bytes_per_cycle: float):
+    """T_r(s) == T_w(s): fixed latency + size / effective bandwidth.
+
+    Shape-polymorphic like `dram_efficiency` (0 cycles for empty bursts).
+    """
+    cyc = _DRAM_FIXED_LATENCY_CYCLES + np.asarray(nbytes, dtype=np.float64) / (
+        peak_bytes_per_cycle * dram_efficiency(nbytes))
+    out = np.where(np.asarray(nbytes) <= 0, 0.0, cyc)
+    return float(out) if np.ndim(nbytes) == 0 else out
 
 
 # ---------------------------------------------------------------------------
@@ -180,12 +202,8 @@ def dram_access_cycles(nbytes: float, peak_bytes_per_cycle: float) -> float:
 # ---------------------------------------------------------------------------
 
 
-def _operand_fetch_count(
-    loop_order: str,
-    trips: dict[str, int],
-    index_dims: frozenset[str],
-    capacity_tiles: int,
-) -> int:
+def operand_fetch_count(loop_order: str, trips_m, trips_k, trips_n,
+                        index_dims: frozenset[str], capacity_tiles):
     """How many tile-granularity DRAM fetches operand X needs.
 
     Walking the 3-deep loop nest from innermost outward: a loop over a dim
@@ -194,39 +212,58 @@ def _operand_fetch_count(
     otherwise each trip of d re-fetches them.  Dims in `index_dims` always
     multiply (they address distinct tiles).  Matches an exhaustive LRU walk
     for all 6 orders (tested in tests/test_analytical_model.py).
+
+    Shape-polymorphic kernel: `trips_*` / `capacity_tiles` are ints (the
+    scalar oracle) or equal-shape int arrays (one element per candidate
+    sharing `loop_order`).  Returns -1 where the buffer cannot hold one
+    tile (invalid mapping).
     """
-    if capacity_tiles < 1:
-        return -1  # cannot even hold one tile -> invalid mapping
-    fetches = 1
-    working_set = 1  # distinct X tiles touched by loops inner to current
+    trips = {"m": trips_m, "k": trips_k, "n": trips_n}
+    cap = np.asarray(capacity_tiles, dtype=np.int64)
+    fetches = np.ones_like(cap)
+    working_set = np.ones_like(cap)  # distinct X tiles touched inner to current
     for dim in reversed(loop_order):  # innermost -> outermost
-        n = trips[dim]
+        n = np.asarray(trips[dim], dtype=np.int64)
         if dim in index_dims:
-            fetches *= n
-            working_set *= n
+            fetches = fetches * n
+            working_set = working_set * n
         else:
-            if working_set > capacity_tiles:
-                fetches *= n  # no reuse across this loop: refetch per trip
-            # else: full reuse across this loop; counts unchanged
-    return fetches
+            # overflow -> no reuse across this loop: refetch per trip;
+            # else full reuse across this loop, counts unchanged.
+            fetches = np.where(working_set > cap, fetches * n, fetches)
+    return np.where(cap < 1, -1, fetches)
 
 
-def _output_k_reuse(loop_order: str, trips: dict[str, int], capacity_tiles: int) -> bool:
-    """True if each output tile's K-reduction completes without HBM spills.
+def output_k_reuse(loop_order: str, trips_m, trips_k, trips_n, capacity_tiles):
+    """True where each output tile's K-reduction completes without HBM spills.
 
     The output tile (m, n) is revisited across the k loop; partials stay
     on chip iff all distinct output tiles touched by loops inner to k fit
     in the output buffer (OS keeps them in the PE array itself: the
     capacity check still gates the *buffer-side* accumulators for tails).
+    Shape-polymorphic like `operand_fetch_count`.
     """
-    if capacity_tiles < 1:
-        return False
-    working_set = 1
+    trips = {"m": trips_m, "k": trips_k, "n": trips_n}
+    cap = np.asarray(capacity_tiles, dtype=np.int64)
+    working_set = np.ones_like(cap)
     for dim in reversed(loop_order):
         if dim == "k":
-            return working_set <= capacity_tiles
-        working_set *= trips[dim]
+            return (working_set <= cap) & (cap >= 1)
+        working_set = working_set * np.asarray(trips[dim], dtype=np.int64)
     raise AssertionError("k not in loop order")
+
+
+def _operand_fetch_count(loop_order: str, trips: dict[str, int],
+                         index_dims: frozenset[str], capacity_tiles: int) -> int:
+    """Scalar view of `operand_fetch_count` (the oracle-path entry)."""
+    return int(operand_fetch_count(loop_order, trips["m"], trips["k"],
+                                   trips["n"], index_dims, capacity_tiles))
+
+
+def _output_k_reuse(loop_order: str, trips: dict[str, int], capacity_tiles: int) -> bool:
+    """Scalar view of `output_k_reuse` (the oracle-path entry)."""
+    return bool(output_k_reuse(loop_order, trips["m"], trips["k"],
+                               trips["n"], capacity_tiles))
 
 
 # ---------------------------------------------------------------------------
@@ -278,10 +315,10 @@ def _estimate_cached(gemm: GEMM, cfg: MappingConfig, hw_key: tuple) -> CostRepor
         return INVALID(
             f"tile does not fit buffers: S_i={s_i}/{cap_a} S_w={s_w}/{cap_b} S_o={s_o}/{cap_o}")
 
-    trips = {
-        "m": math.ceil(gemm.M / m_t),
-        "k": math.ceil(gemm.K / k_t),
-        "n": math.ceil(gemm.N / n_t),
+    trips = {  # exact integer ceil-div, shared convention with estimate_batch
+        "m": -(-gemm.M // m_t),
+        "k": -(-gemm.K // k_t),
+        "n": -(-gemm.N // n_t),
     }
     num_t = trips["m"] * trips["k"] * trips["n"]
 
@@ -381,6 +418,107 @@ class AnalyticalModel:
     def estimate(self, gemm: GEMM, cfg: MappingConfig) -> CostReport:
         """Full Eq. 3 cost of `gemm` under mapping `cfg`."""
         return _estimate_cached(gemm, cfg, self._hw_key())
+
+    def estimate_batch(
+        self,
+        gemm: GEMM,
+        *,
+        rows: np.ndarray,
+        cols: np.ndarray,
+        tile_m: np.ndarray,
+        tile_k: np.ndarray,
+        tile_n: np.ndarray,
+        order_ids: np.ndarray,
+        stream_dims: np.ndarray,
+        alloc: np.ndarray,
+    ) -> dict[str, np.ndarray]:
+        """Eq. 3 cost of `gemm` under a flat tensor of mapping candidates.
+
+        All per-candidate columns are equal-length arrays: logical shape
+        (`rows`/`cols`), raw tile sizes, loop order as an index into
+        LOOP_ORDERS, the Eq. 4 streaming dimension (`stream_dims`:
+        0 -> M_t, 1 -> K_t, 2 -> N_t, derived from the dataflow), and
+        `alloc` as an [n, 3] fraction table.  Runs the same shape-
+        polymorphic kernels as the scalar path, so for any candidate
+        ``cycles[i]`` equals ``estimate(gemm, cfg_i).cycles`` bit-for-bit
+        (invalid candidates get +inf).  Returns a dict of arrays:
+        cycles / valid / compute_cycles / dram_cycles / num_tiles.
+        """
+        rows = np.asarray(rows, dtype=np.int64)
+        cols = np.asarray(cols, dtype=np.int64)
+        order_ids = np.asarray(order_ids)
+        alloc = np.asarray(alloc, dtype=np.float64)
+
+        # --- tile legality (mirrors _estimate_cached line for line) --------
+        m_t = np.minimum(np.asarray(tile_m, dtype=np.int64), gemm.M)
+        k_t = np.minimum(np.asarray(tile_k, dtype=np.int64), gemm.K)
+        n_t = np.minimum(np.asarray(tile_n, dtype=np.int64), gemm.N)
+
+        s_i = m_t * k_t * self.word_bytes
+        s_w = k_t * n_t * self.word_bytes
+        s_o = m_t * n_t * self.word_bytes
+
+        cap_a = np.floor(alloc[:, 0] * self.sram_bytes / 2).astype(np.int64)
+        cap_b = np.floor(alloc[:, 1] * self.sram_bytes / 2).astype(np.int64)
+        cap_o = np.floor(alloc[:, 2] * self.sram_bytes / 2).astype(np.int64)
+        fits = (s_i <= cap_a) & (s_w <= cap_b) & (s_o <= cap_o)
+
+        trips_m = -(-gemm.M // m_t)
+        trips_k = -(-gemm.K // k_t)
+        trips_n = -(-gemm.N // n_t)
+        num_t = trips_m * trips_k * trips_n
+
+        # --- DRAM traffic via the shared reuse kernels, grouped by order ---
+        cap_ta = cap_a // np.maximum(s_i, 1)
+        cap_tb = cap_b // np.maximum(s_w, 1)
+        cap_to = cap_o // np.maximum(s_o, 1)
+        fetches_a = np.empty_like(num_t)
+        fetches_b = np.empty_like(num_t)
+        k_on_chip = np.empty(num_t.shape, dtype=bool)
+        for oid in np.unique(order_ids):
+            sel = order_ids == oid
+            order = LOOP_ORDERS[int(oid)]
+            tm, tk, tn = trips_m[sel], trips_k[sel], trips_n[sel]
+            fetches_a[sel] = operand_fetch_count(
+                order, tm, tk, tn, frozenset("mk"), cap_ta[sel])
+            fetches_b[sel] = operand_fetch_count(
+                order, tm, tk, tn, frozenset("kn"), cap_tb[sel])
+            k_on_chip[sel] = output_k_reuse(order, tm, tk, tn, cap_to[sel])
+        valid = fits & (fetches_a >= 0) & (fetches_b >= 0)
+
+        out_tiles = trips_m * trips_n
+        writes_o = np.where(k_on_chip, out_tiles, out_tiles * trips_k)
+        reads_o = np.where(k_on_chip, 0, out_tiles * (trips_k - 1))
+
+        peak = self.peak_bytes_per_cycle
+        t_r_i = dram_access_cycles(s_i, peak)
+        t_r_w = dram_access_cycles(s_w, peak)
+        t_io_o = dram_access_cycles(s_o, peak)
+        dram_cycles = (fetches_a * t_r_i + fetches_b * t_r_w
+                       + (writes_o + reads_o) * t_io_o)
+
+        # --- compute time: Eq. 4 with the dataflow's streaming dim ---------
+        byp = np.where(rows == cols, 0,
+                       4 * np.minimum(rows, cols)) if self.bypass_enabled else 0
+        eff = np.where(stream_dims == 0, m_t,
+                       np.where(stream_dims == 1, k_t, n_t))
+        t_exe = (np.minimum(rows, cols) + (rows + cols - 1) + eff
+                 + byp).astype(np.float64)
+        compute_cycles = num_t * t_exe
+
+        # --- Eq. 3 assembly (x count, like the scalar path) ----------------
+        t_start = np.maximum(t_r_i + t_r_w,
+                             float(max(self.config_cycles, self.setup_floor)))
+        t_mid = np.maximum(compute_cycles, dram_cycles)
+        cycles_one = t_start + t_mid + t_io_o
+        cycles = np.where(valid, cycles_one * gemm.count, np.inf)
+        return {
+            "cycles": cycles,
+            "valid": valid,
+            "compute_cycles": compute_cycles * gemm.count,
+            "dram_cycles": dram_cycles * gemm.count,
+            "num_tiles": num_t * gemm.count,
+        }
 
     def seconds(self, report: CostReport) -> float:
         return report.cycles / self.freq_hz

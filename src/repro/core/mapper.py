@@ -21,16 +21,26 @@ Interval sampling concretely:
 
 `space_size()` reports the un-pruned cardinality for the Fig. 19
 brute-force comparison.
+
+Search execution (vectorized by default): the pruned candidate set is
+enumerated once into flat NumPy columns (`CandidateBatch`, exactly the
+order `candidates()` yields) and evaluated in one
+`AnalyticalModel.estimate_batch` call + argmin — no per-candidate Python
+loop.  The scalar loop survives behind ``vectorized=False`` as the
+reference oracle; both paths share the analytical-model kernels, so they
+pick identical mappings (tested by tests/test_batched_mapper.py, gated
+at 0.1% by benchmarks/bench.py in CI).
 """
 
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Iterable, Iterator, Sequence
+from typing import Iterable, Iterator
+
+import numpy as np
 
 from .accelerators import AcceleratorSpec
-from .analytical_model import CostReport, GEMM, MappingConfig
+from .analytical_model import LOOP_ORDERS, CostReport, GEMM, MappingConfig
 from .dataflow import Dataflow, LogicalShape, tile_dims_for
 
 # Simplex grid of (input, weight, output) SRAM fractions at interval 0.2.
@@ -52,7 +62,42 @@ _DERIVED_ORDERS: dict[Dataflow, tuple[str, ...]] = {
     Dataflow.IS: ("mnk", "mkn"),
 }
 
-ALL_ORDERS = ("mnk", "mkn", "nmk", "nkm", "kmn", "knm")
+ALL_ORDERS = LOOP_ORDERS
+
+# Eq. 4 streaming dimension per dataflow: 0 -> M_t, 1 -> K_t, 2 -> N_t.
+_STREAM_DIM = {Dataflow.WS: 0, Dataflow.OS: 1, Dataflow.IS: 2}
+
+
+@dataclasses.dataclass(frozen=True)
+class CandidateBatch:
+    """The pruned search space of one GEMM as flat columns (one row per
+    candidate, in exactly the order `ReDasMapper.candidates()` yields so
+    argmin tie-breaking matches the scalar first-strict-min loop)."""
+
+    dataflows: tuple[Dataflow, ...]   # decode table for `df`
+    df: np.ndarray                    # index into `dataflows`
+    rows: np.ndarray
+    cols: np.ndarray
+    tile_m: np.ndarray
+    tile_k: np.ndarray
+    tile_n: np.ndarray
+    order_ids: np.ndarray             # index into LOOP_ORDERS
+    alloc_ids: np.ndarray             # index into ALLOC_CANDIDATES
+
+    def __len__(self) -> int:
+        return self.df.shape[0]
+
+    def config(self, i: int) -> MappingConfig:
+        """Materialize row `i` as a MappingConfig."""
+        return MappingConfig(
+            dataflow=self.dataflows[int(self.df[i])],
+            shape=LogicalShape(int(self.rows[i]), int(self.cols[i])),
+            tile_m=int(self.tile_m[i]),
+            tile_k=int(self.tile_k[i]),
+            tile_n=int(self.tile_n[i]),
+            loop_order=LOOP_ORDERS[int(self.order_ids[i])],
+            alloc=ALLOC_CANDIDATES[int(self.alloc_ids[i])],
+        )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -123,12 +168,16 @@ class ReDasMapper:
         mode: str = "interval",  # "interval" | "exhaustive-orders"
         free_dim_ratio: float = 2.0,
         max_free_dim: int | None = None,
+        vectorized: bool = True,
     ):
         """max_free_dim bounds the un-pinned tile dimension.  Our default
         (None) lets the fixed baseline stream the whole free dim, which
         makes it input-bandwidth-optimal on big-M GEMMs; bounding it
         models baselines that re-preload per tile (the sensitivity study
-        behind EXPERIMENTS.md §Paper-validation's magnitude analysis)."""
+        behind EXPERIMENTS.md §Paper-validation's magnitude analysis).
+
+        vectorized=False drops to the per-candidate scalar loop — the
+        reference oracle the batched engine is gated against."""
         self.spec = spec
         self.array_size = array_size or spec.array_size
         self.model = spec.model(self.array_size)
@@ -136,6 +185,7 @@ class ReDasMapper:
         self.mode = mode
         self.free_dim_ratio = free_dim_ratio
         self.max_free_dim = max_free_dim
+        self.vectorized = vectorized
         self._decision_cache: dict[tuple[int, int, int], MappingDecision] = {}
 
     # -- search space ------------------------------------------------------
@@ -173,6 +223,77 @@ class ReDasMapper:
                                 alloc=alloc,
                             )
 
+    def candidate_batch(self, gemm: GEMM) -> CandidateBatch:
+        """The same pruned space as `candidates()`, as flat columns.
+
+        Row order matches the generator's nesting exactly — dataflow >
+        shape > free-dim value > loop order > buffer allocation — so a
+        first-occurrence argmin reproduces the scalar loop's choice.
+        Built one dataflow at a time with whole-column repeat/tile ops
+        (which tile dim is free depends only on the dataflow, Sec. 4.1).
+        """
+        dfs = tuple(self.spec.dataflows)
+        n_a = len(ALLOC_CANDIDATES)
+        alloc_pat = np.arange(n_a, dtype=np.int8)
+        cols_out: dict[str, list[np.ndarray]] = {
+            k: [] for k in ("df", "rows", "cols", "tile_m", "tile_k",
+                            "tile_n", "order_ids", "alloc_ids")}
+        for di, dataflow in enumerate(dfs):
+            orders = (_DERIVED_ORDERS[dataflow] if self.mode == "interval"
+                      else ALL_ORDERS)
+            oids = np.asarray([LOOP_ORDERS.index(o) for o in orders], np.int8)
+            block = len(orders) * n_a  # inner (order x alloc) pattern
+            pat_order = np.repeat(oids, n_a)
+            pat_alloc = np.tile(alloc_pat, len(orders))
+            fv_parts, shape_rows, shape_cols, counts = [], [], [], []
+            for shape in self.shapes:
+                _, free_vals = self._free_dim_candidates(gemm, dataflow, shape)
+                fv_parts.append(np.asarray(free_vals, np.int64))
+                shape_rows.append(shape.rows)
+                shape_cols.append(shape.cols)
+                counts.append(len(free_vals))
+            fv = np.concatenate(fv_parts)          # one row per (shape, fv)
+            counts = np.asarray(counts)
+            rows = np.repeat(np.asarray(shape_rows, np.int64), counts)
+            cols = np.repeat(np.asarray(shape_cols, np.int64), counts)
+            n_fv = fv.shape[0]
+            fv_col = np.repeat(fv, block)
+            rows_col = np.repeat(rows, block)
+            cols_col = np.repeat(cols, block)
+            if dataflow == Dataflow.OS:    # M_t=rows, N_t=cols, K free
+                tm, tk, tn = rows_col, fv_col, cols_col
+            elif dataflow == Dataflow.WS:  # K_t=rows, N_t=cols, M free
+                tm, tk, tn = fv_col, rows_col, cols_col
+            else:                          # IS: M_t=rows, K_t=cols, N free
+                tm, tk, tn = rows_col, cols_col, fv_col
+            cols_out["df"].append(np.full(n_fv * block, di, np.int8))
+            cols_out["rows"].append(rows_col)
+            cols_out["cols"].append(cols_col)
+            cols_out["tile_m"].append(tm)
+            cols_out["tile_k"].append(tk)
+            cols_out["tile_n"].append(tn)
+            cols_out["order_ids"].append(np.tile(pat_order, n_fv))
+            cols_out["alloc_ids"].append(np.tile(pat_alloc, n_fv))
+        return CandidateBatch(
+            dataflows=dfs,
+            **{k: np.concatenate(v) for k, v in cols_out.items()})
+
+    def _search_batched(self, gemm: GEMM) -> tuple[MappingConfig, int]:
+        """Evaluate the whole candidate tensor at once; first-min argmin
+        reproduces the scalar loop's strict-improvement tie-breaking."""
+        batch = self.candidate_batch(gemm)
+        stream = np.asarray([_STREAM_DIM[d] for d in batch.dataflows],
+                            np.int8)[batch.df]
+        alloc = np.asarray(ALLOC_CANDIDATES, np.float64)[batch.alloc_ids]
+        res = self.model.estimate_batch(
+            gemm, rows=batch.rows, cols=batch.cols, tile_m=batch.tile_m,
+            tile_k=batch.tile_k, tile_n=batch.tile_n,
+            order_ids=batch.order_ids, stream_dims=stream, alloc=alloc)
+        best = int(np.argmin(res["cycles"]))
+        if not np.isfinite(res["cycles"][best]):
+            raise RuntimeError(f"no valid mapping found for {gemm} on {self.spec.name}")
+        return batch.config(best), len(batch)
+
     def space_size(self, gemm: GEMM) -> int:
         """Un-pruned cardinality (Fig. 19's brute-force space): every legal
         free-dim integer x every 1-word buffer split x all 6 orders."""
@@ -198,14 +319,18 @@ class ReDasMapper:
             return MappingDecision(gemm, hit.config, rep, candidates_evaluated=0)
 
         base = dataclasses.replace(gemm, count=1)
-        best_cfg, best_rep, n_eval = None, None, 0
-        for cfg in self.candidates(base):
-            rep = self.model.estimate(base, cfg)
-            n_eval += 1
-            if rep.valid and (best_rep is None or rep.cycles < best_rep.cycles):
-                best_cfg, best_rep = cfg, rep
-        if best_cfg is None:
-            raise RuntimeError(f"no valid mapping found for {gemm} on {self.spec.name}")
+        if self.vectorized:
+            best_cfg, n_eval = self._search_batched(base)
+            best_rep = self.model.estimate(base, best_cfg)
+        else:
+            best_cfg, best_rep, n_eval = None, None, 0
+            for cfg in self.candidates(base):
+                rep = self.model.estimate(base, cfg)
+                n_eval += 1
+                if rep.valid and (best_rep is None or rep.cycles < best_rep.cycles):
+                    best_cfg, best_rep = cfg, rep
+            if best_cfg is None:
+                raise RuntimeError(f"no valid mapping found for {gemm} on {self.spec.name}")
         unit = MappingDecision(base, best_cfg, best_rep, n_eval)
         self._decision_cache[key] = unit
         if gemm.count == 1:

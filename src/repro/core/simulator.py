@@ -144,6 +144,87 @@ def simulate_gemm(a, b, dataflow: Dataflow, shape: LogicalShape | None = None):
     raise ValueError(dataflow)
 
 
+def simulate_gemm_batch(a, b, dataflow: Dataflow, shape: LogicalShape | None = None):
+    """Batched `simulate_gemm`: run B same-shaped tiles through one
+    vmapped cycle-level pass.
+
+    `a` is [B, M, K], `b` is [B, K, N]; returns ([B, M, N], cycles).  The
+    per-tile cycle count is identical across the batch (it depends only
+    on the static tile dims), matching Eq. 4's single-tile T_exe — this
+    is the execution backend `simulate_mapping` uses to validate a whole
+    mapper decision in one shot instead of a Python loop over tiles.
+    """
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    if a.ndim != 3 or b.ndim != 3 or a.shape[0] != b.shape[0]:
+        raise ValueError(f"need [B,M,K] x [B,K,N], got {a.shape} x {b.shape}")
+    _, m, k = a.shape
+    _, k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"GEMM dim mismatch: {a.shape} @ {b.shape}")
+
+    if dataflow == Dataflow.OS:
+        shape = shape or LogicalShape(m, n)
+        if m > shape.rows or n > shape.cols:
+            raise ValueError(f"OS tile {m}x{n} exceeds array {shape}")
+        a_p = jnp.zeros((a.shape[0], shape.rows, k)).at[:, :m, :].set(a)
+        b_p = jnp.zeros((b.shape[0], k, shape.cols)).at[:, :, :n].set(b)
+        out, cycles = jax.vmap(
+            lambda x, y: _simulate_os(x, y, shape.rows, shape.cols, k))(a_p, b_p)
+        return out[:, :m, :n], int(cycles[0])
+    if dataflow == Dataflow.WS:
+        shape = shape or LogicalShape(k, n)
+        if k > shape.rows or n > shape.cols:
+            raise ValueError(f"WS tile K x N = {k}x{n} exceeds array {shape}")
+        a_p = jnp.zeros((a.shape[0], m, shape.rows)).at[:, :, :k].set(a)
+        b_p = jnp.zeros((b.shape[0], shape.rows, shape.cols)).at[:, :k, :n].set(b)
+        out, cycles = jax.vmap(
+            lambda x, y: _simulate_ws(x, y, m, shape.rows, shape.cols))(a_p, b_p)
+        return out[:, :, :n], int(cycles[0])
+    if dataflow == Dataflow.IS:
+        shape = shape or LogicalShape(m, k)
+        if m > shape.rows or k > shape.cols:
+            raise ValueError(f"IS tile M x K = {m}x{k} exceeds array {shape}")
+        out_t, cycles = simulate_gemm_batch(
+            jnp.swapaxes(b, 1, 2), jnp.swapaxes(a, 1, 2), Dataflow.WS,
+            LogicalShape(shape.cols, shape.rows))
+        return jnp.swapaxes(out_t, 1, 2), cycles
+    raise ValueError(dataflow)
+
+
+def simulate_mapping(a, b, cfg):
+    """Functionally execute a mapper-chosen `MappingConfig` end to end.
+
+    Pads (M, K, N) up to tile multiples, carves A and B into the
+    (m_t x k_t) / (k_t x n_t) tile grids, streams every (mi, ni, ki)
+    tile triple through `simulate_gemm_batch` on the configured logical
+    shape + dataflow, and reduces partials over the k grid — the
+    functional counterpart of the analytical model's NUM_t tile loop.
+    Returns (output [M, N], per_tile_cycles); output must equal a @ b.
+    """
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"GEMM dim mismatch: {a.shape} @ {b.shape}")
+    m_t, k_t, n_t = min(cfg.tile_m, m), min(cfg.tile_k, k), min(cfg.tile_n, n)
+    gm, gk, gn = -(-m // m_t), -(-k // k_t), -(-n // n_t)
+    a_p = jnp.zeros((gm * m_t, gk * k_t)).at[:m, :k].set(a)
+    b_p = jnp.zeros((gk * k_t, gn * n_t)).at[:k, :n].set(b)
+    # [gm, gk, m_t, k_t] / [gk, gn, k_t, n_t] tile grids
+    a_tiles = a_p.reshape(gm, m_t, gk, k_t).transpose(0, 2, 1, 3)
+    b_tiles = b_p.reshape(gk, k_t, gn, n_t).transpose(0, 2, 1, 3)
+    a_all = jnp.broadcast_to(a_tiles[:, None], (gm, gn, gk, m_t, k_t))
+    b_all = jnp.broadcast_to(b_tiles.transpose(1, 0, 2, 3)[None], (gm, gn, gk, k_t, n_t))
+    out_tiles, cycles = simulate_gemm_batch(
+        a_all.reshape(-1, m_t, k_t), b_all.reshape(-1, k_t, n_t),
+        cfg.dataflow, cfg.shape)
+    out_grid = out_tiles.reshape(gm, gn, gk, m_t, n_t).sum(axis=2)
+    out = out_grid.transpose(0, 2, 1, 3).reshape(gm * m_t, gn * n_t)
+    return out[:m, :n], cycles
+
+
 # ---------------------------------------------------------------------------
 # Roundabout geometry (pinwheel placement)
 # ---------------------------------------------------------------------------

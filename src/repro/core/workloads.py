@@ -268,3 +268,95 @@ def build_workloads() -> dict[str, Workload]:
 
 
 WORKLOADS = build_workloads()
+
+
+# ---------------------------------------------------------------------------
+# Plane-2 bridge: GEMM traces of the assigned LM architectures
+# ---------------------------------------------------------------------------
+
+ARCH_TRACE_SEQ = 512  # default prefill length for arch traces
+
+
+def arch_gemms(cfg, *, seq_len: int = ARCH_TRACE_SEQ, batch: int = 1) -> tuple[GEMM, ...]:
+    """Lower an `repro.models.config.ArchConfig` to its GEMM trace.
+
+    The mapper-facing view of one prefill pass at batch x seq_len: every
+    projection / attention / FFN / MoE-expert / SSD-chunk matmul becomes
+    a GEMM, with repeated layers collapsed via `count` exactly like the
+    Table-3 traces above (decision cache stays O(#distinct shapes)).
+    This is a *search workload*, not a cycle-exact lowering: elementwise
+    ops (norms, gates, convs, rotary) are out of scope like
+    `vector_elements` is for the paper suite.
+    """
+    d, f, hd = cfg.d_model, cfg.d_ff, cfg.head_dim_
+    nh, nkv = cfg.n_heads, cfg.n_kv
+    seq = seq_len + cfg.prefix_tokens  # VLM: image patch embeds prepended
+    tokens = seq * batch
+    pattern = cfg.layer_pattern
+    n_of = {k: sum(1 for i in range(cfg.n_layers)
+                   if pattern[i % len(pattern)] == k)
+            for k in set(pattern)}
+    g: list[GEMM] = []
+
+    def mlp(prefix: str, blocks: int) -> list[GEMM]:
+        if cfg.moe is not None:
+            e, k = cfg.moe.n_experts, cfg.moe.top_k
+            per_exp = max(1, -(-tokens * k // e))  # balanced routing
+            n_up = 2 if cfg.gated_mlp else 1
+            return [
+                GEMM(tokens, d, e, count=blocks, name=f"{prefix}/router"),
+                GEMM(per_exp, d, f, count=blocks * e * n_up, name=f"{prefix}/expert_up"),
+                GEMM(per_exp, f, d, count=blocks * e, name=f"{prefix}/expert_down"),
+            ]
+        n_up = 2 if cfg.gated_mlp else 1
+        return [
+            GEMM(tokens, d, f, count=blocks * n_up, name=f"{prefix}/ffn_up"),
+            GEMM(tokens, f, d, count=blocks, name=f"{prefix}/ffn_down"),
+        ]
+
+    for kind, blocks in sorted(n_of.items()):
+        if blocks == 0:
+            continue  # pattern kind unused at this n_layers (truncated config)
+        if kind in ("attn", "local"):
+            ctx = min(seq, cfg.window) if (kind == "local" and cfg.window) else seq
+            g += [
+                GEMM(tokens, d, hd * (nh + 2 * nkv), count=blocks, name=f"{kind}/qkv"),
+                GEMM(seq, hd, ctx, count=blocks * nh * batch, name=f"{kind}/scores"),
+                GEMM(seq, ctx, hd, count=blocks * nh * batch, name=f"{kind}/ctx"),
+                GEMM(tokens, nh * hd, d, count=blocks, name=f"{kind}/proj"),
+            ]
+            g += mlp(kind, blocks)
+        elif kind == "ssm":
+            s = cfg.ssm
+            d_in = s.expand * d
+            heads = d_in // s.head_dim
+            n_chunks = -(-seq // s.chunk)
+            per_chunk = blocks * heads * n_chunks * batch
+            g += [
+                GEMM(tokens, d, 2 * d_in + 2 * s.n_groups * s.d_state + heads,
+                     count=blocks, name="ssm/in_proj"),
+                GEMM(s.chunk, s.d_state, s.chunk, count=per_chunk, name="ssm/chunk_scores"),
+                GEMM(s.chunk, s.chunk, s.head_dim, count=per_chunk, name="ssm/chunk_ctx"),
+                GEMM(s.d_state, s.chunk, s.head_dim, count=per_chunk, name="ssm/chunk_state"),
+                GEMM(tokens, d_in, d, count=blocks, name="ssm/out_proj"),
+            ]
+        elif kind == "rglru":
+            w = cfg.rglru_width or d
+            g += [
+                GEMM(tokens, d, w, count=2 * blocks, name="rglru/in_proj"),
+                GEMM(tokens, w, d, count=blocks, name="rglru/out_proj"),
+            ]
+            g += mlp("rglru", blocks)
+        else:  # pragma: no cover - schema guards BlockKind
+            raise ValueError(f"unknown block kind {kind!r}")
+    g.append(GEMM(tokens, d, cfg.vocab, name="lm_head"))
+    return tuple(g)
+
+
+def arch_traces(*, smoke: bool = False, seq_len: int = ARCH_TRACE_SEQ,
+                batch: int = 1) -> dict[str, tuple[GEMM, ...]]:
+    """GEMM traces for every registered arch in repro.configs."""
+    from repro.configs import all_configs  # lazy: keeps core importable alone
+
+    return {name: arch_gemms(c, seq_len=seq_len, batch=batch)
+            for name, c in all_configs(smoke=smoke).items()}

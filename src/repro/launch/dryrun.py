@@ -25,7 +25,6 @@ import sys
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ARCH_NAMES, get_config
 from repro.configs.shapes import SHAPES, applicable

@@ -17,7 +17,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint.checkpoint import Checkpointer
 from repro.configs import ARCH_NAMES, get_config

@@ -17,7 +17,6 @@ uses block-diagonal; recorded in DESIGN.md §Assumptions).
 
 from __future__ import annotations
 
-import math
 
 import jax
 import jax.numpy as jnp

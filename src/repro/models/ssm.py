@@ -76,10 +76,10 @@ def ssd_chunked(x, dt, a_log, b_mat, c_mat, d_skip, chunk: int, h0=None):
     """x (B,L,H,P); dt (B,L,H) (post-softplus); b_mat,c_mat (B,L,G,N).
 
     Returns (y (B,L,H,P), final_state (B,H,N,P))."""
-    bsz, l, h, p = x.shape
+    bsz, slen, h, p = x.shape
     g, n = b_mat.shape[2], b_mat.shape[3]
-    nc = -(-l // chunk)
-    pad = nc * chunk - l
+    nc = -(-slen // chunk)
+    pad = nc * chunk - slen
     if pad:
         x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
         dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
@@ -129,7 +129,7 @@ def ssd_chunked(x, dt, a_log, b_mat, c_mat, d_skip, chunk: int, h0=None):
                          jnp.exp(cs), _expand_groups(c_c, h), s_starts)
     y = (y_intra + y_inter).transpose(1, 0, 2, 3, 4).reshape(bsz, nc * chunk, h, p)
     y = y + d_skip.astype(jnp.float32)[None, None, :, None] * x.astype(jnp.float32)
-    return y[:, :l].astype(jnp.float32), s_final
+    return y[:, :slen].astype(jnp.float32), s_final
 
 
 def _expand_groups(t: Array, h: int) -> Array:

@@ -16,7 +16,6 @@ Three execution paths share the same block code:
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax

@@ -14,7 +14,6 @@ XLA program, so serving latency is step-latency x tokens.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.configs import ARCH_NAMES, get_config
-from repro.configs.shapes import SHAPES, applicable, cells
+from repro.configs.shapes import cells
 from repro.data.pipeline import DataConfig, make_source
 from repro.models import transformer as T
 from repro.train_lib import train as train_lib

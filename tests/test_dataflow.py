@@ -3,7 +3,7 @@
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core.dataflow import (ALL_DATAFLOWS, Dataflow, LogicalShape,
+from repro.core.dataflow import (ALL_DATAFLOWS, LogicalShape,
                                  bypass_cycles, enumerate_logical_shapes,
                                  n_logical_shapes, pe_usage,
                                  subarray_decomposition, tile_dims_for)

@@ -47,7 +47,7 @@ def test_baseline_spaces_restrict_configs():
     assert tpu.config.dataflow == Dataflow.WS
     dyn = ReDasMapper(SPECS["dynnamic"]).map_gemm(g)
     assert dyn.config.dataflow == Dataflow.OS
-    planaria = ReDasMapper(SPECS["planaria"]).map_gemm(g)
+    ReDasMapper(SPECS["planaria"]).map_gemm(g)  # restricted space still maps
     assert len(SPECS["planaria"].shapes) == 5
 
 

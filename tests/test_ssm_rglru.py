@@ -3,7 +3,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.models.config import ArchConfig, SSMConfig
@@ -12,13 +11,13 @@ from repro.models.ssm import ssd_chunked, ssm_block, ssm_decode_step, ssm_init
 
 
 def naive_ssd(x, dt, a_log, b_mat, c_mat, d_skip):
-    bsz, l, h, p = x.shape
+    bsz, slen, h, p = x.shape
     g = b_mat.shape[2]
     rep = h // g
     a = -np.exp(np.asarray(a_log))
     s = np.zeros((bsz, h, b_mat.shape[3], p))
     ys = []
-    for t in range(l):
+    for t in range(slen):
         dtt = np.asarray(dt[:, t])
         dec = np.exp(dtt * a)
         bt = np.repeat(np.asarray(b_mat[:, t]), rep, axis=1)

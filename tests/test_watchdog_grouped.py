@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro.kernels.grouped_gemm import grouped_matmul
-from repro.launch.watchdog import StepTimeout, StepWatchdog, run_with_recovery
+from repro.launch.watchdog import StepWatchdog, run_with_recovery
 
 
 @pytest.mark.parametrize("shape", [(4, 128, 128, 128), (3, 100, 64, 200),
