@@ -9,7 +9,7 @@ from __future__ import annotations
 from repro.core.accelerators import SPECS
 from repro.core.analytical_model import GEMM
 from repro.core.dataflow import Dataflow, LogicalShape, pe_usage
-from repro.core.mapper import ReDasMapper
+from repro.engine import AnalyticalCostModel, KernelRequest
 
 from .common import csv_row, timed
 
@@ -23,24 +23,27 @@ LAYERS = {
 
 def compute() -> dict:
     out = {}
-    mapper = ReDasMapper(SPECS["redas"])
-    model = mapper.model
+    # the engine's plane-1 cost model: same mapper, unified decisions
+    acm = AnalyticalCostModel(SPECS["redas"])
+    mapper, model = acm.mapper, acm.mapper.model
     for name, g in LAYERS.items():
-        best = mapper.map_gemm(g)
+        best = acm.decide(KernelRequest("gemm", g.M, g.K, g.N, name=name))
+        shape = LogicalShape(int(best.meta_dict["shape_rows"]),
+                             int(best.meta_dict["shape_cols"]))
         # reference: same dataflow, native 128x128 shape
         ref_best = None
         for cfg in mapper.candidates(g):
             if cfg.shape == LogicalShape(128, 128) and \
-                    cfg.dataflow == best.config.dataflow:
+                    cfg.dataflow == Dataflow(best.dataflow):
                 rep = model.estimate(g, cfg)
                 if rep.valid and (ref_best is None or rep.cycles < ref_best.cycles):
                     ref_best = rep
         out[name] = {
-            "shape": str(best.config.shape),
-            "dataflow": best.config.dataflow.value,
-            "speedup_vs_square": (ref_best.cycles / best.report.cycles
+            "shape": str(shape),
+            "dataflow": best.dataflow,
+            "speedup_vs_square": (ref_best.cycles / best.meta_dict["cycles"]
                                   if ref_best else float("nan")),
-            "pe_usage": pe_usage(best.config.shape, 128),
+            "pe_usage": pe_usage(shape, 128),
         }
     return out
 

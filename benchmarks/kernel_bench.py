@@ -10,9 +10,8 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.tpu_model import (choose_kernel_config, estimate,
-                                  fixed_square_cost)
-from repro.kernels.ops import redas_matmul
+from repro.core.tpu_model import fixed_square_cost
+from repro.engine import Engine, KernelRequest, TPUModel
 from repro.kernels.ref import matmul_ref
 
 from .common import csv_row, geomean, timed
@@ -31,23 +30,26 @@ GEMMS = {
 
 def compute() -> dict:
     out = {}
+    model = TPUModel()
+    eng = Engine(model, backend="pallas-interpret")
     for name, (m, k, n) in GEMMS.items():
-        cfg = choose_kernel_config(m, k, n)
-        opt = estimate(m, k, n, cfg)
+        dec = model.decide(KernelRequest("gemm", m, k, n, name=name))
         fix = fixed_square_cost(m, k, n)
-        # numeric validation at reduced scale (same aspect, <=256 per dim)
+        # numeric validation at reduced scale (same aspect, <=256 per dim):
+        # the engine re-plans the small shape and dispatches the Pallas
+        # kernel through the unified decision cache.
         sm = max(8, min(m, 96))
         sk = max(8, min(k, 128))
         sn = max(8, min(n, 64))
         rng = np.random.default_rng(0)
         a = jnp.asarray(rng.normal(size=(sm, sk)), jnp.float32)
         b = jnp.asarray(rng.normal(size=(sk, sn)), jnp.float32)
-        got = redas_matmul(a, b, dataflow=cfg.dataflow, interpret=True)
+        got = eng.matmul(a, b)
         err = float(jnp.abs(got - matmul_ref(a, b)).max())
         out[name] = {
-            "config": f"{cfg.dataflow}({cfg.bm},{cfg.bk},{cfg.bn})",
-            "speedup": fix.seconds / opt.seconds,
-            "util": opt.mxu_utilization,
+            "config": f"{dec.dataflow}({dec.bm},{dec.bk},{dec.bn})",
+            "speedup": fix.seconds / dec.seconds,
+            "util": dec.meta_dict["mxu_utilization"],
             "fixed_util": fix.mxu_utilization,
             "numeric_err": err,
         }

@@ -2,44 +2,52 @@
 
     PYTHONPATH=src python examples/quickstart.py
 
-1. Plane 1 — map a DNN layer's GEMM onto the reconfigurable array with
-   the paper's mapper and compare against a fixed 128x128 TPU-like array.
-2. Plane 2 — the same decision surface on TPU: mapper-chosen Pallas
-   (dataflow, blocks) vs the fixed square schedule, validated numerically
-   in interpret mode on CPU.
+Both planes answer through ONE API now (`repro.engine`): a `CostModel`
+turns a `KernelRequest` into a `KernelDecision`, an `ExecutionPlan`
+caches decisions per shape, and a `KernelRegistry` backend executes
+them.
+
+1. Plane 1 — the paper's mapper (`AnalyticalCostModel`) plans a DNN
+   layer's GEMM on the reconfigurable array vs a fixed 128x128 array.
+2. Plane 2 — the same request against the TPU v5e roofline (`TPUModel`),
+   then executed through the mapper-chosen Pallas schedule and checked
+   numerically in interpret mode on CPU.
 """
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.accelerators import SPECS
-from repro.core.analytical_model import GEMM
-from repro.core.mapper import ReDasMapper
-from repro.core.tpu_model import choose_kernel_config, estimate, fixed_square_cost
-from repro.kernels.ops import redas_matmul
+from repro.core.tpu_model import fixed_square_cost
+from repro.engine import (AnalyticalCostModel, Engine, KernelRequest,
+                          TPUModel)
 from repro.kernels.ref import matmul_ref
 
+req = KernelRequest("gemm", 43264, 144, 32, name="tinyyolo-v2/conv2")
+
 # --- Plane 1: the paper's accelerator --------------------------------------
-layer = GEMM(43264, 144, 32, name="tinyyolo-v2/conv2")  # Fig. 22 case study
-redas = ReDasMapper(SPECS["redas"]).map_gemm(layer)
-tpu = ReDasMapper(SPECS["tpu"]).map_gemm(layer)
-print(f"[plane 1] {layer.name}: ReDas picks {redas.config.shape} "
-      f"{redas.config.dataflow.value.upper()} "
-      f"-> {tpu.report.cycles / redas.report.cycles:.2f}x vs fixed array "
-      f"(PE util {redas.report.pe_utilization:.0%} vs "
-      f"{tpu.report.pe_utilization:.0%})")
+redas = AnalyticalCostModel(SPECS["redas"]).decide(req)
+fixed = AnalyticalCostModel(SPECS["tpu"]).decide(req)
+meta = redas.meta_dict
+print(f"[plane 1] {req.name}: ReDas picks "
+      f"{meta['shape_rows']}x{meta['shape_cols']} {redas.dataflow.upper()} "
+      f"-> {fixed.seconds / redas.seconds:.2f}x vs fixed array "
+      f"(PE util {meta['pe_utilization']:.0%} vs "
+      f"{fixed.meta_dict['pe_utilization']:.0%})")
 
-# --- Plane 2: the same idea as a Pallas schedule on TPU ---------------------
-m, k, n = 43264, 144, 32
-cfg = choose_kernel_config(m, k, n)
-opt, fix = estimate(m, k, n, cfg), fixed_square_cost(m, k, n)
-print(f"[plane 2] mapper picks {cfg.dataflow}({cfg.bm},{cfg.bk},{cfg.bn}) "
-      f"-> {fix.seconds / opt.seconds:.2f}x vs fixed 128^3 on v5e model")
+# --- Plane 2: the same request on the TPU v5e roofline ----------------------
+tpu = TPUModel().decide(req)
+fix = fixed_square_cost(req.m, req.k, req.n)
+print(f"[plane 2] mapper picks {tpu.dataflow}({tpu.bm},{tpu.bk},{tpu.bn}) "
+      f"-> {fix.seconds / tpu.seconds:.2f}x vs fixed 128^3 on v5e model")
 
+# --- Execute through the engine (decision cache + registry dispatch) --------
+eng = Engine(backend="pallas-interpret")   # CPU host: interpret-mode Pallas
 rng = np.random.default_rng(0)
 a = jnp.asarray(rng.normal(size=(256, 144)), jnp.float32)
 b = jnp.asarray(rng.normal(size=(144, 32)), jnp.float32)
-out = redas_matmul(a, b, dataflow=cfg.dataflow, interpret=True)
+out = eng.matmul(a, b)
+eng.matmul(a, b)  # repeated shape: served from the plan cache
 err = float(jnp.abs(out - matmul_ref(a, b)).max())
-print(f"[plane 2] Pallas kernel ({cfg.dataflow}) vs jnp oracle: "
-      f"max err {err:.2e}")
+print(f"[engine]  Pallas dispatch vs jnp oracle: max err {err:.2e}; "
+      f"plan stats {eng.plan.stats}")

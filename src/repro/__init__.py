@@ -1,0 +1,63 @@
+"""ReDas reproduction: reshapeable systolic-array model + a sharded
+jax_pallas training/serving stack.
+
+`import repro` is intentionally lightweight: submodules and the public
+surface below resolve lazily through module `__getattr__` (PEP 562), so
+nothing jax-heavy loads until first use.
+
+    import repro
+    plan = repro.plan_arch(repro.configs.get_config("qwen2-1.5b"))
+    with repro.use_engine():
+        ...
+"""
+
+from __future__ import annotations
+
+import importlib
+
+__version__ = "0.1.0"
+
+#: name -> submodule (lazy `repro.<name>` package access)
+_SUBMODULES = (
+    "configs", "core", "dist", "engine", "kernels", "models",
+    "optim", "roofline",
+)
+
+#: name -> "module:attr" (lazy re-exports of the decision-surface API)
+_EXPORTS = {
+    # engine (the unified decide-then-execute surface, ISSUE 3)
+    "Engine": "repro.engine:Engine",
+    "use_engine": "repro.engine:use_engine",
+    "active_engine": "repro.engine:active_engine",
+    "matmul": "repro.engine:matmul",
+    "plan_arch": "repro.engine:plan_arch",
+    "ExecutionPlan": "repro.engine:ExecutionPlan",
+    "KernelRequest": "repro.engine:KernelRequest",
+    "KernelDecision": "repro.engine:KernelDecision",
+    "KernelRegistry": "repro.engine:KernelRegistry",
+    "CostModel": "repro.engine:CostModel",
+    "TPUModel": "repro.engine:TPUModel",
+    "AnalyticalCostModel": "repro.engine:AnalyticalCostModel",
+    # configs + workloads (numpy-level planning inputs)
+    "GEMM": "repro.core.analytical_model:GEMM",
+    "WORKLOADS": "repro.core.workloads:WORKLOADS",
+    "arch_gemms": "repro.core.workloads:arch_gemms",
+    "get_config": "repro.configs:get_config",
+    "ArchConfig": "repro.models.config:ArchConfig",
+}
+
+__all__ = ["__version__", *_SUBMODULES, *_EXPORTS]
+
+
+def __getattr__(name: str):
+    if name in _SUBMODULES:
+        return importlib.import_module(f"repro.{name}")
+    target = _EXPORTS.get(name)
+    if target is not None:
+        module, attr = target.split(":")
+        return getattr(importlib.import_module(module), attr)
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(__all__)

@@ -16,8 +16,10 @@ partial sums through HBM; IS is the transpose.  The search (geometric
 tile ladders, per-shape decision cache) is the interval-sampling engine
 of Sec. 4.3 re-instantiated against TPU constants.
 
-Used by kernels/ops.auto_matmul (per-shape dispatch) and by the roofline
-benchmarks to napkin-math candidate changes before implementing them.
+These primitives back `repro.engine.TPUModel` (the plane-2 CostModel:
+per-shape dispatch through the unified engine decision cache) and the
+roofline benchmarks that napkin-math candidate changes before
+implementing them.
 """
 
 from __future__ import annotations

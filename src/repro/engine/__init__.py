@@ -1,0 +1,31 @@
+"""repro.engine — the unified "decide then execute" API (ISSUE 3).
+
+One decision surface for both planes:
+
+  * `CostModel` protocol — `TPUModel` (plane-2 v5e roofline) and
+    `AnalyticalCostModel` (plane-1 ReDas ASIC mapper) both emit unified
+    `KernelDecision`s for `KernelRequest`s.
+  * `KernelRegistry` — named backends ("pallas-tpu", "pallas-interpret",
+    "xla-einsum", "simulator") the kernels register into.
+  * `ExecutionPlan` — the per-op decision cache (hit/miss stats, JSON
+    save/load for serve warm-start), produced ahead of time by
+    `plan_arch` over `core.workloads.arch_gemms` traces.
+  * `Engine` / `use_engine` — the context models route matmuls through
+    (replaces `use_redas_kernels` + direct `auto_matmul` calls).
+
+Importing this package is jax-free; jax loads at first dispatch.
+"""
+
+from .context import (Engine, active_engine, default_engine, matmul,
+                      plan_arch, use_engine)
+from .cost import AnalyticalCostModel, CostModel, TPUModel
+from .plan import ExecutionPlan, KernelDecision, KernelRequest
+from .registry import BACKENDS, KernelRegistry, default_registry
+
+__all__ = [
+    "Engine", "active_engine", "default_engine", "matmul", "plan_arch",
+    "use_engine",
+    "AnalyticalCostModel", "CostModel", "TPUModel",
+    "ExecutionPlan", "KernelDecision", "KernelRequest",
+    "BACKENDS", "KernelRegistry", "default_registry",
+]

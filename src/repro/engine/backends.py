@@ -1,0 +1,174 @@
+"""Execution backends: shape-safe kernel entry points + registrations.
+
+`pallas_gemm` is the shape-safe Pallas entry point (previously
+`kernels.ops.redas_matmul`): it pads arbitrary (M, K, N) to the chosen
+block multiples, invokes `kernels.redas_gemm.gemm`, and slices the
+result.  The engine's Pallas backends dispatch planned decisions through
+it; `kernels/ops.py` keeps `redas_matmul` as a DeprecationWarning alias.
+
+This module also registers the two non-Pallas backends:
+
+  xla-einsum — plain XLA contractions (the dry-run / baseline path);
+               decisions are still planned and cached, XLA just ignores
+               the schedule.
+  simulator  — functional execution of an ASIC-plane decision through
+               `core.simulator.simulate_mapping` (the cycle-level
+               logical-array model); requires the decision's meta to
+               carry the full mapping (AnalyticalCostModel emits it).
+
+Import cost: this is the one engine module that imports jax — the
+Engine only imports it at first dispatch.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import redas_gemm
+from repro.kernels.redas_gemm import (VMEM_BYTES, DataflowName,
+                                      default_blocks, vmem_bytes)
+from repro.kernels.redas_gemm import round_up as _round_up
+
+from .plan import KernelDecision
+
+__all__ = ["auto_interpret", "default_blocks", "pallas_gemm", "register_into"]
+
+
+def auto_interpret(interpret: bool | None) -> bool:
+    """Pallas TPU lowering needs a real TPU; interpret elsewhere."""
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("dataflow", "bm", "bk", "bn", "interpret", "out_dtype"))
+def pallas_gemm(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    dataflow: DataflowName = "os",
+    bm: int | None = None,
+    bk: int | None = None,
+    bn: int | None = None,
+    interpret: bool | None = None,
+    out_dtype=None,
+) -> jax.Array:
+    """(M, K) @ (K, N) for arbitrary dims: pad -> blocked Pallas GEMM -> slice."""
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"matmul dim mismatch {a.shape} @ {b.shape}")
+    out_dtype = out_dtype or a.dtype
+    dbm, dbk, dbn = default_blocks(m, k, n)
+    bm, bk, bn = bm or dbm, bk or dbk, bn or dbn
+    if vmem_bytes(bm, bk, bn, a.dtype) > VMEM_BYTES:
+        raise ValueError(
+            f"blocks ({bm},{bk},{bn}) exceed VMEM budget {VMEM_BYTES} (Eq. 2)")
+
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    a_p = jnp.pad(a, ((0, mp - m), (0, kp - k))) if (mp, kp) != (m, k) else a
+    b_p = jnp.pad(b, ((0, kp - k), (0, np_ - n))) if (kp, np_) != (k, n) else b
+    out = redas_gemm.gemm(
+        a_p, b_p, dataflow=dataflow, bm=bm, bk=bk, bn=bn,
+        interpret=auto_interpret(interpret), out_dtype=out_dtype)
+    return out[:m, :n] if (mp, np_) != (m, n) else out
+
+
+# ---------------------------------------------------------------------------
+# Backend adapters (decision -> kernel call)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _diff_gemm(dataflow: str, bm: int, bk: int, bn: int, interpret: bool,
+               out_dtype):
+    """Differentiable wrapper: the Pallas kernels have no JVP/transpose
+    rules (scratch accumulators, input/output aliasing), so the VJP is
+    defined at the dispatch layer — both cotangents are themselves GEMMs
+    and run through the same Pallas entry point with VMEM-gated default
+    blocks (dA = g @ B^T, dB = A^T @ g)."""
+
+    @jax.custom_vjp
+    def f(a, b):
+        return pallas_gemm(a, b, dataflow=dataflow, bm=bm, bk=bk, bn=bn,
+                           interpret=interpret, out_dtype=out_dtype)
+
+    def fwd(a, b):
+        return f(a, b), (a, b)
+
+    def bwd(res, g):
+        a, b = res
+        da = pallas_gemm(g, b.T, interpret=interpret, out_dtype=a.dtype)
+        db = pallas_gemm(a.T, g, interpret=interpret, out_dtype=b.dtype)
+        return da, db
+
+    f.defvjp(fwd, bwd)
+    # jit the wrapper: an un-jitted custom_vjp call re-traces eagerly
+    # (~200 us/call); jit keeps the C++ fast path AND the custom rule.
+    return jax.jit(f)
+
+
+def _gemm_backend(interpret: bool):
+    def run(decision: KernelDecision, a, b, *, out_dtype=None):
+        fn = _diff_gemm(decision.dataflow, decision.bm, decision.bk,
+                        decision.bn, interpret, out_dtype)
+        return fn(a, b)
+    return run
+
+
+def _xla_gemm(decision: KernelDecision, a, b, *, out_dtype=None):
+    out = jnp.dot(a, b, preferred_element_type=jnp.float32)
+    return out.astype(out_dtype or a.dtype)
+
+
+def _xla_grouped(decision: KernelDecision, x, w, *, out_dtype=None):
+    out = jnp.einsum("ecd,edf->ecf", x, w,
+                     preferred_element_type=jnp.float32)
+    return out.astype(out_dtype or x.dtype)
+
+
+def _xla_attention(decision: KernelDecision, q, k, v, *, causal=True,
+                   window=0):
+    """Reference attention via the pure-jax chunked online softmax.
+    q/k/v: (B, H, S, D) — the flash-kernel layout (GQA pre-expanded)."""
+    from repro.models.layers import flash_attention  # lazy: models import
+
+    b, h, sq, d = q.shape
+    qs = q.transpose(0, 2, 1, 3)
+    ks = k.transpose(0, 2, 1, 3)
+    vs = v.transpose(0, 2, 1, 3)
+    positions = jnp.broadcast_to(jnp.arange(sq)[None], (b, sq))
+    kv_len = jnp.full((b,), k.shape[2], jnp.int32)
+    o = flash_attention(qs, ks, vs, positions, kv_len, causal, window,
+                        min(512, sq))
+    return o.transpose(0, 2, 1, 3)
+
+
+def _simulator_gemm(decision: KernelDecision, a, b, *, out_dtype=None):
+    """Execute an ASIC-plane decision on the cycle-level simulator."""
+    from repro.core.simulator import simulate_mapping
+
+    from .cost import AnalyticalCostModel
+
+    meta = decision.meta_dict
+    if "shape_rows" not in meta:
+        raise ValueError(
+            "simulator backend needs an ASIC mapping in decision.meta "
+            "(plan with AnalyticalCostModel, not TPUModel)")
+    cfg = AnalyticalCostModel.mapping_config(decision)
+    out, _ = simulate_mapping(a, b, cfg)
+    return out.astype(out_dtype or jnp.asarray(a).dtype)
+
+
+def register_into(registry) -> None:
+    """xla-einsum + simulator backends (the Pallas backends are
+    registered by the kernels themselves)."""
+    registry.register("xla-einsum", "gemm", _xla_gemm)
+    registry.register("xla-einsum", "grouped_gemm", _xla_grouped)
+    registry.register("xla-einsum", "attention", _xla_attention)
+    registry.register("simulator", "gemm", _simulator_gemm)

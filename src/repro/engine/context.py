@@ -1,0 +1,276 @@
+"""The Engine: decide (cost model + plan cache) then execute (registry).
+
+This is the single entry point the models route matmuls through,
+replacing the old `layers.USE_REDAS_KERNEL` global + direct
+`kernels.ops.auto_matmul` calls:
+
+    from repro import engine
+
+    with engine.use_engine():                  # mapper-planned Pallas
+        logits, _ = transformer.forward(params, cfg, tokens)
+
+    plan = engine.plan_arch(arch_cfg, seq_len=512)   # plan ahead of time
+    plan.save("plan.json")                           # serve warm-start
+
+    with engine.use_engine(backend="xla-einsum"):    # baseline numerics,
+        ...                                          # same decision path
+
+Decisions happen at jit-trace time (shapes are static there), exactly
+like the old per-shape lru caches — but now every op shares ONE
+`ExecutionPlan` cache with hit/miss stats, one `CostModel`, and one
+backend namespace.  Everything here is jax-free until the first
+dispatch; planning an arch imports only numpy-level code.
+
+Trace-time caveat (same as the old USE_REDAS_KERNEL global): the engine
+context is consulted when a function is TRACED, not when a compiled
+executable re-runs.  A callable jitted outside `use_engine` and then
+called inside it (with the same avals) hits the jit cache and keeps its
+XLA-native kernels — jit inside the context, as train_lib/serve_lib do.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+
+from .cost import CostModel, TPUModel
+from .plan import ExecutionPlan, KernelDecision, KernelRequest
+from .registry import KernelRegistry, default_registry
+
+_STACK: list["Engine"] = []
+
+
+def _dtype_bytes(x) -> int:
+    return int(x.dtype.itemsize)
+
+
+def _as_arrays(*xs):
+    """jax arrays (and tracers) pass through untouched; plain numpy /
+    python inputs — which the pre-engine `auto_matmul` accepted via jit
+    auto-conversion — are converted so `.aval` keying works."""
+    if all(hasattr(x, "aval") for x in xs):
+        return xs
+    import jax.numpy as jnp
+
+    return tuple(jnp.asarray(x) for x in xs)
+
+
+class Engine:
+    """One (cost model, backend, plan, registry) posture.
+
+    `backend=None` auto-resolves at first dispatch: the cost model's
+    `default_backend` if set (the ASIC plane's "simulator"), else
+    "pallas-tpu" on a TPU host and "pallas-interpret" elsewhere.
+    """
+
+    def __init__(self, cost_model: CostModel | None = None, *,
+                 backend: str | None = None,
+                 plan: ExecutionPlan | None = None,
+                 registry: KernelRegistry | None = None):
+        self.cost_model = cost_model if cost_model is not None else TPUModel()
+        self._backend = backend
+        self.registry = registry if registry is not None else default_registry()
+        self.plan = plan if plan is not None else ExecutionPlan(
+            cost_model=self.cost_model.name, backend=backend or "auto")
+        # Steady-state dispatch memo: raw shape key -> (decision, kernel).
+        # The hot path (repeated shape, the common case by construction —
+        # Sec. 4.3's decision reuse) costs one tuple build + dict hit; the
+        # full KernelRequest/plan/registry machinery runs on miss only
+        # (BENCH_PR3 gates the overhead at 5% of a direct kernel call).
+        self._memo: dict[tuple, tuple] = {}
+
+    # -- backend resolution ------------------------------------------------
+
+    @property
+    def backend(self) -> str:
+        if self._backend is None:
+            self._backend = self._resolve_backend()
+        return self._backend
+
+    def _resolve_backend(self) -> str:
+        if getattr(self.cost_model, "default_backend", None):
+            return self.cost_model.default_backend
+        import jax  # deferred: planning alone must not import jax
+
+        return "pallas-tpu" if jax.default_backend() == "tpu" else "pallas-interpret"
+
+    # -- decide ------------------------------------------------------------
+
+    def _rebind(self, request: KernelRequest,
+                decision: KernelDecision) -> KernelDecision:
+        """Bind a decision to this engine's backend.  ASIC-plane
+        schedules (tile dims need not be Pallas/VREG aligned) only
+        execute on the simulator backend — fail with intent instead of a
+        Mosaic block-alignment error, whether the decision came from a
+        warm-start plan or a fresh cost-model search."""
+        if decision.backend == self.backend:
+            return decision
+        if "shape_rows" in dict(decision.meta) and self.backend != "simulator":
+            raise ValueError(
+                f"decision for {request.key()} was produced by an ASIC "
+                f"cost model ({decision.cost_model!r}); its tile dims are "
+                f"not Pallas-aligned — re-plan with a TPU cost model for "
+                f"backend {self.backend!r}")
+        return dataclasses.replace(decision, backend=self.backend)
+
+    def decide(self, request: KernelRequest) -> KernelDecision:
+        """Plan-cache lookup, cost-model search on miss."""
+        hit = self.plan.lookup(request)
+        if hit is not None:
+            rebound = self._rebind(request, hit)
+            if rebound is not hit:
+                # warm-start plan recorded on another host kind: keep the
+                # schedule, execute on this engine's backend.
+                self.plan.add(request, rebound)
+            return rebound
+        decision = self._rebind(request, self.cost_model.decide(request))
+        self.plan.add(request, decision)
+        return decision
+
+    def plan_gemms(self, gemms, *, in_bytes: int = 2,
+                   out_bytes: int | None = None) -> "Engine":
+        """Warm the plan from a GEMM trace (`core.analytical_model.GEMM`
+        or (m, k, n) tuples); repeated shapes dedupe through the cache.
+        `in_bytes` must match the serving dtype (2 = bf16, 4 = f32) or
+        the runtime requests will miss the warm decisions."""
+        out_bytes = out_bytes if out_bytes is not None else in_bytes
+        for g in gemms:
+            m, k, n = (g.M, g.K, g.N) if hasattr(g, "M") else g
+            name = getattr(g, "name", "")
+            self.decide(KernelRequest("gemm", m, k, n, in_bytes=in_bytes,
+                                      out_bytes=out_bytes, name=name))
+        return self
+
+    # -- execute -----------------------------------------------------------
+
+    def _resolve(self, key: tuple, op: str, m: int, k: int, n: int,
+                 groups: int, item_bytes: int) -> tuple:
+        """Miss path: full request -> decide -> registry, then memoize."""
+        req = KernelRequest(op, m, k, n, groups=groups,
+                            in_bytes=item_bytes, out_bytes=item_bytes)
+        dec = self.decide(req)
+        entry = (dec, self.registry.get(dec.backend, op))
+        self._memo[key] = entry
+        return entry
+
+    def matmul(self, a, b, *, out_dtype=None):
+        """(M, K) @ (K, N) through the planned schedule for this shape."""
+        # .aval (hashable shape+dtype) is the cheapest stable identity on
+        # both concrete arrays and tracers — ~30x cheaper than touching
+        # .shape/.dtype.name per call (BENCH_PR3 is sensitive to this).
+        a, b = _as_arrays(a, b)
+        key = ("gemm", a.aval, b.aval)
+        hit = self._memo.get(key)
+        if hit is not None:
+            self.plan.hits += 1
+            dec, fn = hit
+            return fn(dec, a, b, out_dtype=out_dtype)
+        m, k = a.shape
+        k2, n = b.shape
+        if k != k2:
+            raise ValueError(f"matmul dim mismatch {a.shape} @ {b.shape}")
+        dec, fn = self._resolve(key, "gemm", m, k, n, 1, _dtype_bytes(a))
+        return fn(dec, a, b, out_dtype=out_dtype)
+
+    def grouped_matmul(self, x, w, *, out_dtype=None):
+        """x (E, C, D) @ w (E, D, F) -> (E, C, F), per-expert."""
+        x, w = _as_arrays(x, w)
+        key = ("grouped_gemm", x.aval, w.aval)
+        hit = self._memo.get(key)
+        if hit is not None:
+            self.plan.hits += 1
+            dec, fn = hit
+            return fn(dec, x, w, out_dtype=out_dtype)
+        e, c, d = x.shape
+        e2, d2, f = w.shape
+        if (e, d) != (e2, d2):
+            raise ValueError(f"grouped dim mismatch {x.shape} @ {w.shape}")
+        dec, fn = self._resolve(key, "grouped_gemm", c, d, f, e,
+                                _dtype_bytes(x))
+        return fn(dec, x, w, out_dtype=out_dtype)
+
+    def attention(self, q, k, v, *, causal: bool = True, window: int = 0):
+        """q (B, H, Sq, D); k/v (B, H, Sk, D) (GQA heads pre-expanded)."""
+        q, k, v = _as_arrays(q, k, v)
+        key = ("attention", q.aval, k.aval, causal, window)
+        hit = self._memo.get(key)
+        if hit is not None:
+            self.plan.hits += 1
+            dec, fn = hit
+            return fn(dec, q, k, v, causal=causal, window=window)
+        b, h, sq, d = q.shape
+        sk = k.shape[2]
+        dec, fn = self._resolve(key, "attention", sq, d, sk, b * h,
+                                _dtype_bytes(q))
+        return fn(dec, q, k, v, causal=causal, window=window)
+
+
+# ---------------------------------------------------------------------------
+# Context management
+# ---------------------------------------------------------------------------
+
+
+def active_engine() -> Engine | None:
+    """The innermost `use_engine` engine, or None (XLA-native path)."""
+    return _STACK[-1] if _STACK else None
+
+
+@contextlib.contextmanager
+def use_engine(engine: Engine | None = None, *, backend: str | None = None,
+               cost_model: CostModel | None = None,
+               plan: ExecutionPlan | None = None):
+    """Route every `models.layers.dense` / `models.moe` matmul in scope
+    through an engine.  Pass an existing `Engine` to share its plan
+    across contexts, or kwargs to build a scoped one."""
+    if engine is None:
+        engine = Engine(cost_model, backend=backend, plan=plan)
+    elif backend is not None or cost_model is not None or plan is not None:
+        raise ValueError("pass either an engine or engine kwargs, not both")
+    _STACK.append(engine)
+    try:
+        yield engine
+    finally:
+        _STACK.pop()
+
+
+_DEFAULT: Engine | None = None
+
+
+def default_engine() -> Engine:
+    """Process-wide engine backing the module-level `matmul` when no
+    `use_engine` context is active.  (The deprecated `kernels.ops`
+    aliases keep their own per-backend engines — see ops._ALIAS_ENGINES
+    — so their `interpret` flag never leaks in here.)"""
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = Engine()
+    return _DEFAULT
+
+
+def matmul(a, b, *, out_dtype=None):
+    """Module-level sugar: active engine if any, else the default one."""
+    eng = active_engine() or default_engine()
+    return eng.matmul(a, b, out_dtype=out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Ahead-of-time planning over a model's GEMM trace
+# ---------------------------------------------------------------------------
+
+
+def plan_arch(cfg, *, seq_len: int | None = None, batch: int = 1,
+              cost_model: CostModel | None = None,
+              backend: str | None = None,
+              dtype_bytes: int = 2) -> ExecutionPlan:
+    """Plan every GEMM of one `repro.models.config.ArchConfig` prefill
+    pass via the `core.workloads.arch_gemms` lowering and return the
+    warm `ExecutionPlan` (save it for serve warm-start).  `dtype_bytes`
+    is the serving compute dtype width (2 = bf16 default, 4 = f32)."""
+    from repro.core.workloads import ARCH_TRACE_SEQ, arch_gemms
+
+    eng = Engine(cost_model, backend=backend)
+    eng.backend  # resolve now so the plan records a concrete backend
+    eng.plan.backend = eng.backend
+    eng.plan_gemms(arch_gemms(cfg, seq_len=seq_len or ARCH_TRACE_SEQ,
+                              batch=batch), in_bytes=dtype_bytes)
+    return eng.plan

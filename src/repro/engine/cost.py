@@ -1,0 +1,208 @@
+"""Cost models behind the engine: one protocol, two planes.
+
+`CostModel` is the structural interface the `Engine` plans through:
+given a `KernelRequest`, produce a `KernelDecision`.  Two
+implementations cover the repo's two decision planes:
+
+  TPUModel            — the refactored plane-2 v5e roofline
+                        (`core.tpu_model` holds the numeric primitives;
+                        this class owns the search surface and emits
+                        unified decisions instead of `TPUKernelConfig`).
+  AnalyticalCostModel — the plane-1 ReDas ASIC: wraps `ReDasMapper` +
+                        `AnalyticalModel` (Sec. 4.2-4.3) so the paper's
+                        mapper answers through the same protocol and its
+                        mapping lands in the same `KernelDecision`/plan
+                        cache as the TPU dispatch.
+
+Neither class imports jax; decisions are data.  Execution is the
+`KernelRegistry`'s job (engine/registry.py, engine/backends.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Protocol, runtime_checkable
+
+from .plan import KernelDecision, KernelRequest
+
+
+def _meta(**kw) -> tuple[tuple[str, object], ...]:
+    """Sorted (key, value) pairs — the canonical KernelDecision.meta form."""
+    return tuple(sorted(kw.items()))
+
+
+@runtime_checkable
+class CostModel(Protocol):
+    """What the Engine needs from a decision plane (structural typing:
+    both planes satisfy this without inheriting anything)."""
+
+    name: str
+    #: backend the model's decisions execute on when the Engine has no
+    #: override (None -> Engine picks a Pallas backend for the host).
+    default_backend: str | None
+
+    def decide(self, request: KernelRequest) -> KernelDecision:
+        """Search the model's schedule space for `request` and return the
+        chosen schedule (backend field may be left "" for the Engine to
+        fill in)."""
+        ...  # pragma: no cover - protocol
+
+
+# ---------------------------------------------------------------------------
+# Plane 2: TPU v5e roofline
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class TPUModel:
+    """The plane-2 decision surface as a CostModel.
+
+    Wraps the `core.tpu_model` primitives (Pallas block ladders, Eq. 2
+    VMEM gate, dataflow-aware HBM traffic, MXU ramp) behind `decide`.
+    The interval-sampled search itself is `choose_kernel_config`, which
+    stays module-level lru-cached in core — this class adds no second
+    cache; the unified cache is the Engine's `ExecutionPlan`.
+    """
+
+    name: str = "tpu-v5e"
+    default_backend: str | None = None  # Engine resolves a Pallas backend
+
+    def decide(self, request: KernelRequest) -> KernelDecision:
+        if request.op == "attention":
+            return self._decide_attention(request)
+        if request.op == "grouped_gemm":
+            return self._decide_grouped(request)
+        return self._decide_gemm(request)
+
+    # -- gemm --------------------------------------------------------------
+
+    def _decide_gemm(self, req: KernelRequest) -> KernelDecision:
+        from repro.core import tpu_model as tm
+
+        cfg = tm.choose_kernel_config(req.m, req.k, req.n, req.in_bytes)
+        cost = tm.estimate(req.m, req.k, req.n, cfg, req.in_bytes,
+                           req.out_bytes)
+        return KernelDecision(
+            op=req.op, dataflow=cfg.dataflow,
+            bm=cfg.bm, bk=cfg.bk, bn=cfg.bn,
+            cost_model=self.name, seconds=cost.seconds,
+            meta=_meta(hbm_bytes=cost.hbm_bytes,
+                       mxu_utilization=cost.mxu_utilization,
+                       padding_efficiency=cost.padding_efficiency))
+
+    # -- grouped gemm ------------------------------------------------------
+
+    def _decide_grouped(self, req: KernelRequest) -> KernelDecision:
+        """Per-expert blocks through the same Eq.-2 VMEM gate as the
+        dense path; the grouped kernel is OS-style (VMEM accumulator
+        over the reduction sweep), so the search is pinned to OS."""
+        from repro.core import tpu_model as tm
+
+        best, best_t = None, float("inf")
+        for bm in tm._ladder(req.m, tm.SUBLANE, 512):
+            for bk in tm._ladder(req.k, tm.LANE, 2048):
+                for bn in tm._ladder(req.n, tm.LANE, 512):
+                    cfg = tm.TPUKernelConfig("os", bm, bk, bn)
+                    if cfg.vmem_bytes(req.in_bytes) > tm.VMEM:
+                        continue
+                    t = tm.estimate(req.m, req.k, req.n, cfg,
+                                    req.in_bytes, req.out_bytes).seconds
+                    if t < best_t:
+                        best, best_t = cfg, t
+        assert best is not None, req
+        return KernelDecision(
+            op=req.op, dataflow="os",
+            bm=best.bm, bk=best.bk, bn=best.bn,
+            cost_model=self.name, seconds=best_t * req.groups,
+            meta=_meta(groups=req.groups,
+                       vmem_bytes=best.vmem_bytes(req.in_bytes)))
+
+    # -- attention ---------------------------------------------------------
+
+    def _decide_attention(self, req: KernelRequest) -> KernelDecision:
+        """Flash-attention roofline: q/k/v/o HBM traffic only (the VMEM-
+        resident online-softmax state never hits HBM).  m = Sq, n = Sk,
+        k = head dim, groups = batch x heads."""
+        from repro.core import tpu_model as tm
+
+        sq, sk, d, bh = req.m, req.n, req.k, req.groups
+        flops = 4.0 * bh * sq * sk * d            # QK^T + PV
+        hbm = req.in_bytes * bh * d * (2 * sq + 2 * sk)
+        seconds = max(flops / tm.PEAK_FLOPS, hbm / tm.HBM_BW)
+        bq = min(512, sq)
+        bk = min(512, sk)
+        return KernelDecision(
+            op=req.op, dataflow="os", bm=bq, bk=d, bn=bk,
+            cost_model=self.name, seconds=seconds,
+            meta=_meta(hbm_bytes=float(hbm), groups=bh))
+
+
+# ---------------------------------------------------------------------------
+# Plane 1: the ReDas ASIC (Sec. 4 mapper + Eq. 3-5 analytical model)
+# ---------------------------------------------------------------------------
+
+
+class AnalyticalCostModel:
+    """The paper's mapper as a CostModel.
+
+    One instance owns one `ReDasMapper` (bound to an `AcceleratorSpec`,
+    default the ReDas array itself); `decide` lowers the request to a
+    `core.analytical_model.GEMM`, runs the interval-sampling search, and
+    re-expresses the winning `MappingConfig` as a `KernelDecision` whose
+    meta carries the full ASIC mapping (logical shape, loop order,
+    buffer allocation, modeled cycles) — enough for the `simulator`
+    backend to execute it functionally.
+    """
+
+    default_backend: str | None = "simulator"
+
+    def __init__(self, spec=None, *, array_size: int | None = None, **mapper_kw):
+        from repro.core.accelerators import REDAS
+        from repro.core.mapper import ReDasMapper
+
+        self.spec = spec if spec is not None else REDAS
+        self.mapper = ReDasMapper(self.spec, array_size=array_size, **mapper_kw)
+        self.name = f"redas-asic/{self.spec.name}"
+
+    def decide(self, request: KernelRequest) -> KernelDecision:
+        from repro.core.analytical_model import GEMM
+
+        if request.op == "attention":
+            raise ValueError(
+                "the ASIC plane plans GEMMs; lower attention to its "
+                "score/context GEMMs first (core.workloads.arch_gemms)")
+        count = request.groups if request.op == "grouped_gemm" else 1
+        gemm = GEMM(request.m, request.k, request.n, count=count,
+                    name=request.name or "engine")
+        d = self.mapper.map_gemm(gemm)
+        cfg, rep = d.config, d.report
+        return KernelDecision(
+            op=request.op, dataflow=cfg.dataflow.value,
+            bm=cfg.tile_m, bk=cfg.tile_k, bn=cfg.tile_n,
+            cost_model=self.name,
+            seconds=rep.cycles / self.spec.freq_hz,
+            meta=_meta(shape_rows=cfg.shape.rows,
+                       shape_cols=cfg.shape.cols,
+                       loop_order=cfg.loop_order,
+                       alloc_input=cfg.alloc[0],
+                       alloc_weight=cfg.alloc[1],
+                       alloc_output=cfg.alloc[2],
+                       cycles=rep.cycles,
+                       pe_utilization=rep.pe_utilization))
+
+    @staticmethod
+    def mapping_config(decision: KernelDecision):
+        """Rebuild the ASIC `MappingConfig` a decision encodes (the
+        simulator backend's input)."""
+        from repro.core.analytical_model import MappingConfig
+        from repro.core.dataflow import Dataflow, LogicalShape
+
+        meta = decision.meta_dict
+        return MappingConfig(
+            dataflow=Dataflow(decision.dataflow),
+            shape=LogicalShape(int(meta["shape_rows"]), int(meta["shape_cols"])),
+            tile_m=decision.bm, tile_k=decision.bk, tile_n=decision.bn,
+            loop_order=str(meta["loop_order"]),
+            alloc=(float(meta["alloc_input"]), float(meta["alloc_weight"]),
+                   float(meta["alloc_output"])),
+        )

@@ -1,0 +1,90 @@
+"""KernelRegistry: named execution backends for planned decisions.
+
+A backend is a name ("pallas-tpu", "pallas-interpret", "xla-einsum",
+"simulator") mapping each op to a callable
+``fn(decision, *arrays, **kw) -> array``.  The kernels own their
+registrations: `kernels/redas_gemm.py`, `kernels/grouped_gemm.py` and
+`kernels/flash_attention.py` each expose ``register_into(registry)``
+(the FlexSA posture — one compile-time planner feeding heterogeneous
+kernel modes), and `engine/backends.py` contributes the XLA-einsum
+reference and the plane-1 cycle-level simulator backends.
+
+Registration is lazy: the registry imports nothing until the first
+dispatch, so building/planning with an Engine never drags in jax.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+#: the backends the default registry guarantees (ISSUE 3 surface).
+BACKENDS = ("pallas-tpu", "pallas-interpret", "xla-einsum", "simulator")
+
+
+class KernelRegistry:
+    """(backend, op) -> kernel dispatch table."""
+
+    def __init__(self):
+        self._kernels: dict[tuple[str, str], Callable] = {}
+        self._loaders: list[Callable[["KernelRegistry"], None]] = []
+
+    def register(self, backend: str, op: str, fn: Callable) -> None:
+        self._kernels[(backend, op)] = fn
+
+    def add_loader(self, loader: Callable[["KernelRegistry"], None]) -> None:
+        """Defer `loader(registry)` until the first lookup (keeps kernel
+        imports — and therefore jax — off the planning path)."""
+        self._loaders.append(loader)
+
+    def _materialize(self) -> None:
+        while self._loaders:
+            # pop only after success: a loader that raises (e.g. broken
+            # jax install) stays queued, so the real ImportError resurfaces
+            # on every dispatch instead of a misleading empty-registry
+            # KeyError, and a later retry can still succeed.
+            self._loaders[0](self)
+            self._loaders.pop(0)
+
+    def get(self, backend: str, op: str) -> Callable:
+        self._materialize()
+        try:
+            return self._kernels[(backend, op)]
+        except KeyError:
+            raise KeyError(
+                f"no kernel registered for backend={backend!r} op={op!r}; "
+                f"have {sorted(self._kernels)}") from None
+
+    def has(self, backend: str, op: str) -> bool:
+        self._materialize()
+        return (backend, op) in self._kernels
+
+    def backends(self) -> tuple[str, ...]:
+        self._materialize()
+        return tuple(sorted({b for b, _ in self._kernels}))
+
+    def ops(self, backend: str) -> tuple[str, ...]:
+        self._materialize()
+        return tuple(sorted(op for b, op in self._kernels if b == backend))
+
+
+_DEFAULT: KernelRegistry | None = None
+
+
+def _load_kernel_registrations(reg: KernelRegistry) -> None:
+    from repro.kernels import flash_attention, grouped_gemm, redas_gemm
+
+    from . import backends
+
+    redas_gemm.register_into(reg)
+    grouped_gemm.register_into(reg)
+    flash_attention.register_into(reg)
+    backends.register_into(reg)
+
+
+def default_registry() -> KernelRegistry:
+    """The process-wide registry with all four named backends."""
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = KernelRegistry()
+        _DEFAULT.add_loader(_load_kernel_registrations)
+    return _DEFAULT

@@ -1,3 +1,5 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Plane-2 compute kernels (Pallas TPU): the ReDas-scheduled GEMM, the
+# grouped (per-expert) GEMM, and flash attention.  Each module exposes
+# `register_into(registry)` so the repro.engine KernelRegistry can bind
+# them as the "pallas-tpu" / "pallas-interpret" backends; `ops.py` is
+# the deprecated pre-engine dispatch surface (DeprecationWarning shims).

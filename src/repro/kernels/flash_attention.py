@@ -122,3 +122,37 @@ def attention_hbm_bytes(b: int, h: int, sq: int, sk: int, d: int,
     """Kernelized per-layer HBM traffic: q + k + v + o only — the number
     the §Perf iteration uses to re-model the memory term."""
     return itemsize * b * h * d * (2 * sq + 2 * sk)
+
+
+def _legal_block(seq: int, want: int) -> int:
+    """Largest divisor of `seq` that is <= want (the kernel requires
+    Sq % bq == 0 / Sk % bk == 0; engine decisions are hints).  When no
+    usable divisor exists near the hint (prime-ish lengths would degrade
+    to 1-row blocks), span the sequence with one block — but only while
+    that block stays VMEM-sized; beyond that, fail with intent rather
+    than hand Mosaic a whole-sequence tile."""
+    b = min(want, seq)
+    while seq % b:
+        b -= 1
+    if b >= 8 or b == seq:
+        return b
+    if seq <= 2048:  # one block spans the seq; the score tile stays VMEM-sized
+        return seq
+    raise ValueError(
+        f"no usable attention block for seq={seq} (largest divisor <= "
+        f"{want} is {b}); pad the sequence to a multiple of 8")
+
+
+def register_into(registry) -> None:
+    """Register flash attention as the `attention` op of both Pallas
+    backends (repro.engine.KernelRegistry)."""
+    def _run(interpret: bool):
+        def run(decision, q, k, v, *, causal=True, window=0):
+            bq = _legal_block(q.shape[2], decision.bm)
+            bk = _legal_block(k.shape[2], decision.bn)
+            return flash_attention_tpu(q, k, v, causal=causal, window=window,
+                                       bq=bq, bk=bk, interpret=interpret)
+        return run
+
+    registry.register("pallas-tpu", "attention", _run(interpret=False))
+    registry.register("pallas-interpret", "attention", _run(interpret=True))

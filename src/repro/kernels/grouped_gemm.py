@@ -21,6 +21,15 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from ._compat import CompilerParams
+from .redas_gemm import VMEM_BYTES, default_blocks, vmem_bytes
+
+
+def default_group_blocks(c: int, d: int, f: int,
+                         in_dtype=jnp.bfloat16) -> tuple[int, int, int]:
+    """Per-expert blocks through the shared Eq.-2 VMEM gate — literally
+    the dense path's policy (`redas_gemm.default_blocks`) applied to the
+    per-group (C, D, F) problem."""
+    return default_blocks(c, d, f, in_dtype)
 
 
 def _kernel(x_ref, w_ref, o_ref, acc_ref, *, n_d: int):
@@ -39,12 +48,21 @@ def _kernel(x_ref, w_ref, o_ref, acc_ref, *, n_d: int):
 
 @functools.partial(jax.jit,
                    static_argnames=("bc", "bd", "bf", "interpret"))
-def grouped_matmul(x: jax.Array, w: jax.Array, *, bc: int = 128,
-                   bd: int = 128, bf: int = 128,
+def grouped_matmul(x: jax.Array, w: jax.Array, *, bc: int | None = None,
+                   bd: int | None = None, bf: int | None = None,
                    interpret: bool = False) -> jax.Array:
-    """x (E, C, D) @ w (E, D, F) -> (E, C, F); dims padded to blocks."""
+    """x (E, C, D) @ w (E, D, F) -> (E, C, F); dims padded to blocks.
+
+    Blocks default through `default_group_blocks` (the shared Eq.-2 VMEM
+    gate); explicit blocks that overflow VMEM are rejected like the
+    dense path's `pallas_gemm`."""
     e, c, d = x.shape
     _, _, f = w.shape
+    dbc, dbd, dbf = default_group_blocks(c, d, f, x.dtype)
+    bc, bd, bf = bc or dbc, bd or dbd, bf or dbf
+    if vmem_bytes(bc, bd, bf, x.dtype) > VMEM_BYTES:
+        raise ValueError(
+            f"blocks ({bc},{bd},{bf}) exceed VMEM budget {VMEM_BYTES} (Eq. 2)")
     pad = lambda v, b: -(-v // b) * b
     cp, dp, fp = pad(c, bc), pad(d, bd), pad(f, bf)
     if (cp, dp) != (c, d):
@@ -68,3 +86,42 @@ def grouped_matmul(x: jax.Array, w: jax.Array, *, bc: int = 128,
         interpret=interpret,
     )(x, w)
     return out[:, :c, :f]
+
+
+@functools.lru_cache(maxsize=None)
+def _diff_grouped(bc: int, bd: int, bf: int, interpret: bool):
+    """Differentiable wrapper (the kernel itself has no JVP rule): both
+    cotangents are grouped GEMMs on transposed operands and run through
+    the same kernel with VMEM-gated default blocks."""
+
+    @jax.custom_vjp
+    def f(x, w):
+        return grouped_matmul(x, w, bc=bc, bd=bd, bf=bf, interpret=interpret)
+
+    def fwd(x, w):
+        return f(x, w), (x, w)
+
+    def bwd(res, g):
+        x, w = res
+        dx = grouped_matmul(g, w.transpose(0, 2, 1), interpret=interpret)
+        dw = grouped_matmul(x.transpose(0, 2, 1), g, interpret=interpret)
+        return dx.astype(x.dtype), dw.astype(w.dtype)
+
+    f.defvjp(fwd, bwd)
+    # jit the wrapper: an un-jitted custom_vjp call re-traces eagerly.
+    return jax.jit(f)
+
+
+def register_into(registry) -> None:
+    """Register the grouped GEMM as the `grouped_gemm` op of both Pallas
+    backends (repro.engine.KernelRegistry)."""
+    def _run(interpret: bool):
+        def run(decision, x, w, *, out_dtype=None):
+            fn = _diff_grouped(decision.bm, decision.bk, decision.bn,
+                               interpret)
+            out = fn(x, w)
+            return out.astype(out_dtype or x.dtype)
+        return run
+
+    registry.register("pallas-tpu", "grouped_gemm", _run(interpret=False))
+    registry.register("pallas-interpret", "grouped_gemm", _run(interpret=True))

@@ -1,119 +1,68 @@
-"""Public jit'd wrappers around the ReDas Pallas GEMM.
+"""DEPRECATED shim — the decision/dispatch surface moved to `repro.engine`.
 
-`redas_matmul` is the shape-safe entry point: it pads arbitrary (M, K, N)
-to the chosen block multiples, invokes `redas_gemm.gemm`, and slices the
-result.  `auto_matmul` consults the plane-2 TPU mapper (core.tpu_model)
-to pick (dataflow, bm, bk, bn) per GEMM shape — the software analogue of
-ReDas reconfiguring per layer — with a per-shape decision cache standing
-in for the paper's "repeated GEMM shapes reuse the previous choice".
+PR 3 unified the two decision planes behind the `repro.engine`
+execution-plan API; everything this module used to own lives there now:
 
-On CPU hosts the kernels run in interpret mode (Pallas TPU lowering needs
-a real TPU); `interpret=None` auto-detects.  Models route their matmuls
-here when `use_redas_kernel=True` and through XLA einsum otherwise (the
-dry-run path).
+    redas_matmul(...)      -> repro.engine.backends.pallas_gemm(...)
+    auto_matmul(a, b)      -> repro.engine.matmul(a, b)  (Engine.matmul)
+    use_redas_kernels()    -> repro.engine.use_engine()
+    default_blocks(...)    -> repro.engine.backends.default_blocks(...)
+
+The aliases below keep downstream code importable but emit
+`DeprecationWarning` (CI's tier1-strict lane runs the suite with
+`-W error::DeprecationWarning`, so in-repo callers cannot regress onto
+them).  They will be removed once external callers have migrated.
 """
 
 from __future__ import annotations
 
-import functools
-
-import jax
-import jax.numpy as jnp
-
-from . import redas_gemm
-from .redas_gemm import LANE, SUBLANE, VMEM_BYTES, DataflowName, vmem_bytes
+import warnings
 
 
-def _round_up(x: int, mult: int) -> int:
-    return -(-x // mult) * mult
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(f"repro.kernels.ops.{old} is deprecated; use {new}",
+                  DeprecationWarning, stacklevel=3)
 
 
-def _auto_interpret(interpret: bool | None) -> bool:
-    if interpret is not None:
-        return interpret
-    return jax.default_backend() != "tpu"
+def redas_matmul(a, b, **kwargs):
+    """Deprecated alias of `repro.engine.backends.pallas_gemm`."""
+    _deprecated("redas_matmul", "repro.engine.backends.pallas_gemm")
+    from repro.engine.backends import pallas_gemm
+
+    return pallas_gemm(a, b, **kwargs)
 
 
-def default_blocks(m: int, k: int, n: int) -> tuple[int, int, int]:
-    """Hardware-aligned blocks no larger than the (padded) problem, capped
-    so the double-buffered working set fits VMEM (Eq. 2 analogue)."""
-    bm = min(_round_up(m, SUBLANE), 256)
-    bk = min(_round_up(k, LANE), 256)
-    bn = min(_round_up(n, LANE), 256)
-    while vmem_bytes(bm, bk, bn) > VMEM_BYTES:  # pragma: no cover - caps above fit
-        bk = max(LANE, bk // 2)
-    return bm, bk, bn
+_ALIAS_ENGINES: dict = {}
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("dataflow", "bm", "bk", "bn", "interpret", "out_dtype"))
-def redas_matmul(
-    a: jax.Array,
-    b: jax.Array,
-    *,
-    dataflow: DataflowName = "os",
-    bm: int | None = None,
-    bk: int | None = None,
-    bn: int | None = None,
-    interpret: bool | None = None,
-    out_dtype=None,
-) -> jax.Array:
-    """(M, K) @ (K, N) for arbitrary dims: pad -> blocked Pallas GEMM -> slice."""
-    m, k = a.shape
-    k2, n = b.shape
-    if k != k2:
-        raise ValueError(f"matmul dim mismatch {a.shape} @ {b.shape}")
-    out_dtype = out_dtype or a.dtype
-    dbm, dbk, dbn = default_blocks(m, k, n)
-    bm, bk, bn = bm or dbm, bk or dbk, bn or dbn
-    if vmem_bytes(bm, bk, bn, a.dtype) > VMEM_BYTES:
-        raise ValueError(
-            f"blocks ({bm},{bk},{bn}) exceed VMEM budget {VMEM_BYTES} (Eq. 2)")
+def auto_matmul(a, b, *, interpret: bool | None = None, out_dtype=None):
+    """Deprecated alias of `repro.engine.matmul` (mapper-planned dispatch
+    with a per-backend shared plan cache, so `interpret` keeps its old
+    per-call meaning and never leaks into other engines)."""
+    _deprecated("auto_matmul", "repro.engine.matmul / Engine.matmul")
+    from repro.engine import Engine
+    from repro.engine.backends import auto_interpret
 
-    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
-    a_p = jnp.pad(a, ((0, mp - m), (0, kp - k))) if (mp, kp) != (m, k) else a
-    b_p = jnp.pad(b, ((0, kp - k), (0, np_ - n))) if (kp, np_) != (k, n) else b
-    out = redas_gemm.gemm(
-        a_p, b_p, dataflow=dataflow, bm=bm, bk=bk, bn=bn,
-        interpret=_auto_interpret(interpret), out_dtype=out_dtype)
-    return out[:m, :n] if (mp, np_) != (m, n) else out
+    backend = ("pallas-interpret" if auto_interpret(interpret)
+               else "pallas-tpu")
+    eng = _ALIAS_ENGINES.get(backend)
+    if eng is None:
+        eng = _ALIAS_ENGINES[backend] = Engine(backend=backend)
+    return eng.matmul(a, b, out_dtype=out_dtype)
 
 
-# --------------------------------------------------------------------------
-# Mapper-driven dispatch (per-shape decision cache, Sec. 4.3)
-# --------------------------------------------------------------------------
+def default_blocks(m: int, k: int, n: int):
+    """Deprecated alias of `repro.engine.backends.default_blocks`."""
+    _deprecated("default_blocks", "repro.engine.backends.default_blocks")
+    from repro.engine.backends import default_blocks as _db
+
+    return _db(m, k, n)
 
 
-@functools.lru_cache(maxsize=4096)
-def _decide(m: int, k: int, n: int) -> tuple[str, int, int, int]:
-    from repro.core.tpu_model import choose_kernel_config  # lazy: heavy import
-
-    cfg = choose_kernel_config(m, k, n)
-    return cfg.dataflow, cfg.bm, cfg.bk, cfg.bn
-
-
-def auto_matmul(a: jax.Array, b: jax.Array, *, interpret: bool | None = None,
-                out_dtype=None) -> jax.Array:
-    """Mapper-selected dataflow + blocks for this GEMM shape."""
-    (m, k), (_, n) = a.shape, b.shape
-    dataflow, bm, bk, bn = _decide(m, k, n)
-    return redas_matmul(
-        a, b, dataflow=dataflow, bm=bm, bk=bk, bn=bn,  # type: ignore[arg-type]
-        interpret=interpret, out_dtype=out_dtype)
-
-
-import contextlib  # noqa: E402
-
-
-@contextlib.contextmanager
 def use_redas_kernels():
-    """Route every models.layers.dense matmul through the mapper-
-    dispatched Pallas GEMM (use_redas_kernel=True in DESIGN.md §3)."""
-    from repro.models import layers
-    prev = layers.USE_REDAS_KERNEL
-    layers.USE_REDAS_KERNEL = True
-    try:
-        yield
-    finally:
-        layers.USE_REDAS_KERNEL = prev
+    """Deprecated alias of `repro.engine.use_engine()` (mapper-planned
+    Pallas dispatch for every models.layers.dense matmul in scope)."""
+    _deprecated("use_redas_kernels", "repro.engine.use_engine")
+    from repro.engine import use_engine
+
+    return use_engine()

@@ -75,6 +75,25 @@ def vmem_bytes(bm: int, bk: int, bn: int, in_dtype=jnp.bfloat16) -> int:
     return 2 * (bm * bk * w + bk * bn * w) + bm * bn * 4  # acc always f32
 
 
+def round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def default_blocks(m: int, k: int, n: int,
+                   in_dtype=jnp.bfloat16) -> tuple[int, int, int]:
+    """Hardware-aligned blocks no larger than the (padded) problem, capped
+    so the double-buffered working set fits VMEM (Eq. 2 analogue).  The
+    single block-selection policy shared by the dense path
+    (engine.backends.pallas_gemm) and the grouped path
+    (grouped_gemm.default_group_blocks)."""
+    bm = min(round_up(m, SUBLANE), 256)
+    bk = min(round_up(k, LANE), 256)
+    bn = min(round_up(n, LANE), 256)
+    while vmem_bytes(bm, bk, bn, in_dtype) > VMEM_BYTES:  # pragma: no cover
+        bk = max(LANE, bk // 2)
+    return bm, bk, bn
+
+
 def _mac(a_ref, b_ref):
     return jnp.dot(
         a_ref[...].astype(jnp.float32), b_ref[...].astype(jnp.float32),
@@ -129,7 +148,7 @@ def gemm(
     out_dtype=jnp.float32,
 ) -> jax.Array:
     """Tiled (M, K) @ (K, N); dims must be multiples of the block dims
-    (ops.redas_matmul pads arbitrary shapes).  Accumulates in f32."""
+    (engine.backends.pallas_gemm pads arbitrary shapes).  Accumulates in f32."""
     m, k = a.shape
     k2, n = b.shape
     if k != k2:
@@ -202,3 +221,12 @@ def gemm(
 
     out_f32 = jax.lax.fori_loop(0, gk, body, jnp.zeros((m, n), jnp.float32))
     return out_f32.astype(out_dtype)
+
+
+def register_into(registry) -> None:
+    """Register the ReDas GEMM as the `gemm` op of both Pallas backends
+    (repro.engine.KernelRegistry)."""
+    from repro.engine.backends import _gemm_backend  # lazy: avoids cycle
+
+    registry.register("pallas-tpu", "gemm", _gemm_backend(interpret=False))
+    registry.register("pallas-interpret", "gemm", _gemm_backend(interpret=True))

@@ -86,9 +86,13 @@ def step_fn_for(cfg, shape, tcfg):
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
              micro: int | None = None,
              shard_grad_accum: bool = False,
-             moe_impl: str | None = None) -> dict:
+             moe_impl: str | None = None,
+             kernel_backend: str | None = None) -> dict:
     """shard_grad_accum=False reproduces the recorded §Roofline baseline;
-    perf iterations re-run cells with overrides (see EXPERIMENTS.md §Perf)."""
+    perf iterations re-run cells with overrides (see EXPERIMENTS.md §Perf).
+    kernel_backend routes every model matmul through a repro.engine
+    context ("xla-einsum" exercises the unified decision path with
+    baseline numerics; Pallas backends need the matching host)."""
     import dataclasses as _dc
     cfg = get_config(arch)
     if moe_impl and cfg.moe is not None:
@@ -103,13 +107,24 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_dev = mesh.devices.size
     tcfg = TrainConfig(microbatches=micro or MICROBATCHES.get(arch, 2),
-                       shard_grad_accum=shard_grad_accum)
+                       shard_grad_accum=shard_grad_accum,
+                       kernel_backend=kernel_backend)
+    import contextlib
+
+    from repro import engine as engine_mod
+
+    # train cells route through TrainConfig.kernel_backend; prefill/decode
+    # cells trace inside an engine context here.
+    scope = (engine_mod.use_engine(backend=kernel_backend)
+             if kernel_backend and shape.step != "train"
+             else contextlib.nullcontext())
     t0 = time.time()
     with mesh, shd.use_mesh(mesh):
         args, shardings = S.input_specs(cfg, shape, mesh, tcfg)
         fn, donate = step_fn_for(cfg, shape, tcfg)
-        lowered = jax.jit(fn, in_shardings=shardings,
-                          donate_argnums=donate).lower(*args)
+        with scope:
+            lowered = jax.jit(fn, in_shardings=shardings,
+                              donate_argnums=donate).lower(*args)
         t_lower = time.time() - t0
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
@@ -240,6 +255,10 @@ def main() -> None:
     ap.add_argument("--save-hlo", default=None,
                     help="dump the partitioned HLO text to this path")
     ap.add_argument("--moe-impl", choices=("einsum", "sort"), default=None)
+    ap.add_argument("--kernel-backend", default=None,
+                    choices=("pallas-tpu", "pallas-interpret", "xla-einsum"),
+                    help="trace model matmuls through a repro.engine "
+                         "context instead of XLA-native contractions")
     args = ap.parse_args()
     global SAVE_HLO
     SAVE_HLO = args.save_hlo
@@ -255,7 +274,8 @@ def main() -> None:
     report = run_cell(args.arch, args.shape, multi_pod=(args.mesh == "multi"),
                       micro=args.micro,
                       shard_grad_accum=args.shard_grad_accum,
-                      moe_impl=args.moe_impl)
+                      moe_impl=args.moe_impl,
+                      kernel_backend=args.kernel_backend)
     out = args.out or _out_path(args.arch, args.shape, args.mesh)
     with open(out, "w") as f:
         json.dump(report, f, indent=2)

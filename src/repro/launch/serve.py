@@ -28,6 +28,12 @@ def main(argv=None) -> dict:
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--kernel-backend", default=None,
+                    choices=("pallas-tpu", "pallas-interpret", "xla-einsum"),
+                    help="repro.engine backend for model matmuls")
+    ap.add_argument("--plan", default=None,
+                    help="ExecutionPlan JSON to warm-start the decision "
+                         "cache from (see repro.engine.plan_arch)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -36,7 +42,8 @@ def main(argv=None) -> dict:
     dtype = jnp.float32 if args.smoke else jnp.bfloat16
     scfg = serve_lib.ServeConfig(
         max_seq=args.prompt_len + args.gen + 1, batch=args.batch,
-        compute_dtype=dtype, cache_dtype=dtype)
+        compute_dtype=dtype, cache_dtype=dtype,
+        kernel_backend=args.kernel_backend, plan_path=args.plan)
     mesh = make_test_mesh()
 
     with mesh, shd.use_mesh(mesh):

@@ -46,6 +46,10 @@ def main(argv=None) -> dict:
     ap.add_argument("--data-path", default=None,
                     help="memmap token corpus; default synthetic")
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--kernel-backend", default=None,
+                    choices=("pallas-tpu", "pallas-interpret", "xla-einsum"),
+                    help="repro.engine backend for model matmuls "
+                         "(default: XLA-native)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -54,6 +58,7 @@ def main(argv=None) -> dict:
         compute_dtype=jnp.float32 if args.smoke else jnp.bfloat16,
         optimizer=AdamWConfig(
             lr=linear_warmup_cosine(args.lr, args.warmup, args.steps)),
+        kernel_backend=args.kernel_backend,
     )
     mesh = make_test_mesh()
     source = make_source(cfg, DataConfig(args.batch, args.seq, args.seed),

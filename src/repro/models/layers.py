@@ -34,19 +34,18 @@ def dense_init(key, d_in: int, d_out: int, *, bias: bool = False, scale: float |
     return p
 
 
-# When True (kernels.ops.use_redas_kernels context), every dense matmul
-# routes through the mapper-dispatched Pallas GEMM — interpret mode on
-# CPU, real pallas_call on TPU.  Default False: XLA einsum (the dry-run
-# path; Pallas does not lower on the CPU host-device backend).
-USE_REDAS_KERNEL = False
-
-
 def dense(p, x: Array) -> Array:
+    """Inside a `repro.engine.use_engine` context every dense matmul
+    routes through the engine's planned kernel (mapper-chosen dataflow +
+    blocks, unified decision cache — DESIGN.md §3); outside it, XLA
+    einsum (the dry-run path; Pallas does not lower on the CPU
+    host-device backend)."""
+    from repro.engine import active_engine
     w = p["w"].astype(x.dtype)
-    if USE_REDAS_KERNEL:
-        from repro.kernels.ops import auto_matmul
-        y = auto_matmul(x.reshape(-1, x.shape[-1]), w,
-                        out_dtype=x.dtype).reshape(*x.shape[:-1], w.shape[-1])
+    eng = active_engine()
+    if eng is not None:
+        y = eng.matmul(x.reshape(-1, x.shape[-1]), w,
+                       out_dtype=x.dtype).reshape(*x.shape[:-1], w.shape[-1])
     else:
         y = x @ w
     if "b" in p:

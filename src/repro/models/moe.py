@@ -9,8 +9,9 @@ expert dim on the 'model' mesh axis (expert parallelism) and the token
 dims on ('pod','data').
 
 The expert GEMMs are exactly the small/irregular shapes ReDas targets
-(granite: d_ff=512); on TPU the mapper picks their Pallas schedule via
-kernels/ops.auto_matmul when enabled.
+(granite: d_ff=512); inside a `repro.engine.use_engine` context the
+engine plans their grouped-GEMM schedule (Eq.-2 VMEM-gated blocks) and
+dispatches the per-expert Pallas kernel.
 """
 
 from __future__ import annotations
@@ -68,7 +69,22 @@ def _route(p, cfg, x: Array):
 
 
 def _expert_ffn(we, x_in: Array) -> Array:
-    """x_in (E, ..., D) -> (E, ..., D) through per-expert SwiGLU."""
+    """x_in (E, ..., D) -> (E, ..., D) through per-expert SwiGLU.
+
+    Inside a `repro.engine.use_engine` context the three per-expert
+    contractions dispatch through the engine's `grouped_gemm` decision
+    (one planned, VMEM-gated Pallas schedule shared by wi/wg, another
+    for wo); otherwise plain XLA einsums."""
+    from repro.engine import active_engine
+    eng = active_engine()
+    if eng is not None:
+        e, d = x_in.shape[0], x_in.shape[-1]
+        xf = x_in.reshape(e, -1, d)
+        h = eng.grouped_matmul(xf, we["wi"].astype(x_in.dtype))
+        g = eng.grouped_matmul(xf, we["wg"].astype(x_in.dtype))
+        out = eng.grouped_matmul(jax.nn.silu(g) * h,
+                                 we["wo"].astype(x_in.dtype))
+        return out.reshape(x_in.shape)
     h = jnp.einsum("e...d,edf->e...f", x_in, we["wi"].astype(x_in.dtype))
     g = jnp.einsum("e...d,edf->e...f", x_in, we["wg"].astype(x_in.dtype))
     return jnp.einsum("e...f,efd->e...d", jax.nn.silu(g) * h,

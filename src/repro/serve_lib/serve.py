@@ -9,15 +9,23 @@ Cache kinds (models/transformer.init_cache):
 `generate` is the end-to-end driver: greedy (or temperature) sampling
 with the decode loop as a host loop of jitted steps — each step is one
 XLA program, so serving latency is step-latency x tokens.
+
+Kernel dispatch goes through `repro.engine` when
+`ServeConfig.kernel_backend` is set: prefill and decode trace inside one
+engine context so every matmul shares the unified decision cache, and
+`warm_start_engine` loads a saved `ExecutionPlan` JSON so the first
+trace reuses decisions planned offline instead of re-searching.
 """
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 
 import jax
 import jax.numpy as jnp
 
+from repro import engine as engine_mod
 from repro.dist import sharding as shd
 from repro.models import transformer as T
 from repro.models.config import ArchConfig
@@ -29,6 +37,44 @@ class ServeConfig:
     batch: int
     compute_dtype: object = jnp.bfloat16
     cache_dtype: object = jnp.bfloat16
+    # repro.engine backend for every model matmul (None -> XLA-native).
+    kernel_backend: str | None = None
+    # optional ExecutionPlan JSON to warm-start the decision cache from.
+    plan_path: str | None = None
+
+
+# One engine per ServeConfig (frozen, hashable): repeated generate()
+# calls share the decision memo instead of re-reading the plan JSON.
+_ENGINES: dict[ServeConfig, "engine_mod.Engine"] = {}
+
+
+def warm_start_engine(scfg: ServeConfig) -> "engine_mod.Engine | None":
+    """Build (once per ServeConfig) the serving engine: `kernel_backend`
+    selects the registry backend, `plan_path` (an `ExecutionPlan.save`
+    artifact) pre-fills the decision cache so first-trace planning cost
+    drops to lookups."""
+    if scfg.kernel_backend is None:
+        return None
+    cached = _ENGINES.get(scfg)
+    if cached is not None:
+        return cached
+    plan = None
+    if scfg.plan_path:
+        plan = engine_mod.ExecutionPlan.load(scfg.plan_path)
+        # dtype width is part of the decision-cache key: a plan built for
+        # another compute dtype would silently miss on every lookup.
+        want = jnp.dtype(scfg.compute_dtype).itemsize
+        if len(plan) and not any(req.in_bytes == want for req, _ in plan):
+            import warnings
+            warnings.warn(
+                f"warm-start plan {scfg.plan_path!r} holds no decisions "
+                f"for in_bytes={want} (compute_dtype="
+                f"{jnp.dtype(scfg.compute_dtype).name}); every lookup "
+                f"will miss — re-plan with plan_arch(dtype_bytes={want})",
+                UserWarning, stacklevel=2)
+    eng = engine_mod.Engine(backend=scfg.kernel_backend, plan=plan)
+    _ENGINES[scfg] = eng
+    return eng
 
 
 def init_cache(cfg: ArchConfig, scfg: ServeConfig):
@@ -52,8 +98,22 @@ def make_decode_step(cfg: ArchConfig, scfg: ServeConfig):
 
 def generate(params, cfg: ArchConfig, scfg: ServeConfig, prompt: jax.Array,
              n_tokens: int, *, temperature: float = 0.0, key=None,
-             embeds=None):
-    """prompt (B, S_prompt) int32 -> (B, n_tokens) greedy/sampled tokens."""
+             embeds=None, engine: "engine_mod.Engine | None" = None):
+    """prompt (B, S_prompt) int32 -> (B, n_tokens) greedy/sampled tokens.
+
+    `engine` overrides the `ServeConfig`-derived one (pass a shared
+    Engine to keep one decision cache across many generate calls)."""
+    eng = engine if engine is not None else warm_start_engine(scfg)
+    scope = (engine_mod.use_engine(eng) if eng is not None
+             else contextlib.nullcontext())
+    with scope:
+        return _generate(params, cfg, scfg, prompt, n_tokens,
+                         temperature=temperature, key=key, embeds=embeds)
+
+
+def _generate(params, cfg: ArchConfig, scfg: ServeConfig, prompt: jax.Array,
+              n_tokens: int, *, temperature: float = 0.0, key=None,
+              embeds=None):
     prefill_step = jax.jit(make_prefill_step(cfg, scfg))
     decode_step = jax.jit(make_decode_step(cfg, scfg))
     mesh = shd.active_mesh()

@@ -12,12 +12,14 @@ Distribution posture (DESIGN.md §4):
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
+from repro import engine as engine_mod
 from repro.dist import sharding as shd
 from repro.dist.sharding import constrain
 from repro.models import transformer as T
@@ -39,6 +41,11 @@ class TrainConfig:
     # microbatch trip (measured 2.0 TB/device/step on mistral-large);
     # with it the reductions become reduce-scatters into the FSDP shards.
     shard_grad_accum: bool = True
+    # repro.engine backend every model matmul traces through (e.g.
+    # "pallas-tpu" / "pallas-interpret" / "xla-einsum").  None keeps the
+    # XLA-native path.  One Engine (and so one decision cache) spans all
+    # microbatch traces of the step.
+    kernel_backend: str | None = None
 
 
 def init_state(key, cfg: ArchConfig, tcfg: TrainConfig) -> dict:
@@ -80,6 +87,12 @@ def make_train_step(cfg: ArchConfig, tcfg: TrainConfig):
     donate_argnums=(0,) and the state's shardings."""
     loss_fn = make_loss_fn(cfg, tcfg)
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    eng = (engine_mod.Engine(backend=tcfg.kernel_backend)
+           if tcfg.kernel_backend else None)
+
+    def _engine_scope():
+        return (engine_mod.use_engine(eng) if eng is not None
+                else contextlib.nullcontext())
 
     def _constrain_like_params(tree, params):
         mesh = shd.active_mesh()
@@ -91,6 +104,10 @@ def make_train_step(cfg: ArchConfig, tcfg: TrainConfig):
                 t, jax.sharding.NamedSharding(mesh, s)), tree, pspecs)
 
     def train_step(state: dict, batch: dict):
+        with _engine_scope():
+            return _train_step(state, batch)
+
+    def _train_step(state: dict, batch: dict):
         params = state["params"]
         inputs, labels = _split_batch(batch, cfg)
         n_micro = tcfg.microbatches

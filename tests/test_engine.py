@@ -1,0 +1,353 @@
+"""repro.engine: unified decisions, plan cache, registry dispatch."""
+
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.engine import (AnalyticalCostModel, BACKENDS, CostModel, Engine,
+                          ExecutionPlan, KernelDecision, KernelRequest,
+                          TPUModel, active_engine, default_registry,
+                          plan_arch, use_engine)
+from repro.kernels.ref import matmul_ref
+
+
+def test_import_repro_is_jax_free():
+    """Satellite: `import repro` (and planning) must not import jax."""
+    code = (
+        "import sys\n"
+        "import repro\n"
+        "assert 'jax' not in sys.modules, 'repro pulled jax'\n"
+        "assert repro.__version__\n"
+        "import repro.engine\n"
+        "assert 'jax' not in sys.modules, 'repro.engine pulled jax'\n"
+        "cfg = repro.get_config('qwen2-1.5b', smoke=True)\n"
+        "plan = repro.plan_arch(cfg, seq_len=32, backend='pallas-interpret')\n"
+        "assert 'jax' not in sys.modules, 'planning pulled jax'\n"
+        "assert len(plan) > 0\n"
+    )
+    subprocess.run([sys.executable, "-c", code], check=True,
+                   env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+                   cwd=__file__.rsplit("/tests/", 1)[0])
+
+
+def test_cost_model_protocol():
+    assert isinstance(TPUModel(), CostModel)
+    assert isinstance(AnalyticalCostModel(), CostModel)
+
+
+def test_unified_decision_both_planes():
+    """The acceptance claim: ReDasMapper and the TPU dispatch answer the
+    same KernelRequest with the same KernelDecision dataclass."""
+    req = KernelRequest("gemm", 43264, 144, 32, name="tinyyolo_l2")
+    tpu = TPUModel().decide(req)
+    asic = AnalyticalCostModel().decide(req)
+    assert isinstance(tpu, KernelDecision) and isinstance(asic, KernelDecision)
+    assert tpu.dataflow in ("os", "ws", "is")
+    assert asic.dataflow in ("os", "ws", "is")
+    # the ASIC decision carries its full mapping for the simulator backend
+    cfg = AnalyticalCostModel.mapping_config(asic)
+    assert cfg.tile_m == asic.bm and cfg.tile_k == asic.bk
+    assert tpu.seconds > 0 and asic.seconds > 0
+
+
+def test_decision_cache_stats():
+    eng = Engine(backend="pallas-interpret")
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(16, 64)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(64, 32)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(32, 48)), jnp.float32)
+    eng.matmul(a, b)                      # miss
+    eng.matmul(a, b)                      # hit (memo)
+    eng.matmul(a, b)                      # hit
+    eng.matmul(b, c)                      # second shape: miss
+    st = eng.plan.stats
+    assert st["decisions"] == 2
+    assert st["misses"] == 2
+    assert st["hits"] == 2
+    assert 0 < st["hit_rate"] < 1
+
+
+def test_plan_json_roundtrip_byte_identical(tmp_path):
+    cfg_path = tmp_path / "plan.json"
+    eng = Engine(backend="pallas-interpret")
+    eng.plan_gemms([(128, 256, 512), (1, 1024, 16), (43264, 144, 32)])
+    eng.plan.save(cfg_path)
+    text1 = cfg_path.read_text()
+    plan2 = ExecutionPlan.load(cfg_path)
+    path2 = tmp_path / "plan2.json"
+    plan2.save(path2)
+    assert path2.read_text() == text1          # byte-identical round trip
+    assert len(plan2) == 3
+    # decisions survive with full fidelity
+    for (req, dec), (req2, dec2) in zip(eng.plan, plan2):
+        assert req == req2 and dec == dec2
+
+
+def test_plan_load_rejects_other_json(tmp_path):
+    p = tmp_path / "x.json"
+    p.write_text('{"hello": 1}')
+    with pytest.raises(ValueError, match="not an execution plan"):
+        ExecutionPlan.load(p)
+
+
+def test_plan_arch_covers_trace():
+    from repro.configs import get_config
+    from repro.core.workloads import arch_gemms
+
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    plan = plan_arch(cfg, seq_len=64, backend="pallas-interpret")
+    trace = arch_gemms(cfg, seq_len=64)
+    distinct = {(g.M, g.K, g.N) for g in trace}
+    assert len(plan) == len(distinct)
+    assert plan.backend == "pallas-interpret"
+    assert plan.misses == len(distinct)
+    assert plan.hits == len(trace) - len(distinct)
+
+
+def test_warm_start_plan_skips_search(tmp_path):
+    """Serve warm-start: a loaded plan answers without cost-model work."""
+    cfg_path = tmp_path / "plan.json"
+    eng = Engine(backend="pallas-interpret")
+    eng.plan_gemms([(16, 64, 32)], in_bytes=4)  # match the f32 arrays below
+    eng.plan.save(cfg_path)
+
+    class Exploding:
+        name = "exploding"
+        default_backend = None
+
+        def decide(self, req):  # pragma: no cover - must not be called
+            raise AssertionError("warm-started plan should not re-search")
+
+    warm = Engine(Exploding(), backend="pallas-interpret",
+                  plan=ExecutionPlan.load(cfg_path))
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.normal(size=(16, 64)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(64, 32)), jnp.float32)
+    got = warm.matmul(a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(matmul_ref(a, b)),
+                               rtol=2e-5, atol=2e-4)
+
+
+def test_asic_plan_rejected_on_pallas_backend(tmp_path):
+    """An AnalyticalCostModel plan (ASIC tile dims, not Pallas-aligned)
+    must fail with intent when loaded into a Pallas-backend engine."""
+    p = tmp_path / "asic.json"
+    asic = Engine(AnalyticalCostModel())
+    asic.plan_gemms([(300, 144, 32)], in_bytes=4)
+    asic.plan.save(p)
+    warm = Engine(backend="pallas-interpret", plan=ExecutionPlan.load(p))
+    rng = np.random.default_rng(9)
+    a = jnp.asarray(rng.normal(size=(300, 144)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(144, 32)), jnp.float32)
+    with pytest.raises(ValueError, match="ASIC cost model"):
+        warm.matmul(a, b)
+
+
+def test_asic_cost_model_on_pallas_backend_fails_with_intent():
+    """Fresh ASIC decisions (not just warm-start hits) on a Pallas
+    backend must raise the re-plan message, not a block-alignment error."""
+    eng = Engine(AnalyticalCostModel(), backend="pallas-interpret")
+    with pytest.raises(ValueError, match="ASIC cost model"):
+        eng.matmul(jnp.ones((300, 144), jnp.float32),
+                   jnp.ones((144, 32), jnp.float32))
+
+
+def test_engine_matmul_accepts_numpy_inputs():
+    """The pre-engine auto_matmul accepted numpy via jit auto-conversion;
+    the aval-keyed engine path must too (migration compatibility)."""
+    rng = np.random.default_rng(10)
+    a = rng.normal(size=(8, 16)).astype(np.float32)
+    b = rng.normal(size=(16, 8)).astype(np.float32)
+    got = Engine(backend="pallas-interpret").matmul(a, b)
+    np.testing.assert_allclose(np.asarray(got), a @ b, rtol=2e-5, atol=2e-4)
+
+
+def test_warm_start_engine_cached_per_config(tmp_path):
+    from repro.serve_lib import serve as serve_lib
+
+    p = tmp_path / "plan.json"
+    Engine(backend="pallas-interpret").plan_gemms([(16, 64, 32)],
+                                                  in_bytes=4).plan.save(p)
+    scfg = serve_lib.ServeConfig(
+        max_seq=8, batch=1, compute_dtype=jnp.float32,
+        kernel_backend="pallas-interpret", plan_path=str(p))
+    e1 = serve_lib.warm_start_engine(scfg)
+    e2 = serve_lib.warm_start_engine(scfg)
+    assert e1 is e2   # repeated generate() calls share the decision memo
+
+
+def test_warm_start_dtype_mismatch_warns(tmp_path):
+    from repro.serve_lib import serve as serve_lib
+
+    p = tmp_path / "plan.json"
+    Engine(backend="pallas-interpret").plan_gemms([(16, 64, 32)],
+                                                  in_bytes=2).plan.save(p)
+    scfg = serve_lib.ServeConfig(
+        max_seq=8, batch=1, compute_dtype=jnp.float32,
+        kernel_backend="pallas-interpret", plan_path=str(p))
+    with pytest.warns(UserWarning, match="in_bytes=4"):
+        serve_lib.warm_start_engine(scfg)
+
+
+def test_attention_block_hint_never_degenerates():
+    from repro.kernels.flash_attention import _legal_block
+
+    assert _legal_block(1024, 512) == 512
+    assert _legal_block(9, 512) == 9
+    assert _legal_block(1021, 512) == 1021   # prime: one block, not 1-row
+
+
+def test_registry_backends_complete():
+    reg = default_registry()
+    assert set(BACKENDS) <= set(reg.backends())
+    for backend in ("pallas-tpu", "pallas-interpret", "xla-einsum"):
+        assert set(reg.ops(backend)) == {"attention", "gemm", "grouped_gemm"}
+    assert reg.ops("simulator") == ("gemm",)
+    with pytest.raises(KeyError, match="no kernel registered"):
+        reg.get("simulator", "attention")
+
+
+def test_backend_parity_gemm():
+    """The same engine decisions execute identically on xla-einsum and
+    pallas-interpret."""
+    rng = np.random.default_rng(2)
+    a = jnp.asarray(rng.normal(size=(33, 150)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(150, 65)), jnp.float32)
+    outs = {}
+    for backend in ("xla-einsum", "pallas-interpret"):
+        outs[backend] = np.asarray(Engine(backend=backend).matmul(a, b))
+    np.testing.assert_allclose(outs["xla-einsum"], outs["pallas-interpret"],
+                               rtol=2e-5, atol=5e-4)
+
+
+def test_backend_parity_grouped():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(4, 12, 40)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(4, 40, 24)), jnp.float32)
+    outs = {}
+    for backend in ("xla-einsum", "pallas-interpret"):
+        eng = Engine(backend=backend)
+        outs[backend] = np.asarray(eng.grouped_matmul(x, w))
+    np.testing.assert_allclose(outs["xla-einsum"], outs["pallas-interpret"],
+                               rtol=2e-5, atol=5e-4)
+
+
+def test_grouped_decision_is_vmem_gated():
+    from repro.kernels.redas_gemm import VMEM_BYTES, vmem_bytes
+
+    dec = TPUModel().decide(
+        KernelRequest("grouped_gemm", 4096, 8192, 4096, groups=8))
+    assert dec.dataflow == "os"
+    assert vmem_bytes(dec.bm, dec.bk, dec.bn) <= VMEM_BYTES
+
+
+def test_simulator_backend_executes_asic_decision():
+    eng = Engine(AnalyticalCostModel())
+    assert eng.backend == "simulator"
+    rng = np.random.default_rng(4)
+    a = jnp.asarray(rng.normal(size=(10, 6)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(6, 8)), jnp.float32)
+    got = eng.matmul(a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(a @ b),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_use_engine_nesting_and_active():
+    assert active_engine() is None
+    with use_engine(backend="xla-einsum") as outer:
+        assert active_engine() is outer
+        with use_engine(backend="pallas-interpret") as inner:
+            assert active_engine() is inner
+        assert active_engine() is outer
+    assert active_engine() is None
+    with pytest.raises(ValueError, match="not both"):
+        with use_engine(Engine(), backend="xla-einsum"):
+            pass
+
+
+def test_engine_attention_matches_reference():
+    from repro.models.layers import flash_attention
+
+    rng = np.random.default_rng(5)
+    b, h, s, d = 1, 2, 64, 16
+    q = jnp.asarray(rng.normal(size=(b, h, s, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, h, s, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, h, s, d)), jnp.float32)
+    eng = Engine(backend="pallas-interpret")
+    got = eng.attention(q, k, v, causal=True)
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    kv_len = jnp.full((b,), s, jnp.int32)
+    want = flash_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                           v.transpose(0, 2, 1, 3), positions, kv_len,
+                           True, 0, s).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-3)
+
+
+def test_engine_matmul_differentiable():
+    """The dispatch-layer custom VJP: grads through the Pallas backend
+    match XLA (training with kernel_backend set depends on this)."""
+    import jax
+
+    def loss_x(w, x):
+        return jnp.sum(jnp.tanh(x @ w))
+
+    def loss_eng(w, x):
+        return jnp.sum(jnp.tanh(active_engine().matmul(x, w)))
+
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(size=(12, 40)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(40, 24)), jnp.float32)
+    g_ref = jax.grad(loss_x)(w, x)
+    with use_engine(backend="pallas-interpret"):
+        g_eng = jax.grad(loss_eng)(w, x)
+    np.testing.assert_allclose(np.asarray(g_eng), np.asarray(g_ref),
+                               rtol=2e-5, atol=5e-4)
+
+
+def test_grouped_matmul_differentiable():
+    import jax
+    from repro.kernels.grouped_gemm import grouped_matmul
+
+    rng = np.random.default_rng(8)
+    x = jnp.asarray(rng.normal(size=(3, 10, 16)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(3, 16, 8)), jnp.float32)
+
+    def loss_ref(w_):
+        return jnp.sum(jnp.tanh(jnp.einsum("ecd,edf->ecf", x, w_)))
+
+    def loss_eng(w_):
+        return jnp.sum(jnp.tanh(active_engine().grouped_matmul(x, w_)))
+
+    g_ref = jax.grad(loss_ref)(w)
+    with use_engine(backend="pallas-interpret"):
+        g_eng = jax.grad(loss_eng)(w)
+    np.testing.assert_allclose(np.asarray(g_eng), np.asarray(g_ref),
+                               rtol=2e-5, atol=5e-4)
+    assert grouped_matmul is not None  # direct entry stays importable
+
+
+def test_moe_block_through_engine():
+    """The sorted-dispatch MoE path routes its expert FFN through the
+    engine's grouped_gemm decision and matches the XLA einsum path."""
+    import dataclasses
+
+    import jax
+    from repro.configs import get_config
+    from repro.models import moe
+
+    cfg = get_config("mixtral-8x7b", smoke=True)
+    cfg = dataclasses.replace(              # sorted dispatch: the grouped path
+        cfg, moe=dataclasses.replace(cfg.moe, impl="sort"))
+    params = moe.moe_init(jax.random.PRNGKey(0), cfg)
+    x = 0.1 * jax.random.normal(jax.random.PRNGKey(1), (1, 16, cfg.d_model),
+                                jnp.float32)
+    ref, _ = moe.moe_block(params, cfg, x)
+    with use_engine(backend="pallas-interpret") as eng:
+        got, _ = moe.moe_block(params, cfg, x)
+    assert any(req.op == "grouped_gemm" for req, _ in eng.plan)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-3)

@@ -1,0 +1,67 @@
+"""IS is the transposed WS problem, end to end (satellite, ISSUE 3).
+
+The paper treats input-stationary as weight-stationary with the roles of
+the two operands swapped: O = A @ B with A stationary is exactly
+O^T = B^T @ A^T with A^T as the stationary "weight".  The identity must
+hold at every layer of the stack:
+
+  * core.simulator.simulate_gemm — outputs transpose-equal AND the
+    cycle counts match (the Eq. 4 streaming term is symmetric);
+  * the Pallas kernel — IS dispatch equals WS on (B^T, A^T) transposed;
+  * the plane-2 cost model — estimate() is invariant under the swap.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dataflow import Dataflow
+from repro.core.simulator import simulate_gemm
+from repro.core.tpu_model import TPUKernelConfig, estimate, hbm_traffic
+from repro.engine.backends import pallas_gemm
+
+dims = st.integers(1, 24)
+
+
+@given(dims, dims, dims)
+@settings(max_examples=15, deadline=None)
+def test_simulator_is_equals_transposed_ws(m, k, n):
+    rng = np.random.default_rng(m * 31 + k * 7 + n)
+    a = rng.normal(size=(m, k))
+    b = rng.normal(size=(k, n))
+    out_is, cyc_is = simulate_gemm(a, b, Dataflow.IS)
+    out_ws, cyc_ws = simulate_gemm(b.T, a.T, Dataflow.WS)
+    assert cyc_is == cyc_ws
+    np.testing.assert_allclose(np.asarray(out_is), np.asarray(out_ws).T,
+                               rtol=1e-6, atol=1e-6)
+    # and both are the GEMM
+    np.testing.assert_allclose(np.asarray(out_is), a @ b,
+                               rtol=1e-6, atol=1e-6)
+
+
+@given(st.integers(1, 200), st.integers(1, 200), st.integers(1, 200))
+@settings(max_examples=8, deadline=None)
+def test_pallas_is_equals_transposed_ws(m, k, n):
+    rng = np.random.default_rng(m * 13 + k * 5 + n)
+    a = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    out_is = pallas_gemm(a, b, dataflow="is", interpret=True)
+    out_ws_t = pallas_gemm(b.T, a.T, dataflow="ws", interpret=True)
+    np.testing.assert_allclose(np.asarray(out_is), np.asarray(out_ws_t).T,
+                               rtol=2e-5, atol=5e-4)
+
+
+@given(st.integers(1, 4096), st.integers(1, 4096), st.integers(1, 4096),
+       st.sampled_from((128, 256)), st.sampled_from((128, 256)),
+       st.sampled_from((8, 128)))
+@settings(max_examples=20, deadline=None)
+def test_cost_model_is_equals_transposed_ws(m, k, n, bk, bn, bm):
+    """estimate(m,k,n, IS(bm,bk,bn)) == estimate(n,k,m, WS(bn,bk,bm)):
+    traffic AND seconds — the plane-2 cycle-count half of the identity."""
+    cfg_is = TPUKernelConfig("is", bm, bk, bn)
+    cfg_ws = TPUKernelConfig("ws", bn, bk, bm)
+    assert hbm_traffic(m, k, n, cfg_is) == hbm_traffic(n, k, m, cfg_ws)
+    c_is = estimate(m, k, n, cfg_is)
+    c_ws = estimate(n, k, m, cfg_ws)
+    assert np.isclose(c_is.seconds, c_ws.seconds, rtol=1e-12)
+    assert np.isclose(c_is.compute_s, c_ws.compute_s, rtol=1e-12)

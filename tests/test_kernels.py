@@ -1,13 +1,16 @@
-"""Pallas GEMM kernel sweeps vs the pure-jnp oracle (interpret mode)."""
+"""Pallas GEMM kernel sweeps vs the pure-jnp oracle (interpret mode),
+dispatched through the repro.engine surface."""
 
 import jax.numpy as jnp
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core.tpu_model import VMEM, choose_kernel_config
-from repro.kernels.ops import auto_matmul, default_blocks, redas_matmul
-from repro.kernels.redas_gemm import vmem_bytes
+from repro.core.tpu_model import VMEM
+from repro.engine import Engine, KernelRequest, TPUModel
+from repro.engine.backends import default_blocks, pallas_gemm
+from repro.kernels.grouped_gemm import default_group_blocks, grouped_matmul
+from repro.kernels.redas_gemm import VMEM_BYTES, vmem_bytes
 from repro.kernels.ref import grouped_matmul_ref, matmul_ref
 
 DATAFLOWS = ("os", "ws", "is")
@@ -27,7 +30,7 @@ def test_kernel_matches_oracle_f32(dataflow, shape):
     rng = np.random.default_rng(0)
     a = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
     b = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
-    got = redas_matmul(a, b, dataflow=dataflow, interpret=True)
+    got = pallas_gemm(a, b, dataflow=dataflow, interpret=True)
     want = matmul_ref(a, b)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-5, atol=2e-4)
@@ -39,7 +42,7 @@ def test_kernel_dtypes(dataflow, dtype):
     rng = np.random.default_rng(1)
     a = jnp.asarray(rng.normal(size=(64, 256)), dtype)
     b = jnp.asarray(rng.normal(size=(256, 128)), dtype)
-    got = redas_matmul(a, b, dataflow=dataflow, interpret=True)
+    got = pallas_gemm(a, b, dataflow=dataflow, interpret=True)
     assert got.dtype == dtype
     want = matmul_ref(a, b, jnp.float32)
     tol = 0.15 if dtype == jnp.bfloat16 else 1e-4
@@ -55,8 +58,8 @@ def test_kernel_block_shapes(blocks, dataflow):
     rng = np.random.default_rng(2)
     a = jnp.asarray(rng.normal(size=(3 * bm, 2 * bk)), jnp.float32)
     b = jnp.asarray(rng.normal(size=(2 * bk, 2 * bn)), jnp.float32)
-    got = redas_matmul(a, b, dataflow=dataflow, bm=bm, bk=bk, bn=bn,
-                       interpret=True)
+    got = pallas_gemm(a, b, dataflow=dataflow, bm=bm, bk=bk, bn=bn,
+                      interpret=True)
     np.testing.assert_allclose(np.asarray(got), np.asarray(matmul_ref(a, b)),
                                rtol=2e-5, atol=2e-4)
 
@@ -68,32 +71,35 @@ def test_kernel_random_shapes(m, k, n, dataflow):
     rng = np.random.default_rng(m * 7 + k * 3 + n)
     a = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
     b = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
-    got = redas_matmul(a, b, dataflow=dataflow, interpret=True)
+    got = pallas_gemm(a, b, dataflow=dataflow, interpret=True)
     np.testing.assert_allclose(np.asarray(got), np.asarray(matmul_ref(a, b)),
                                rtol=2e-5, atol=5e-4)
 
 
-def test_auto_matmul_uses_mapper():
+def test_engine_matmul_uses_mapper():
     rng = np.random.default_rng(3)
     a = jnp.asarray(rng.normal(size=(50, 3072)), jnp.float32)
     b = jnp.asarray(rng.normal(size=(3072, 768)), jnp.float32)
-    got = auto_matmul(a, b, interpret=True)
+    eng = Engine(backend="pallas-interpret")
+    got = eng.matmul(a, b)
     np.testing.assert_allclose(np.asarray(got), np.asarray(matmul_ref(a, b)),
                                rtol=2e-5, atol=2e-3)
+    assert eng.plan.stats["decisions"] == 1
 
 
 def test_vmem_budget_enforced():
     with pytest.raises(ValueError, match="VMEM"):
-        redas_matmul(jnp.zeros((4096, 4096)), jnp.zeros((4096, 4096)),
-                     bm=4096, bk=4096, bn=4096, interpret=True)
+        pallas_gemm(jnp.zeros((4096, 4096)), jnp.zeros((4096, 4096)),
+                    bm=4096, bk=4096, bn=4096, interpret=True)
     bm, bk, bn = default_blocks(4096, 4096, 4096)
     assert vmem_bytes(bm, bk, bn) <= VMEM
 
 
 def test_mapper_configs_fit_vmem():
+    model = TPUModel()
     for (m, k, n) in [(43264, 144, 32), (50, 3072, 768), (4096, 4096, 4096)]:
-        cfg = choose_kernel_config(m, k, n)
-        assert cfg.vmem_bytes() <= VMEM
+        dec = model.decide(KernelRequest("gemm", m, k, n))
+        assert vmem_bytes(dec.bm, dec.bk, dec.bn) <= VMEM
 
 
 def test_grouped_ref_consistency():
@@ -105,19 +111,67 @@ def test_grouped_ref_consistency():
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
 
 
-def test_model_forward_through_redas_kernels():
-    """models route matmuls through the Pallas GEMM under the
-    use_redas_kernels context and produce the same logits."""
+def test_grouped_blocks_vmem_gated():
+    """Satellite: grouped block selection goes through the shared Eq.-2
+    gate — defaults fit VMEM for any problem, oversized blocks raise."""
+    for dims in [(16, 16, 16), (4096, 8192, 4096), (700, 3000, 500)]:
+        bc, bd, bf = default_group_blocks(*dims)
+        assert vmem_bytes(bc, bd, bf) <= VMEM_BYTES
+        assert bc % 8 == 0 and bd % 128 == 0 and bf % 128 == 0
+    with pytest.raises(ValueError, match="VMEM"):
+        grouped_matmul(jnp.zeros((2, 4096, 4096)),
+                       jnp.zeros((2, 4096, 4096)),
+                       bc=4096, bd=4096, bf=4096, interpret=True)
+
+
+def test_grouped_matmul_default_blocks_match_oracle():
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(3, 20, 48)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(3, 48, 24)), jnp.float32)
+    got = grouped_matmul(x, w, interpret=True)  # blocks via the VMEM gate
+    want = jnp.einsum("ecd,edf->ecf", x, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-4)
+
+
+def test_model_forward_through_engine():
+    """models route matmuls through the engine-dispatched Pallas GEMM
+    under use_engine and produce the same logits."""
     import jax
     from repro.configs import get_config
-    from repro.kernels.ops import use_redas_kernels
+    from repro.engine import use_engine
     from repro.models import transformer as T
 
     cfg = get_config("qwen2-1.5b", smoke=True)
     params = T.init_params(jax.random.PRNGKey(0), cfg)
     toks = jax.random.randint(jax.random.PRNGKey(1), (1, 16), 0, cfg.vocab)
     ref, _ = T.forward(params, cfg, toks, compute_dtype=jnp.float32)
-    with use_redas_kernels():
+    with use_engine(backend="pallas-interpret") as eng:
         got, _ = T.forward(params, cfg, toks, compute_dtype=jnp.float32)
+    assert eng.plan.stats["decisions"] > 0
     np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
                                rtol=1e-4, atol=1e-3)
+
+
+def test_deprecated_aliases_warn_and_work():
+    """kernels.ops keeps redas_matmul/auto_matmul/use_redas_kernels as
+    DeprecationWarning aliases that forward to the engine."""
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(6)
+    a = jnp.asarray(rng.normal(size=(16, 64)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(64, 32)), jnp.float32)
+    want = np.asarray(matmul_ref(a, b))
+    with pytest.warns(DeprecationWarning, match="redas_matmul"):
+        got = ops.redas_matmul(a, b, dataflow="os", interpret=True)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-5, atol=2e-4)
+    with pytest.warns(DeprecationWarning, match="auto_matmul"):
+        got = ops.auto_matmul(a, b, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-5, atol=2e-4)
+    with pytest.warns(DeprecationWarning, match="use_redas_kernels"):
+        ctx = ops.use_redas_kernels()
+    with ctx:
+        from repro.engine import active_engine
+        assert active_engine() is not None
+    with pytest.warns(DeprecationWarning, match="default_blocks"):
+        assert ops.default_blocks(100, 100, 100) == default_blocks(100, 100, 100)
