@@ -1,0 +1,241 @@
+"""Serving-throughput bench: continuous batching vs static padded batching.
+
+A ragged request trace (mixed prompt lengths x mixed generation
+budgets) is served two ways over the same model and slot count:
+
+  static      the pre-scheduler host loop (`serve_lib.generate`): a
+              batch admits only same-length prompts, every sequence in
+              it decodes to the batch's LONGEST budget (finished slots
+              burn compute), and the pool idles between batches —
+              underfull same-length groups still pay full-pool compute.
+  continuous  `serve_lib.scheduler.Scheduler`: per-slot cache clocks,
+              ragged admits into free slots, one fixed-shape fused
+              decode step, eviction on budget so freed slots readmit
+              immediately.
+
+Both serve greedy and must emit identical per-request tokens (checked).
+A separate engine-posture pass serves the trace through a
+`plan_arch(decode_batch=pool)`-warmed `repro.engine` and records the
+decision-cache stats: after the warm-up steps the decode path must add
+ZERO new plan misses (no per-step re-planning — the scheduler's decode
+shapes never change).
+
+Emits ``BENCH_PR4.json``; with ``--check`` exits nonzero unless
+continuous beats static in useful tokens/s AND the engine steady state
+is miss-free.
+
+    PYTHONPATH=src python -m benchmarks.serve_bench --smoke --check \
+        --out BENCH_PR4.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+
+def make_trace(smoke: bool) -> tuple[int, list[tuple[int, int]]]:
+    """(pool_size, [(prompt_len, gen_len), ...]) — prompt lengths repeat
+    across a few classes (so static batching gets real same-length
+    groups to batch) while budgets stay ragged (so static still wastes
+    decode on its max-budget padding)."""
+    if smoke:
+        pool = 3
+        lens = [6, 10, 6, 14, 10, 6, 14, 10]
+        gens = [8, 2, 5, 9, 3, 7, 2, 6]
+    else:
+        pool = 4
+        lens = [8, 16, 8, 24, 16, 8, 24, 16, 8, 12, 12, 16, 8, 24, 12, 8]
+        gens = [24, 4, 12, 20, 6, 28, 4, 16, 8, 24, 4, 12, 20, 6, 28, 10]
+    return pool, list(zip(lens, gens))
+
+
+def _build(arch: str, pool: int, max_seq: int, backend=None):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    from repro.serve_lib import serve as serve_lib
+
+    cfg = get_config(arch, smoke=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    scfg = serve_lib.ServeConfig(max_seq=max_seq, batch=pool,
+                                 compute_dtype=jnp.float32,
+                                 cache_dtype=jnp.float32,
+                                 kernel_backend=backend)
+    return cfg, params, scfg
+
+
+def _requests(cfg, trace):
+    import numpy as np
+
+    from repro.serve_lib.scheduler import Request
+
+    rng = np.random.default_rng(0)
+    return [Request(uid=i, prompt=rng.integers(0, cfg.vocab, p)
+                    .astype(np.int32), max_new_tokens=g)
+            for i, (p, g) in enumerate(trace)]
+
+
+def run_continuous(cfg, params, scfg, trace, bucket: int):
+    """Serve through the Scheduler; returns (report_row, {uid: tokens})."""
+    from repro.serve_lib.scheduler import Scheduler
+
+    def serve_once():
+        sched = Scheduler(params, cfg, scfg, prefill_bucket=bucket)
+        t0 = time.time()
+        comps = sched.run(_requests(cfg, trace))
+        return time.time() - t0, sched, comps
+
+    serve_once()  # warm-up: jit compiles for the decode + admit widths
+    dt, sched, comps = min((serve_once() for _ in range(3)),
+                           key=lambda r: r[0])  # best-of-3 vs host noise
+    tokens = sum(len(c.tokens) for c in comps.values())
+    stats = dict(sched.stats)
+    stats["prefill_widths"] = sorted(stats["prefill_widths"])
+    row = {"seconds": round(dt, 4), "useful_tokens": tokens,
+           "tokens_per_s": round(tokens / dt, 2), **stats}
+    return row, {u: c.tokens.tolist() for u, c in comps.items()}
+
+
+def run_static(cfg, params, scfg, trace):
+    """The old static-batch loop: same-length groups of up to pool
+    requests, each padded to the pool size and decoded to the group's
+    max budget.  Returns (report_row, {uid: tokens})."""
+    import numpy as np
+
+    from repro.serve_lib import serve as serve_lib
+
+    reqs = _requests(cfg, trace)
+    groups: list[list] = []
+    by_len: dict[int, list] = {}
+    for r in reqs:  # arrival order, same-length batching, max size = pool
+        g = by_len.setdefault(len(r.prompt), [])
+        g.append(r)
+        if len(g) == scfg.batch:
+            groups.append(g)
+            by_len[len(r.prompt)] = []
+    groups.extend(g for g in by_len.values() if g)
+
+    def serve_once():
+        out: dict[int, list[int]] = {}
+        decode_steps = 0
+        t0 = time.time()
+        for g in groups:
+            prompts = np.stack([r.prompt for r in g])
+            if len(g) < scfg.batch:  # underfull batch still pays full pool
+                pad = np.repeat(prompts[-1:], scfg.batch - len(g), axis=0)
+                prompts = np.concatenate([prompts, pad])
+            budget = max(r.max_new_tokens for r in g)
+            toks = np.asarray(serve_lib.generate(
+                params, cfg, scfg, prompts, budget))
+            decode_steps += budget - 1
+            for i, r in enumerate(g):
+                out[r.uid] = toks[i, : r.max_new_tokens].tolist()
+        return time.time() - t0, decode_steps, out
+
+    serve_once()  # warm-up
+    dt, decode_steps, out = min((serve_once() for _ in range(3)),
+                                key=lambda r: r[0])  # best-of-3
+    tokens = sum(len(t) for t in out.values())
+    row = {"seconds": round(dt, 4), "useful_tokens": tokens,
+           "tokens_per_s": round(tokens / dt, 2),
+           "batches": len(groups), "decode_steps": decode_steps,
+           "decode_tokens": decode_steps * scfg.batch}
+    return row, out
+
+
+def run_engine_posture(arch, pool, max_seq, trace, bucket, warmup_steps=3):
+    """Serve the trace through a warm-started engine; report decision-
+    cache stats and the steady-state miss delta (must be 0)."""
+    from repro import engine as engine_mod
+    from repro.serve_lib.scheduler import Scheduler
+
+    cfg, params, scfg = _build(arch, pool, max_seq, backend="xla-einsum")
+    width = -(-max(p for p, _ in trace) // bucket) * bucket
+    plan = engine_mod.plan_arch(
+        cfg, seq_len=width, dtype_bytes=4, decode_batch=pool,
+        admit_widths=tuple(range(bucket, width + 1, bucket)),
+        backend="xla-einsum")
+    eng = engine_mod.Engine(backend="xla-einsum", plan=plan)
+    planned = len(plan)
+    sched = Scheduler(params, cfg, scfg, engine=eng, prefill_bucket=bucket)
+    for r in _requests(cfg, trace):
+        sched.submit(r)
+    for _ in range(warmup_steps):
+        sched.step()
+    warm = dict(plan.stats)
+    while sched.queue or sched.n_active:
+        sched.step()
+    final = dict(plan.stats)
+    return {
+        "backend": "xla-einsum",
+        "planned_decisions": planned,
+        "after_warmup": warm,
+        "final": final,
+        # no per-step re-planning: every post-warm-up step hits the cache
+        "steady_state_new_misses": final["misses"] - warm["misses"],
+        "steady_state_new_hits": final["hits"] - warm["hits"],
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default="BENCH_PR4.json")
+    ap.add_argument("--prefill-bucket", type=int, default=8)
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero unless continuous wins and the "
+                         "engine steady state re-plans nothing")
+    args = ap.parse_args(argv)
+
+    pool, trace = make_trace(args.smoke)
+    max_seq = max(p + g for p, g in trace) + 1
+    cfg, params, scfg = _build(args.arch, pool, max_seq)
+
+    cont, cont_toks = run_continuous(cfg, params, scfg, trace,
+                                     args.prefill_bucket)
+    stat, stat_toks = run_static(cfg, params, scfg, trace)
+    parity = all(cont_toks[u] == stat_toks[u] for u in cont_toks)
+    engine = run_engine_posture(args.arch, pool, max_seq, trace,
+                                args.prefill_bucket)
+
+    report = {
+        "bench": "serve_continuous_vs_static",
+        "arch": args.arch, "smoke": args.smoke, "pool_slots": pool,
+        "trace": trace,
+        "continuous": cont,
+        "static": stat,
+        "speedup_tokens_per_s": round(
+            cont["tokens_per_s"] / stat["tokens_per_s"], 3),
+        "greedy_parity": parity,
+        "engine": engine,
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(json.dumps(report, indent=1, sort_keys=True))
+
+    failures = []
+    if not parity:
+        failures.append("continuous and static emitted different tokens")
+    if args.check:
+        if report["speedup_tokens_per_s"] <= 1.0:
+            failures.append(
+                f"continuous batching did not beat static "
+                f"({report['speedup_tokens_per_s']}x)")
+        if engine["steady_state_new_misses"] != 0:
+            failures.append(
+                f"decode path re-planned after warm-up "
+                f"({engine['steady_state_new_misses']} new misses)")
+    for msg in failures:
+        print(f"FAIL: {msg}", file=sys.stderr)
+    return len(failures)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

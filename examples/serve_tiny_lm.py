@@ -16,3 +16,10 @@ for arch in dict.fromkeys([args.arch, "mamba2-780m", "recurrentgemma-2b"]):
     print(f"=== {arch}")
     serve_main(["--arch", arch, "--smoke", "--batch", "4",
                 "--prompt-len", "24", "--gen", "24"])
+
+# the same launcher in continuous-batching mode: a ragged request trace
+# served by serve_lib.scheduler.Scheduler over a 3-slot pool (mixed
+# prompt lengths AND budgets — slots free up and readmit mid-flight)
+print("=== continuous batching (request trace)")
+serve_main(["--arch", args.arch, "--smoke", "--batch", "3",
+            "--trace", "8x12,16x4*2,12x20,6x6"])

@@ -258,14 +258,77 @@ def matmul(a, b, *, out_dtype=None):
 # ---------------------------------------------------------------------------
 
 
+def decode_requests(cfg, *, batch: int, dtype_bytes: int = 2,
+                    seq: int = 1) -> tuple[KernelRequest, ...]:
+    """The exact engine requests one `models.transformer.decode_step`
+    issues at slot-pool size `batch` (M = batch: one token per slot).
+
+    Unlike `core.workloads.arch_gemms` — the mapper's fused *search*
+    view of a prefill pass — these mirror the runtime
+    `models.layers.dense` / `models.moe._expert_ffn` calls
+    per-projection, so a warm-started serving plan turns first-trace
+    decode planning into pure cache lookups (the continuous-batching
+    scheduler's decode shapes never change, so this one set covers
+    every step it ever takes).  SSM in/out projections and the lm head
+    are raw matmuls (not engine-routed) and do not appear.
+
+    `seq > 1` instead describes one ragged ADMIT prefill at that padded
+    width (M = batch * seq) — the scheduler's other fixed call shape."""
+    d, f, hd = cfg.d_model, cfg.d_ff, cfg.head_dim_
+    nh, nkv = cfg.n_heads, cfg.n_kv
+    tokens = batch * seq
+    reqs: list[KernelRequest] = []
+
+    def gemm(m, k, n, name):
+        reqs.append(KernelRequest("gemm", m, k, n, in_bytes=dtype_bytes,
+                                  out_bytes=dtype_bytes, name=name))
+
+    def mlp_reqs(prefix):
+        if cfg.moe is not None:
+            moe = cfg.moe
+            # MoEConfig.capacity is jax-free (models.moe itself is not)
+            rows = batch * moe.capacity(seq)  # _expert_ffn: (E, B, C, D)
+            for m, k, n, nm in ((rows, d, f, "expert_up"),
+                                (rows, f, d, "expert_down")):
+                reqs.append(KernelRequest(
+                    "grouped_gemm", m, k, n, groups=moe.n_experts,
+                    in_bytes=dtype_bytes, out_bytes=dtype_bytes,
+                    name=f"{prefix}/{nm}"))
+        else:
+            gemm(tokens, d, f, f"{prefix}/ffn_up")  # wi and wg share a shape
+            gemm(tokens, f, d, f"{prefix}/ffn_down")
+
+    for kind in sorted(set(cfg.layer_pattern)):
+        if kind in ("attn", "local"):
+            gemm(tokens, d, nh * hd, f"{kind}/wq")
+            gemm(tokens, d, nkv * hd, f"{kind}/wk")  # wv is the same shape
+            gemm(tokens, nh * hd, d, f"{kind}/wo")
+            mlp_reqs(kind)
+        elif kind == "rglru":
+            w = cfg.rglru_width or d
+            gemm(tokens, d, w, "rglru/lin_x")  # lin_y is the same shape
+            gemm(tokens, w, w, "rglru/gates")  # w_a and w_x
+            gemm(tokens, w, d, "rglru/lin_out")
+            mlp_reqs("rglru")
+        # "ssm": no engine-routed matmuls in the decode path
+    return tuple(reqs)
+
+
 def plan_arch(cfg, *, seq_len: int | None = None, batch: int = 1,
               cost_model: CostModel | None = None,
               backend: str | None = None,
-              dtype_bytes: int = 2) -> ExecutionPlan:
+              dtype_bytes: int = 2,
+              decode_batch: int | None = None,
+              admit_widths: tuple[int, ...] = ()) -> ExecutionPlan:
     """Plan every GEMM of one `repro.models.config.ArchConfig` prefill
     pass via the `core.workloads.arch_gemms` lowering and return the
     warm `ExecutionPlan` (save it for serve warm-start).  `dtype_bytes`
-    is the serving compute dtype width (2 = bf16 default, 4 = f32)."""
+    is the serving compute dtype width (2 = bf16 default, 4 = f32).
+    `decode_batch` additionally plans the fixed decode-step shapes for
+    a slot pool of that size (see `decode_requests`) so a continuous-
+    batching server's decode trace re-plans nothing; `admit_widths`
+    does the same for its ragged-prefill admit widths (the scheduler's
+    `prefill_bucket` multiples)."""
     from repro.core.workloads import ARCH_TRACE_SEQ, arch_gemms
 
     eng = Engine(cost_model, backend=backend)
@@ -273,4 +336,9 @@ def plan_arch(cfg, *, seq_len: int | None = None, batch: int = 1,
     eng.plan.backend = eng.backend
     eng.plan_gemms(arch_gemms(cfg, seq_len=seq_len or ARCH_TRACE_SEQ,
                               batch=batch), in_bytes=dtype_bytes)
+    if decode_batch:
+        for width in (1,) + tuple(admit_widths):
+            for req in decode_requests(cfg, batch=decode_batch,
+                                       dtype_bytes=dtype_bytes, seq=width):
+                eng.decide(req)
     return eng.plan

@@ -1,7 +1,17 @@
 """Serving launcher: batched prefill + decode with the arch's cache kind.
 
+Static one-batch mode (every prompt the same length, one generate call):
+
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
         --batch 4 --prompt-len 32 --gen 32
+
+Request-trace mode (`--trace`): a mixed-length request list served by
+the continuous-batching `serve_lib.scheduler.Scheduler` over a pool of
+`--batch` slots.  Each item is PROMPTxGEN with an optional *COUNT
+repeat, e.g.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
+        --batch 4 --trace "24x32,8x8*6,16x48"
 """
 
 from __future__ import annotations
@@ -11,23 +21,80 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import ARCH_NAMES, get_config
 from repro.dist import sharding as shd
 from repro.launch.mesh import make_test_mesh
 from repro.models import transformer as T
 from repro.serve_lib import serve as serve_lib
+from repro.serve_lib.scheduler import Request, Scheduler
+
+
+def parse_trace(spec: str) -> list[tuple[int, int]]:
+    """"24x32,8x8*6" -> [(24, 32), (8, 8) x 6] (prompt_len, gen_len)."""
+    out: list[tuple[int, int]] = []
+    for item in spec.split(","):
+        item = item.strip()
+        if not item:
+            continue
+        count = 1
+        if "*" in item:
+            item, n = item.split("*")
+            count = int(n)
+        p, g = item.split("x")
+        out.extend([(int(p), int(g))] * count)
+    if not out:
+        raise ValueError(f"empty trace spec {spec!r}")
+    return out
+
+
+def _run_trace(params, cfg, scfg, args, trace) -> dict:
+    rng = np.random.default_rng(args.seed + 2)
+    key = jax.random.PRNGKey(args.seed + 3)
+    reqs = []
+    for uid, (plen, gen) in enumerate(trace):
+        key, sub = jax.random.split(key)
+        reqs.append(Request(
+            uid=uid, prompt=rng.integers(0, cfg.vocab, plen).astype(np.int32),
+            max_new_tokens=gen, temperature=args.temperature,
+            key=sub if args.temperature > 0 else None))
+    sched = Scheduler(params, cfg, scfg, prefill_bucket=args.prefill_bucket)
+    t0 = time.time()
+    comps = sched.run(reqs)
+    dt = time.time() - t0
+    n_tok = sum(len(c.tokens) for c in comps.values())
+    print(f"served {len(comps)} requests / {n_tok} tokens in {dt:.2f}s "
+          f"({n_tok / dt:.1f} tok/s) over {scfg.batch} slots")
+    print(f"scheduler: {sched.stats}")
+    for uid in sorted(comps)[:8]:
+        c = comps[uid]
+        print(f"  req {uid}: prompt {c.prompt_len} -> {len(c.tokens)} tokens "
+              f"({c.finish_reason}, steps {c.admit_step}..{c.finish_step})")
+    out = {"tokens_per_s": n_tok / dt, "requests": len(comps),
+           "decode_steps": sched.stats["decode_steps"]}
+    if sched.engine is not None:
+        print(f"engine plan: {sched.engine.plan.stats}")
+        out["engine_plan"] = sched.engine.plan.stats
+    return out
 
 
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_NAMES, required=True)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="batch (static mode) / slot-pool size (--trace)")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--trace", default=None,
+                    help="request trace 'PROMPTxGEN[*COUNT],...' served by "
+                         "the continuous-batching scheduler")
+    ap.add_argument("--prefill-bucket", type=int, default=8,
+                    help="round admit widths up to this multiple "
+                         "(bounds jit retraces; 1 = exact)")
     ap.add_argument("--kernel-backend", default=None,
                     choices=("pallas-tpu", "pallas-interpret", "xla-einsum"),
                     help="repro.engine backend for model matmuls")
@@ -40,8 +107,11 @@ def main(argv=None) -> dict:
     if cfg.kind == "encoder":
         raise SystemExit("encoder-only arch: no decode step (see DESIGN.md)")
     dtype = jnp.float32 if args.smoke else jnp.bfloat16
+    trace = parse_trace(args.trace) if args.trace else None
+    max_seq = (max(p + g for p, g in trace) + 1 if trace
+               else args.prompt_len + args.gen + 1)
     scfg = serve_lib.ServeConfig(
-        max_seq=args.prompt_len + args.gen + 1, batch=args.batch,
+        max_seq=max_seq, batch=args.batch,
         compute_dtype=dtype, cache_dtype=dtype,
         kernel_backend=args.kernel_backend, plan_path=args.plan)
     mesh = make_test_mesh()
@@ -49,6 +119,8 @@ def main(argv=None) -> dict:
     with mesh, shd.use_mesh(mesh):
         params = T.init_params(jax.random.PRNGKey(args.seed), cfg)
         params = jax.tree.map(lambda p: p.astype(dtype), params)
+        if trace is not None:
+            return _run_trace(params, cfg, scfg, args, trace)
         key = jax.random.PRNGKey(args.seed + 1)
         prompt = jax.random.randint(
             key, (args.batch, args.prompt_len), 0, cfg.vocab, jnp.int32)

@@ -30,6 +30,15 @@ class MoEConfig:
     # tokens x E x C one-hot GEMMs — §Perf iteration for the MoE cells).
     impl: str = "einsum"
 
+    def capacity(self, seq: int) -> int:
+        """Per-expert buffer slots for a length-`seq` dispatch.  The
+        single owner of the formula: `models.moe.capacity` (runtime) and
+        `engine.decode_requests` (jax-free shape planning) both call it,
+        so plan coverage can never drift from the runtime shapes."""
+        c = math.ceil(seq * self.top_k * self.capacity_factor
+                      / self.n_experts)
+        return max(4 * ((c + 3) // 4), 4)  # pad to a lane-friendly multiple
+
 
 @dataclasses.dataclass(frozen=True)
 class SSMConfig:

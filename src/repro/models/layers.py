@@ -72,6 +72,34 @@ def rms_norm(scale: Array, x: Array, eps: float = 1e-6,
 
 
 # --------------------------------------------------------------------------
+# Per-slot cache plumbing (continuous batching)
+# --------------------------------------------------------------------------
+
+
+def slot_update(cache: Array, idx: Array, new: Array,
+                active: Array | None = None) -> Array:
+    """Write one row per batch slot at that slot's own clock position.
+
+    cache (B, S, ...); idx (B,) int32 row per slot; new (B, ...) the row
+    values.  `active` (B,) bool masks the write — inactive slots keep
+    their stored row untouched, which is what lets one fused decode step
+    serve a pool of sequences at different clocks."""
+    rows = jnp.arange(cache.shape[0])
+    val = new.astype(cache.dtype)
+    if active is not None:
+        old = cache[rows, idx]
+        val = jnp.where(active.reshape((-1,) + (1,) * (val.ndim - 1)),
+                        val, old)
+    return cache.at[rows, idx].set(val)
+
+
+def gather_rows(x: Array, idx: Array) -> Array:
+    """Per-slot row gather: x (B, S, ...), idx (B,) -> (B, 1, ...)."""
+    shape = (x.shape[0], 1) + (1,) * (x.ndim - 2)
+    return jnp.take_along_axis(x, idx.reshape(shape), axis=1)
+
+
+# --------------------------------------------------------------------------
 # Rotary position embeddings
 # --------------------------------------------------------------------------
 

@@ -43,9 +43,7 @@ def moe_init(key, cfg) -> dict:
 
 
 def capacity(cfg, seq: int) -> int:
-    m = cfg.moe
-    c = math.ceil(seq * m.top_k * m.capacity_factor / m.n_experts)
-    return max(4 * ((c + 3) // 4), 4)  # pad to a lane-friendly multiple
+    return cfg.moe.capacity(seq)  # formula lives on MoEConfig
 
 
 def moe_block(p, cfg, x: Array) -> tuple[Array, Array]:

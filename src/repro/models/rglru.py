@@ -56,9 +56,18 @@ def _gates(p, u: Array):
     return a, b
 
 
-def rglru_scan(p, u: Array, h0: Array | None = None):
-    """u (B, S, W) -> (h (B, S, W), h_last (B, W)) via associative scan."""
+def rglru_scan(p, u: Array, h0: Array | None = None,
+               valid: Array | None = None):
+    """u (B, S, W) -> (h (B, S, W), h_last (B, W)) via associative scan.
+
+    `valid` (B, S) bool marks real rows in a ragged (right-padded)
+    batch: pad rows become the identity element (a=1, b=0), so h is
+    frozen past each slot's length and `h_last` is the state at that
+    slot's final valid token."""
     a, b = _gates(p, u)
+    if valid is not None:
+        a = jnp.where(valid[..., None], a, 1.0)
+        b = jnp.where(valid[..., None], b, 0.0)
     if h0 is not None:
         b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
 

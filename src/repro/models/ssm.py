@@ -65,6 +65,22 @@ def _causal_conv(w: Array, b: Array, x: Array, state: Array | None = None,
     return (jax.nn.silu(y) if act else y), new_state
 
 
+def ragged_conv_state(x: Array, lengths: Array, width: int) -> Array:
+    """Per-slot decode state of `_causal_conv` after a ragged prefill.
+
+    x (B, S, C) is the *raw* conv input (pre-activation); lengths (B,)
+    the per-slot valid prefix.  Returns (B, width-1, C): the last
+    width-1 valid rows of each slot, zero-padded on the left for slots
+    shorter than the conv window — exactly the `new_state` a
+    length-L un-padded `_causal_conv` call would have produced."""
+    b, s, _ = x.shape
+    w1 = width - 1
+    idx = lengths[:, None].astype(jnp.int32) - w1 + jnp.arange(w1)[None, :]
+    valid = idx >= 0
+    st = jnp.take_along_axis(x, jnp.clip(idx, 0, s - 1)[:, :, None], axis=1)
+    return jnp.where(valid[:, :, None], st, 0).astype(x.dtype)
+
+
 def _split(p, cfg, u: Array):
     s, d_in, heads, _ = _dims(cfg)
     gn = s.n_groups * s.d_state

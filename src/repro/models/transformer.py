@@ -234,26 +234,42 @@ def init_cache(cfg: ArchConfig, spec: CacheSpec, dtype=jnp.bfloat16) -> dict:
     }
     tail = [_slot_cache_shape(cfg.layer_pattern[t], cfg, spec, dtype)
             for t in range(n_tail)]
-    return {"t": jnp.zeros((), jnp.int32), "slots": slots, "tail": tail}
+    # "t" is the per-slot cache clock (B,): each batch slot advances
+    # independently, which is what lets a continuous-batching scheduler
+    # run one fixed-shape decode step over sequences of different ages.
+    return {"t": jnp.zeros((spec.batch,), jnp.int32), "slots": slots,
+            "tail": tail}
 
 
-def _decode_block(kind: str, p, cfg: ArchConfig, x: Array, t: Array, c: dict):
-    """One-token step for one block; returns (x, new_cache_slice)."""
-    b = x.shape[0]
-    pos = jnp.broadcast_to(t[None], (b, 1)).astype(jnp.int32)
+def _merge_slot(active, new: dict, old: dict) -> dict:
+    """Keep `old` cache leaves where a slot is inactive (leaves carry a
+    leading batch dim).  `active=None` means every slot updates — the
+    single-stream serving path, which then pays no masking cost."""
+    if active is None:
+        return new
+    pick = lambda nw, od: jnp.where(
+        active.reshape((-1,) + (1,) * (nw.ndim - 1)), nw, od.astype(nw.dtype))
+    return jax.tree.map(pick, new, old)
+
+
+def _decode_block(kind: str, p, cfg: ArchConfig, x: Array, t: Array, c: dict,
+                  active: Array | None = None):
+    """One-token step for one block; returns (x, new_cache_slice).
+
+    `t` (B,) is the per-slot cache clock: each slot writes its new KV
+    row at its own position and attends its own valid prefix, so one
+    fused step serves a pool of sequences of different ages.  `active`
+    (B,) masks cache updates for empty / evicted slots."""
+    pos = t[:, None].astype(jnp.int32)  # (B, 1) per-slot positions
     if kind in ("attn", "local"):
         q, k_new, v_new = layers.attn_qkv(
             p["attn"], cfg, rms_norm(p["norm1"], x, cfg.norm_eps), pos)
         size = c["k"].shape[1]
         idx = (t % size).astype(jnp.int32)
-        k_c = jax.lax.dynamic_update_slice(c["k"], k_new.astype(c["k"].dtype),
-                                           (0, idx, 0, 0))
-        v_c = jax.lax.dynamic_update_slice(c["v"], v_new.astype(c["v"].dtype),
-                                           (0, idx, 0, 0))
+        k_c = layers.slot_update(c["k"], idx, k_new[:, 0], active)
+        v_c = layers.slot_update(c["v"], idx, v_new[:, 0], active)
         kv_len = jnp.minimum(t + 1, size)
-        h = layers.cached_attention(
-            p["attn"], cfg, q, k_c, v_c, pos,
-            jnp.broadcast_to(kv_len[None], (b,)))
+        h = layers.cached_attention(p["attn"], cfg, q, k_c, v_c, pos, kv_len)
         x = x + h
         h2in = rms_norm(p["norm2"], x, cfg.norm_eps)
         if cfg.moe is not None:
@@ -265,29 +281,42 @@ def _decode_block(kind: str, p, cfg: ArchConfig, x: Array, t: Array, c: dict):
         h, conv, state = ssm.ssm_decode_step(
             p["ssm"], cfg, rms_norm(p["norm1"], x, cfg.norm_eps),
             c["conv"], c["state"])
-        return x + h, {"conv": conv.astype(c["conv"].dtype), "state": state}
+        new = {"conv": conv.astype(c["conv"].dtype), "state": state}
+        return x + h, _merge_slot(active, new, c)
     if kind == "rglru":
         h, conv, hstate = rglru.rglru_decode_step(
             p["rec"], cfg, rms_norm(p["norm1"], x, cfg.norm_eps),
             c["conv"], c["h"])
         x = x + h
         x = x + mlp(p["mlp"], rms_norm(p["norm2"], x, cfg.norm_eps))
-        return x, {"conv": conv.astype(c["conv"].dtype),
-                   "h": hstate.astype(c["h"].dtype)}
+        new = {"conv": conv.astype(c["conv"].dtype),
+               "h": hstate.astype(c["h"].dtype)}
+        return x, _merge_slot(active, new, c)
     raise ValueError(kind)
 
 
 def decode_step(params, cfg: ArchConfig, cache: dict, token: Array, *,
-                compute_dtype=jnp.bfloat16):
-    """token (B, 1) int32 -> (logits (B, 1, V), new_cache)."""
+                compute_dtype=jnp.bfloat16, active: Array | None = None):
+    """token (B, 1) int32 -> (logits (B, 1, V), new_cache).
+
+    `cache["t"]` is a per-slot clock (B,); `active` (B,) bool masks
+    which slots consume a token this step — inactive slots keep their
+    cache and clock and their logits rows are garbage to discard.  The
+    call shapes are independent of which slots are active, so a
+    continuous-batching scheduler reuses one jitted step (and one
+    engine decision cache) for every step it ever takes."""
+    b = token.shape[0]
     t = cache["t"]
+    if t.ndim == 0:  # legacy scalar clock (pre-vector caches)
+        t = jnp.broadcast_to(t, (b,))
     x = params["embed"].astype(compute_dtype)[token]
     x = constrain(x, "batch", None, "embed")
 
     def body(x, inp):
         pp, cc = inp
         for j, kind in enumerate(cfg.layer_pattern):
-            x, cc_new = _decode_block(kind, pp[f"b{j}"], cfg, x, t, cc[f"b{j}"])
+            x, cc_new = _decode_block(kind, pp[f"b{j}"], cfg, x, t,
+                                      cc[f"b{j}"], active)
             cc = {**cc, f"b{j}": cc_new}
         return x, cc
 
@@ -295,19 +324,36 @@ def decode_step(params, cfg: ArchConfig, cache: dict, token: Array, *,
     new_tail = []
     for i, p_tail in enumerate(params["tail"]):
         x, c_new = _decode_block(cfg.layer_pattern[i], p_tail, cfg, x, t,
-                                 cache["tail"][i])
+                                 cache["tail"][i], active)
         new_tail.append(c_new)
     logits = _logits_out(params, cfg, x)
-    return logits, {"t": t + 1, "slots": new_slots, "tail": new_tail}
+    new_t = t + 1 if active is None else jnp.where(active, t + 1, t)
+    return logits, {"t": new_t, "slots": new_slots, "tail": new_tail}
 
 
 def prefill(params, cfg: ArchConfig, tokens: Array, cache: dict, *,
-            embeds: Array | None = None, compute_dtype=jnp.bfloat16):
+            embeds: Array | None = None, compute_dtype=jnp.bfloat16,
+            lengths: Array | None = None, update_mask: Array | None = None):
     """Run the prompt, filling `cache`; returns (last-token logits, cache).
 
     Implementation: the full-sequence path plus per-block cache writes —
     attention caches receive rows [0, S); recurrent caches receive the
-    final state (recomputed per block kind via its scan)."""
+    final state (recomputed per block kind via its scan).
+
+    Ragged mode (continuous batching): `lengths` (B,) marks each slot's
+    valid prompt prefix in a right-padded `tokens` batch.  Every cache
+    kind then records per-slot time — attention rows past a slot's
+    length are dead weight masked by its clock, ring caches place each
+    slot's tail at its own ring offsets, and recurrent scans freeze at
+    the slot's final valid token.  Logits come from each slot's own
+    last row and the clock is set to `lengths`.  `update_mask` (B,)
+    additionally restricts which slots' cache entries (and clocks) are
+    written at all — slots outside the mask keep their previous state,
+    so a scheduler can admit new requests into free slots of a live
+    cache without disturbing in-flight sequences."""
+    if lengths is not None and (embeds is not None or cfg.prefix_tokens):
+        raise NotImplementedError(
+            "ragged prefill does not support embeds / VLM prefix archs")
     x = _embed_in(params, cfg, tokens, embeds, compute_dtype)
     b, s = x.shape[0], x.shape[1]
     positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
@@ -317,8 +363,8 @@ def prefill(params, cfg: ArchConfig, tokens: Array, cache: dict, *,
         pp, cc = inp
         for j, kind in enumerate(cfg.layer_pattern):
             x, cc_new = _prefill_block(kind, pp[f"b{j}"], cfg, x, positions,
-                                       cc[f"b{j}"])
-            cc = {**cc, f"b{j}": cc_new}
+                                       cc[f"b{j}"], lengths)
+            cc = {**cc, f"b{j}": _merge_slot(update_mask, cc_new, cc[f"b{j}"])}
         x = constrain(x, "batch", "residual", None)
         return (x,), cc
 
@@ -328,14 +374,38 @@ def prefill(params, cfg: ArchConfig, tokens: Array, cache: dict, *,
     new_tail = []
     for i, p_tail in enumerate(params["tail"]):
         x, c_new = _prefill_block(cfg.layer_pattern[i], p_tail, cfg, x,
-                                  positions, cache["tail"][i])
-        new_tail.append(c_new)
-    logits = _logits_out(params, cfg, x[:, -1:])
-    return logits, {"t": jnp.asarray(s, jnp.int32), "slots": new_slots,
-                    "tail": new_tail}
+                                  positions, cache["tail"][i], lengths)
+        new_tail.append(_merge_slot(update_mask, c_new, cache["tail"][i]))
+    if lengths is None:
+        logits = _logits_out(params, cfg, x[:, -1:])
+        new_t = jnp.full((b,), s, jnp.int32)
+    else:
+        last = layers.gather_rows(x, jnp.clip(lengths, 1, s) - 1)
+        logits = _logits_out(params, cfg, last)
+        new_t = lengths.astype(jnp.int32)
+    if update_mask is not None:
+        old_t = cache["t"]
+        if old_t.ndim == 0:  # legacy scalar clock
+            old_t = jnp.broadcast_to(old_t, (b,))
+        new_t = jnp.where(update_mask, new_t, old_t)
+    return logits, {"t": new_t, "slots": new_slots, "tail": new_tail}
 
 
-def _prefill_block(kind: str, p, cfg: ArchConfig, x, positions, c):
+def _ring_place(k: Array, lengths: Array, size: int) -> Array:
+    """Per-slot ring placement: store each slot's last `size` valid rows
+    at their absolute ring positions (pos % size).  k (B, S, KV, hd);
+    slots shorter than the ring keep rows [0, L) at identity positions
+    (rows >= L are garbage, masked by the slot's clock at decode)."""
+    s = k.shape[1]
+    r = jnp.arange(size, dtype=jnp.int32)[None, :]
+    ll = lengths[:, None].astype(jnp.int32)
+    pos = jnp.where(ll >= size, ll - size + jnp.mod(r - ll, size), r)
+    pos = jnp.clip(pos, 0, s - 1)
+    return jnp.take_along_axis(k, pos[:, :, None, None], axis=1)
+
+
+def _prefill_block(kind: str, p, cfg: ArchConfig, x, positions, c,
+                   lengths: Array | None = None):
     b, s = x.shape[0], x.shape[1]
     if kind in ("attn", "local"):
         window = cfg.window if kind == "local" else 0
@@ -347,12 +417,16 @@ def _prefill_block(kind: str, p, cfg: ArchConfig, x, positions, c):
                 c["k"], k.astype(c["k"].dtype), (0, 0, 0, 0))
             v_c = jax.lax.dynamic_update_slice(
                 c["v"], v.astype(c["v"].dtype), (0, 0, 0, 0))
-        else:  # ring cache: keep the last `size` rows at their ring slots
+        elif lengths is None:  # ring: keep the last `size` rows, rolled
             tail_k, tail_v = k[:, -size:], v[:, -size:]
             roll = (s % size)
             k_c = jnp.roll(tail_k, roll, axis=1).astype(c["k"].dtype)
             v_c = jnp.roll(tail_v, roll, axis=1).astype(c["v"].dtype)
-        kv_len = jnp.full((b,), s, jnp.int32)
+        else:  # ragged ring: each slot's tail at its own ring offsets
+            k_c = _ring_place(k, lengths, size).astype(c["k"].dtype)
+            v_c = _ring_place(v, lengths, size).astype(c["v"].dtype)
+        kv_len = (jnp.full((b,), s, jnp.int32) if lengths is None
+                  else lengths.astype(jnp.int32))
         if window > 0 and cfg.is_causal:
             o = layers.local_attention(q, k, v, window)
         else:
@@ -368,11 +442,11 @@ def _prefill_block(kind: str, p, cfg: ArchConfig, x, positions, c):
         return x + h2, {"k": k_c, "v": v_c}
     if kind == "ssm":
         xin = rms_norm(p["norm1"], x, cfg.norm_eps)
-        h, conv, state = _ssm_prefill(p["ssm"], cfg, xin)
+        h, conv, state = _ssm_prefill(p["ssm"], cfg, xin, lengths)
         return x + h, {"conv": conv.astype(c["conv"].dtype), "state": state}
     if kind == "rglru":
         xin = rms_norm(p["norm1"], x, cfg.norm_eps)
-        h, conv, hstate = _rglru_prefill(p["rec"], cfg, xin)
+        h, conv, hstate = _rglru_prefill(p["rec"], cfg, xin, lengths)
         x = x + h
         x = x + mlp(p["mlp"], rms_norm(p["norm2"], x, cfg.norm_eps))
         return x, {"conv": conv.astype(c["conv"].dtype),
@@ -380,7 +454,7 @@ def _prefill_block(kind: str, p, cfg: ArchConfig, x, positions, c):
     raise ValueError(kind)
 
 
-def _ssm_prefill(p, cfg, x):
+def _ssm_prefill(p, cfg, x, lengths: Array | None = None):
     sc = cfg.ssm
     d_in = sc.expand * cfg.d_model
     u = x @ p["in_proj"]["w"].astype(x.dtype)
@@ -392,6 +466,14 @@ def _ssm_prefill(p, cfg, x):
     b_mat = b_mat.reshape(bsz, length, s_.n_groups, s_.d_state)
     c_mat = c_mat.reshape(bsz, length, s_.n_groups, s_.d_state)
     dt_full = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    if lengths is not None:
+        # dt = 0 past a slot's length makes each pad step the identity on
+        # the SSD state (decay exp(0)=1, input contribution x*dt = 0), so
+        # the scan's final state is the state at the slot's last valid
+        # token; the conv state is re-gathered at per-slot offsets.
+        valid = jnp.arange(length)[None, :, None] < lengths[:, None, None]
+        dt_full = jnp.where(valid, dt_full, 0.0)
+        conv_state = ssm.ragged_conv_state(xbc, lengths, sc.conv_width)
     y, state = ssm.ssd_chunked(xs, dt_full, p["A_log"], b_mat, c_mat,
                                p["D"], s_.chunk)
     y = y.reshape(bsz, length, d_in).astype(x.dtype)
@@ -399,9 +481,15 @@ def _ssm_prefill(p, cfg, x):
     return y @ p["out_proj"]["w"].astype(x.dtype), conv_state, state
 
 
-def _rglru_prefill(p, cfg, x):
+def _rglru_prefill(p, cfg, x, lengths: Array | None = None):
     y = jax.nn.gelu(dense(p["lin_y"], x))
-    u, conv_state = ssm._causal_conv(p["conv_w"], p["conv_b"],
-                                     dense(p["lin_x"], x), act=False)
-    h, h_last = rglru.rglru_scan(p, u)
+    u_in = dense(p["lin_x"], x)
+    u, conv_state = ssm._causal_conv(p["conv_w"], p["conv_b"], u_in,
+                                     act=False)
+    valid = None
+    if lengths is not None:
+        valid = (jnp.arange(x.shape[1])[None, :] < lengths[:, None])
+        conv_state = ssm.ragged_conv_state(u_in, lengths,
+                                           p["conv_w"].shape[0])
+    h, h_last = rglru.rglru_scan(p, u, valid=valid)
     return dense(p["lin_out"], h * y), conv_state, h_last

@@ -1,0 +1,276 @@
+"""Continuous-batching serve scheduler over one persistent KV cache.
+
+The static-batch `serve.generate` loop pads every request to one
+rectangle: same-length prompts only, finished sequences burn decode
+compute until the longest one ends, and new requests wait for the whole
+batch to drain.  ReDas's own lesson — reconfigure per layer instead of
+padding work to a fixed shape — applies to the serving plane too, and
+the model layer already supports it: `flash_attention` takes per-slot
+`q_pos`/`kv_len`, and the cache clock `cache["t"]` is a per-slot vector.
+
+`Scheduler` owns a fixed pool of `ServeConfig.batch` slots over ONE
+persistent cache:
+
+  admit   queued requests enter free slots via a ragged prefill
+          (`transformer.prefill(lengths=..., update_mask=...)`): each
+          prompt is written at its slot with per-slot positions/clock,
+          in-flight slots untouched.  The first output token is sampled
+          from the prefill logits.
+  decode  one fused `decode_step` over the whole pool with an `active`
+          mask — the call shapes NEVER change, so the jitted step (and
+          the `repro.engine` decision cache behind it) is reused for
+          every step the scheduler ever takes.
+  evict   EOS / max-tokens frees the slot immediately for the next
+          queued request; no cache scrubbing is needed because a slot's
+          clock masks stale rows and the next admit overwrites its
+          recurrent state.
+
+Prefill is the only shape-variable call: prompt widths are rounded up
+to `prefill_bucket` (1 = exact group max — bitwise-parity mode; larger
+buckets bound jit retraces to O(max_seq / bucket) distinct widths).
+
+Greedy outputs match per-request `serve.generate` exactly for every
+cache kind; the one caveat is MoE capacity dropping: expert capacity
+scales with the CALL's padded width, so at drop-inducing capacity
+factors an MoE request's dropped tokens can depend on its admit
+group's width (DESIGN.md §6) — exactly the width dependence the
+static `generate` path already has versus `forward`.
+"""
+
+from __future__ import annotations
+
+import collections
+import contextlib
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import engine as engine_mod
+from repro.models import transformer as T
+from repro.models.config import ArchConfig
+
+from . import serve as serve_lib
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request: `prompt` (L,) int32, emit up to
+    `max_new_tokens` (stopping early at `eos_id` if given)."""
+    uid: int
+    prompt: np.ndarray
+    max_new_tokens: int
+    temperature: float = 0.0
+    key: jax.Array | None = None
+    eos_id: int | None = None
+
+
+@dataclasses.dataclass
+class Completion:
+    uid: int
+    tokens: np.ndarray           # (n_emitted,) int32
+    finish_reason: str           # "length" | "eos"
+    prompt_len: int
+    admit_step: int
+    finish_step: int
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Request
+    key: jax.Array | None
+    emitted: list[int]
+    last_token: int
+    admit_step: int
+
+
+@functools.lru_cache(maxsize=64)
+def _jitted_steps(cfg: ArchConfig, scfg: serve_lib.ServeConfig, engine):
+    """One jitted (ragged prefill, masked decode) pair per posture, so
+    every Scheduler instance over the same configs reuses the traced
+    executables.  The engine joins the key because traces bind the
+    engine context active when first taken (DESIGN.md §3)."""
+    prefill = jax.jit(
+        lambda p, tok, cache, lens, mask: T.prefill(
+            p, cfg, tok, cache, compute_dtype=scfg.compute_dtype,
+            lengths=lens, update_mask=mask))
+    decode = jax.jit(
+        lambda p, cache, tok, act: T.decode_step(
+            p, cfg, cache, tok, compute_dtype=scfg.compute_dtype,
+            active=act))
+    return prefill, decode
+
+
+class Scheduler:
+    """Engine-aware continuous-batching loop over a slot pool.
+
+    `params` must already be in serving dtype.  `engine` overrides the
+    `ServeConfig`-derived one (`serve.warm_start_engine`); all jit
+    traces happen inside its scope so every matmul shares one decision
+    cache (`engine.plan.stats()` shows hits once shapes repeat)."""
+
+    def __init__(self, params, cfg: ArchConfig, scfg: serve_lib.ServeConfig,
+                 *, engine: "engine_mod.Engine | None" = None,
+                 prefill_bucket: int = 1):
+        if cfg.kind == "encoder":
+            raise ValueError("encoder-only arch: no decode step")
+        if cfg.embed_inputs or cfg.prefix_tokens:
+            raise NotImplementedError(
+                "scheduler serves token prompts only (no embeds/VLM prefix)")
+        if prefill_bucket < 1:
+            raise ValueError(f"prefill_bucket must be >= 1: {prefill_bucket}")
+        self.params = params
+        self.cfg = cfg
+        self.scfg = scfg
+        self.prefill_bucket = prefill_bucket
+        self.engine = (engine if engine is not None
+                       else serve_lib.warm_start_engine(scfg))
+        self.cache = serve_lib.init_cache(cfg, scfg)
+        self.slots: list[_Slot | None] = [None] * scfg.batch
+        self.queue: collections.deque[Request] = collections.deque()
+        self.completions: dict[int, Completion] = {}
+        self.step_count = 0
+        self.stats = {"admitted": 0, "finished": 0, "prefill_calls": 0,
+                      "decode_steps": 0, "decode_tokens": 0,
+                      "prefill_widths": set()}
+        self._live_uids: set[int] = set()
+        self._prefill, self._decode = _jitted_steps(cfg, scfg, self.engine)
+
+    # -- request intake ----------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        n = int(np.asarray(req.prompt).size)
+        if n < 1:
+            raise ValueError(f"request {req.uid}: empty prompt")
+        if req.max_new_tokens < 1:
+            raise ValueError(f"request {req.uid}: max_new_tokens < 1")
+        if n + req.max_new_tokens > self.scfg.max_seq:
+            raise ValueError(
+                f"request {req.uid}: prompt {n} + max_new "
+                f"{req.max_new_tokens} exceeds max_seq {self.scfg.max_seq}")
+        if req.temperature > 0.0 and req.key is None:
+            raise ValueError(
+                f"request {req.uid}: temperature > 0 needs a PRNG key")
+        if req.uid in self._live_uids:  # queued, in flight, or completed
+            raise ValueError(f"duplicate request uid {req.uid}")
+        self._live_uids.add(req.uid)
+        self.queue.append(req)
+
+    @property
+    def n_active(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    def _scope(self):
+        return (engine_mod.use_engine(self.engine)
+                if self.engine is not None else contextlib.nullcontext())
+
+    # -- sampling (host-side, per slot: each request owns its key) ---------
+
+    def _sample(self, slot: _Slot, logits_row: np.ndarray) -> int:
+        if slot.req.temperature > 0.0:
+            slot.key, sub = jax.random.split(slot.key)
+            return int(jax.random.categorical(
+                sub, jnp.asarray(logits_row) / slot.req.temperature))
+        return int(np.argmax(logits_row))
+
+    def _emit(self, i: int, tok: int, finished: list[Completion]) -> None:
+        """Record one sampled token for slot i; evict on EOS/budget."""
+        slot = self.slots[i]
+        slot.emitted.append(tok)
+        slot.last_token = tok
+        done_eos = slot.req.eos_id is not None and tok == slot.req.eos_id
+        done_len = len(slot.emitted) >= slot.req.max_new_tokens
+        if done_eos or done_len:
+            comp = Completion(
+                uid=slot.req.uid,
+                tokens=np.asarray(slot.emitted, np.int32),
+                finish_reason="eos" if done_eos else "length",
+                prompt_len=int(np.asarray(slot.req.prompt).size),
+                admit_step=slot.admit_step, finish_step=self.step_count)
+            self.completions[slot.req.uid] = comp
+            finished.append(comp)
+            self.slots[i] = None  # slot free for the next queued request
+            self.stats["finished"] += 1
+
+    # -- the two batch calls ----------------------------------------------
+
+    def _admit(self, finished: list[Completion]) -> None:
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        if not free or not self.queue:
+            return
+        picks: list[tuple[int, Request]] = []
+        while free and self.queue:
+            picks.append((free.pop(0), self.queue.popleft()))
+        b = self.scfg.batch
+        maxlen = max(int(np.asarray(r.prompt).size) for _, r in picks)
+        width = -(-maxlen // self.prefill_bucket) * self.prefill_bucket
+        width = min(width, self.scfg.max_seq)
+        tokens = np.zeros((b, width), np.int32)
+        lengths = np.ones((b,), np.int32)
+        mask = np.zeros((b,), bool)
+        for i, req in picks:
+            prompt = np.asarray(req.prompt, np.int32).reshape(-1)
+            tokens[i, : prompt.size] = prompt
+            lengths[i] = prompt.size
+            mask[i] = True
+            self.slots[i] = _Slot(req=req, key=req.key, emitted=[],
+                                  last_token=0, admit_step=self.step_count)
+        with self._scope():
+            logits, self.cache = self._prefill(
+                self.params, jnp.asarray(tokens), self.cache,
+                jnp.asarray(lengths), jnp.asarray(mask))
+        rows = np.asarray(logits[:, -1], np.float32)
+        self.stats["admitted"] += len(picks)
+        self.stats["prefill_calls"] += 1
+        self.stats["prefill_widths"].add(width)
+        # first output token comes from the prefill logits (same
+        # semantics as serve.generate)
+        for i, _ in picks:
+            self._emit(i, self._sample(self.slots[i], rows[i]), finished)
+
+    def _decode_active(self, finished: list[Completion]) -> None:
+        active = np.asarray([s is not None for s in self.slots])
+        if not active.any():
+            return
+        toks = np.asarray(
+            [s.last_token if s is not None else 0 for s in self.slots],
+            np.int32)[:, None]
+        with self._scope():
+            logits, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(toks),
+                jnp.asarray(active))
+        rows = np.asarray(logits[:, -1], np.float32)
+        self.stats["decode_steps"] += 1
+        self.stats["decode_tokens"] += int(active.sum())
+        for i in range(len(self.slots)):
+            if active[i]:
+                self._emit(i, self._sample(self.slots[i], rows[i]), finished)
+
+    # -- driver ------------------------------------------------------------
+
+    def step(self) -> list[Completion]:
+        """One scheduler tick: admit into free slots, then one fused
+        decode over the pool.  Returns requests finished this tick."""
+        finished: list[Completion] = []
+        self._admit(finished)
+        self._decode_active(finished)
+        self.step_count += 1
+        return finished
+
+    def run(self, requests=(), *, max_steps: int | None = None
+            ) -> dict[int, Completion]:
+        """Submit `requests`, drive until queue and pool drain, and
+        return {uid: Completion}."""
+        for r in requests:
+            self.submit(r)
+        steps = 0
+        while self.queue or self.n_active:
+            self.step()
+            steps += 1
+            if max_steps is not None and steps >= max_steps:
+                raise RuntimeError(
+                    f"scheduler did not drain in {max_steps} steps "
+                    f"({self.n_active} active, {len(self.queue)} queued)")
+        return self.completions

@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -41,6 +42,14 @@ class ServeConfig:
     kernel_backend: str | None = None
     # optional ExecutionPlan JSON to warm-start the decision cache from.
     plan_path: str | None = None
+
+    def __post_init__(self):
+        # Normalize to jnp.dtype so "bfloat16", jnp.bfloat16 and
+        # np.dtype("bfloat16") spell EQUAL (and equally hashable)
+        # configs — otherwise the _ENGINES memo below silently builds
+        # one engine (and decision cache) per spelling.
+        object.__setattr__(self, "compute_dtype", jnp.dtype(self.compute_dtype))
+        object.__setattr__(self, "cache_dtype", jnp.dtype(self.cache_dtype))
 
 
 # One engine per ServeConfig (frozen, hashable): repeated generate()
@@ -96,6 +105,18 @@ def make_decode_step(cfg: ArchConfig, scfg: ServeConfig):
     return decode_step
 
 
+@functools.lru_cache(maxsize=64)
+def _jitted_steps(cfg: ArchConfig, scfg: ServeConfig, engine):
+    """One jitted (prefill, decode) pair per (cfg, scfg, engine):
+    repeated `generate` calls reuse the traced executables instead of
+    re-jitting (and re-tracing) per call.  The engine is part of the
+    key because traces bind the engine context active when they are
+    FIRST taken (the §3 trace-time caveat) — a different engine must
+    not silently reuse another engine's kernels."""
+    return (jax.jit(make_prefill_step(cfg, scfg)),
+            jax.jit(make_decode_step(cfg, scfg)))
+
+
 def generate(params, cfg: ArchConfig, scfg: ServeConfig, prompt: jax.Array,
              n_tokens: int, *, temperature: float = 0.0, key=None,
              embeds=None, engine: "engine_mod.Engine | None" = None):
@@ -103,6 +124,12 @@ def generate(params, cfg: ArchConfig, scfg: ServeConfig, prompt: jax.Array,
 
     `engine` overrides the `ServeConfig`-derived one (pass a shared
     Engine to keep one decision cache across many generate calls)."""
+    if n_tokens < 1:
+        raise ValueError(f"n_tokens must be >= 1, got {n_tokens}")
+    if temperature > 0.0 and key is None:
+        raise ValueError(
+            "generate(temperature>0) samples and needs a PRNG key — pass "
+            "key=jax.random.PRNGKey(...) (or temperature=0.0 for greedy)")
     eng = engine if engine is not None else warm_start_engine(scfg)
     scope = (engine_mod.use_engine(eng) if eng is not None
              else contextlib.nullcontext())
@@ -114,8 +141,8 @@ def generate(params, cfg: ArchConfig, scfg: ServeConfig, prompt: jax.Array,
 def _generate(params, cfg: ArchConfig, scfg: ServeConfig, prompt: jax.Array,
               n_tokens: int, *, temperature: float = 0.0, key=None,
               embeds=None):
-    prefill_step = jax.jit(make_prefill_step(cfg, scfg))
-    decode_step = jax.jit(make_decode_step(cfg, scfg))
+    prefill_step, decode_step = _jitted_steps(
+        cfg, scfg, engine_mod.active_engine())
     mesh = shd.active_mesh()
     if mesh is not None:
         # Place params (TP/FSDP rule table) before the first step, and
@@ -130,15 +157,22 @@ def _generate(params, cfg: ArchConfig, scfg: ServeConfig, prompt: jax.Array,
         cache = init_cache(cfg, scfg)
     logits, cache = prefill_step(params, prompt, cache, embeds)
 
-    outs = []
-    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-    for i in range(n_tokens):
-        outs.append(tok)
-        logits, cache = decode_step(params, cache, tok)
+    def sample(logits, key):
         if temperature > 0.0:
             key, sub = jax.random.split(key)
-            tok = jax.random.categorical(
-                sub, logits[:, -1] / temperature)[:, None].astype(jnp.int32)
+            tok = jax.random.categorical(sub, logits[:, -1] / temperature)
         else:
-            tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+            tok = jnp.argmax(logits[:, -1], axis=-1)
+        return tok[:, None].astype(jnp.int32), key
+
+    # The FIRST output token comes from the prefill logits (sampled with
+    # the same temperature as the rest, not argmax'd), so n_tokens
+    # outputs cost exactly n_tokens - 1 decode steps — no trailing
+    # decode whose logits would be discarded.
+    tok, key = sample(logits, key)
+    outs = [tok]
+    for _ in range(n_tokens - 1):
+        logits, cache = decode_step(params, cache, tok)
+        tok, key = sample(logits, key)
+        outs.append(tok)
     return jnp.concatenate(outs, axis=1)

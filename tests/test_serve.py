@@ -93,3 +93,83 @@ def test_generate_greedy_deterministic():
     out2 = serve_lib.generate(params, cfg, scfg, prompt, 8)
     assert out1.shape == (2, 8)
     np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+
+
+def _qwen_setup(batch=2):
+    cfg = _cfg("qwen2-1.5b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    scfg = serve_lib.ServeConfig(max_seq=32, batch=batch,
+                                 compute_dtype=jnp.float32,
+                                 cache_dtype=jnp.float32)
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (batch, 6), 0,
+                                cfg.vocab)
+    return cfg, params, scfg, prompt
+
+
+def test_generate_temperature_requires_key():
+    cfg, params, scfg, prompt = _qwen_setup()
+    with pytest.raises(ValueError, match="PRNG key"):
+        serve_lib.generate(params, cfg, scfg, prompt, 4, temperature=0.7)
+    with pytest.raises(ValueError, match="n_tokens"):
+        serve_lib.generate(params, cfg, scfg, prompt, 0)
+
+
+def test_generate_samples_first_token():
+    """The first output token comes from the prefill logits and must be
+    SAMPLED when temperature > 0 (it used to be argmax'd always)."""
+    cfg, params, scfg, prompt = _qwen_setup(batch=1)
+    firsts = {
+        int(serve_lib.generate(params, cfg, scfg, prompt, 1,
+                               temperature=4.0,
+                               key=jax.random.PRNGKey(k))[0, 0])
+        for k in range(12)
+    }
+    assert len(firsts) > 1, "first token ignored temperature"
+
+
+def test_generate_decode_step_budget(monkeypatch):
+    """n_tokens outputs take exactly n_tokens - 1 decode steps (the
+    first token comes from prefill; no trailing discarded step)."""
+    calls = {"n": 0}
+    real = serve_lib.make_decode_step
+
+    def counting(cfg, scfg):
+        f = real(cfg, scfg)
+
+        def wrapped(params, cache, token):
+            calls["n"] += 1
+            return f(params, cache, token)
+        return wrapped
+
+    # identity jit so the per-call counter isn't swallowed by tracing,
+    # and a cleared step memo so the patched builder is actually used
+    # (and the unjitted steps don't leak into later tests)
+    serve_lib._jitted_steps.cache_clear()
+    monkeypatch.setattr(serve_lib.jax, "jit", lambda f, **kw: f)
+    monkeypatch.setattr(serve_lib, "make_decode_step", counting)
+    try:
+        cfg, params, scfg, prompt = _qwen_setup(batch=1)
+        out = serve_lib.generate(params, cfg, scfg, prompt, 1)
+        assert out.shape == (1, 1) and calls["n"] == 0
+        out = serve_lib.generate(params, cfg, scfg, prompt, 4)
+        assert out.shape == (1, 4) and calls["n"] == 3
+    finally:
+        serve_lib._jitted_steps.cache_clear()
+
+
+def test_serveconfig_normalizes_dtypes():
+    """"bfloat16" and jnp.bfloat16 must spell the SAME config, so the
+    serve engine memo holds one engine (and one decision cache), not
+    one per dtype spelling."""
+    a = serve_lib.ServeConfig(max_seq=8, batch=1, compute_dtype="bfloat16",
+                              cache_dtype="bfloat16",
+                              kernel_backend="xla-einsum")
+    b = serve_lib.ServeConfig(max_seq=8, batch=1,
+                              compute_dtype=jnp.bfloat16,
+                              cache_dtype=jnp.dtype(jnp.bfloat16),
+                              kernel_backend="xla-einsum")
+    assert a == b and hash(a) == hash(b)
+    assert a.compute_dtype == jnp.dtype(jnp.bfloat16)
+    eng_a = serve_lib.warm_start_engine(a)
+    eng_b = serve_lib.warm_start_engine(b)
+    assert eng_a is eng_b, "dtype spelling built a duplicate engine"
