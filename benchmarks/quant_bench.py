@@ -1,0 +1,260 @@
+"""Quantization-plane bench: int8 KV cache + int8 matmul backends vs bf16.
+
+A mixed-length greedy trace (serve_bench's smoke trace) is served by the
+continuous-batching scheduler in three postures over the same weights:
+
+  baseline   bf16 KV cache, float matmuls (no engine).
+  kv-int8    ``cache_dtype="int8"`` — quantized KV rows + per-row scales
+             (quant.kv_quantize); everything else identical.  Gated on
+             EXACT greedy token parity with the baseline: the codec's
+             ~0.4% row error must not flip any token on the smoke trace.
+  full-int8  ``ServeConfig(quantize=True)`` + `quant.quantize_params`
+             weights + int8 cache: every dense matmul dispatches the
+             engine's `gemm_w8` int8 kernel.  Reported as STEPWISE top-1
+             agreement (sequences may legally diverge after a near-tie
+             flip cascades); soft-gated at >= 0.5.
+
+An engine-posture pass serves the full-int8 trace through a
+`plan_arch(..., quantized_weights=True)`-warmed int8 engine and gates
+zero steady-state plan misses — the int8 backend dispatches through the
+engine, and after warm-up the decode path re-plans nothing.
+
+The bench model is the smoke arch with a production head_dim (64): the
+cache-byte ratio is a *layout* property, 2 / (1 + 4/head_dim) per
+element, and the smoke configs' head_dim=16 would understate what any
+real config gets (gemma/qwen/mistral all serve head_dim >= 64).
+
+Emits ``BENCH_PR5.json``; with ``--check`` exits nonzero unless the
+cache shrinks >= 1.8x, kv-int8 greedy parity is exact, the full posture
+agrees >= 0.5 stepwise, and the steady state re-plans nothing.
+
+    PYTHONPATH=src python -m benchmarks.quant_bench --smoke --check \\
+        --out BENCH_PR5.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+from benchmarks.serve_bench import make_trace
+
+
+def _build(arch: str, head_dim: int):
+    import dataclasses
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import transformer as T
+
+    cfg = dataclasses.replace(get_config(arch, smoke=True), head_dim=head_dim)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _requests(cfg, trace):
+    import numpy as np
+
+    from repro.serve_lib.scheduler import Request
+
+    rng = np.random.default_rng(0)
+    return [Request(uid=i, prompt=rng.integers(0, cfg.vocab, p)
+                    .astype(np.int32), max_new_tokens=g)
+            for i, (p, g) in enumerate(trace)]
+
+
+def _serve(cfg, params, scfg, trace, bucket, engine=None):
+    from repro.serve_lib.scheduler import Scheduler
+
+    def once():
+        sched = Scheduler(params, cfg, scfg, engine=engine,
+                          prefill_bucket=bucket)
+        t0 = time.time()
+        comps = sched.run(_requests(cfg, trace))
+        return time.time() - t0, sched, comps
+
+    once()  # warm-up: jit compiles
+    dt, sched, comps = min((once() for _ in range(3)), key=lambda r: r[0])
+    tokens = sum(len(c.tokens) for c in comps.values())
+    row = {"seconds": round(dt, 4), "useful_tokens": tokens,
+           "tokens_per_s": round(tokens / dt, 2)}
+    return row, {u: c.tokens.tolist() for u, c in comps.items()}
+
+
+def _agreement(base_toks: dict, toks: dict) -> dict:
+    exact = agree = total = 0
+    for uid, tb in base_toks.items():
+        tq = toks[uid]
+        n = min(len(tb), len(tq))
+        agree += sum(a == b for a, b in zip(tb[:n], tq[:n]))
+        total += n
+        exact += int(tb == tq)
+    return {"exact_requests": exact, "requests": len(base_toks),
+            "agreeing_tokens": agree, "compared_tokens": total,
+            "stepwise_agreement": round(agree / total, 4)}
+
+
+def run_engine_posture(cfg, params, scfg, trace, bucket, pool,
+                       warmup_steps=3):
+    """Full-int8 serving through a warm-started int8 engine: decision-
+    cache stats + the steady-state miss delta (must be 0)."""
+    from repro import engine as engine_mod
+    from repro.serve_lib.scheduler import Scheduler
+
+    width = -(-max(p for p, _ in trace) // bucket) * bucket
+    plan = engine_mod.plan_arch(
+        cfg, seq_len=width, decode_batch=pool,
+        admit_widths=tuple(range(bucket, width + 1, bucket)),
+        backend=scfg.kernel_backend, quantized_weights=True,
+        # compute width: int8 requests key in at 1 byte but OUT at the
+        # float width the kernels rescale to (Engine._resolve).
+        dtype_bytes=scfg.compute_dtype.itemsize)
+    eng = engine_mod.Engine(backend=scfg.kernel_backend, plan=plan)
+    sched = Scheduler(params, cfg, scfg, engine=eng, prefill_bucket=bucket)
+    for r in _requests(cfg, trace):
+        sched.submit(r)
+    for _ in range(warmup_steps):
+        sched.step()
+    warm = dict(plan.stats)
+    while sched.queue or sched.n_active:
+        sched.step()
+    final = dict(plan.stats)
+    ops = sorted({req.op for req, _ in plan})
+    return {
+        "backend": scfg.kernel_backend,
+        "planned_decisions": len(plan),
+        "planned_ops": ops,
+        "after_warmup": warm,
+        "final": final,
+        "steady_state_new_misses": final["misses"] - warm["misses"],
+        "steady_state_new_hits": final["hits"] - warm["hits"],
+    }
+
+
+def pallas_xla_parity() -> dict:
+    """The Pallas int8 kernel dispatches through the engine and matches
+    the xla-int8 reference bit-for-bit (same int32 accumulation)."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro import engine as engine_mod
+
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(48, 192)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(192, 96)), jnp.float32)
+    outs = {}
+    for backend in engine_mod.INT8_BACKENDS:
+        with engine_mod.use_engine(backend=backend) as eng:
+            outs[backend] = np.asarray(eng.matmul(a, b))
+    exact = bool(np.array_equal(outs["pallas-tpu-int8"], outs["xla-int8"]))
+    return {"shapes": [[48, 192], [192, 96]], "bit_exact": exact}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--head-dim", type=int, default=64,
+                    help="production head_dim for the bench model (the "
+                         "smoke configs' 16 understates the cache ratio)")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default="BENCH_PR5.json")
+    ap.add_argument("--prefill-bucket", type=int, default=8)
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero unless the quantization gates hold")
+    args = ap.parse_args(argv)
+
+    import jax.numpy as jnp
+
+    from repro.quant import quantize_params, tree_bytes
+    from repro.serve_lib import serve as serve_lib
+
+    pool, trace = make_trace(args.smoke)
+    max_seq = max(p + g for p, g in trace) + 1
+    cfg, params = _build(args.arch, args.head_dim)
+
+    mk_scfg = lambda **kw: serve_lib.ServeConfig(
+        max_seq=max_seq, batch=pool, compute_dtype=jnp.float32, **kw)
+    scfg_base = mk_scfg(cache_dtype=jnp.bfloat16)
+    scfg_kv = mk_scfg(cache_dtype=jnp.int8)
+    scfg_full = mk_scfg(cache_dtype=jnp.int8, quantize=True)
+
+    # -- footprints (layout properties, measured on the real pytrees) ------
+    cache_bytes_bf16 = tree_bytes(serve_lib.init_cache(cfg, scfg_base))
+    cache_bytes_int8 = tree_bytes(serve_lib.init_cache(cfg, scfg_kv))
+    qparams = quantize_params(params)
+    bytes_row = {
+        "cache_bytes_bf16": cache_bytes_bf16,
+        "cache_bytes_int8": cache_bytes_int8,
+        "cache_reduction": round(cache_bytes_bf16 / cache_bytes_int8, 3),
+        "param_bytes_float": tree_bytes(params),
+        "param_bytes_quant": tree_bytes(qparams),
+        "param_reduction": round(tree_bytes(params) / tree_bytes(qparams), 3),
+    }
+
+    # -- the three serving postures ----------------------------------------
+    base_row, base_toks = _serve(cfg, params, scfg_base, trace,
+                                 args.prefill_bucket)
+    kv_row, kv_toks = _serve(cfg, params, scfg_kv, trace,
+                             args.prefill_bucket)
+    full_row, full_toks = _serve(cfg, qparams, scfg_full, trace,
+                                 args.prefill_bucket)
+    kv_row["vs_bf16"] = _agreement(base_toks, kv_toks)
+    full_row["vs_bf16"] = _agreement(base_toks, full_toks)
+    # same-run ratios: host-invariant, gated by benchmarks/trend.py
+    kv_row["relative_throughput"] = round(
+        kv_row["tokens_per_s"] / base_row["tokens_per_s"], 3)
+    full_row["relative_throughput"] = round(
+        full_row["tokens_per_s"] / base_row["tokens_per_s"], 3)
+
+    engine_row = run_engine_posture(cfg, qparams, scfg_full, trace,
+                                    args.prefill_bucket, pool)
+    parity_row = pallas_xla_parity()
+
+    report = {
+        "bench": "quant_int8_vs_bf16",
+        "arch": args.arch, "head_dim": args.head_dim, "smoke": args.smoke,
+        "pool_slots": pool, "trace": trace,
+        "bytes": bytes_row,
+        "baseline_bf16": base_row,
+        "kv_int8": kv_row,
+        "full_int8": full_row,
+        "engine": engine_row,
+        "pallas_vs_xla_int8": parity_row,
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(json.dumps(report, indent=1, sort_keys=True))
+
+    failures = []
+    if args.check:
+        if bytes_row["cache_reduction"] < 1.8:
+            failures.append(
+                f"KV-cache bytes shrank only "
+                f"{bytes_row['cache_reduction']}x (< 1.8x)")
+        kv_agree = kv_row["vs_bf16"]
+        if kv_agree["exact_requests"] != kv_agree["requests"]:
+            failures.append(
+                f"int8 KV cache broke greedy parity "
+                f"({kv_agree['exact_requests']}/{kv_agree['requests']} "
+                f"requests exact)")
+        if full_row["vs_bf16"]["stepwise_agreement"] < 0.5:
+            failures.append(
+                f"full int8 posture stepwise agreement "
+                f"{full_row['vs_bf16']['stepwise_agreement']} < 0.5")
+        if engine_row["steady_state_new_misses"] != 0:
+            failures.append(
+                f"int8 decode path re-planned after warm-up "
+                f"({engine_row['steady_state_new_misses']} new misses)")
+        if not parity_row["bit_exact"]:
+            failures.append("pallas-tpu-int8 diverged from xla-int8")
+    for msg in failures:
+        print(f"FAIL: {msg}", file=sys.stderr)
+    return len(failures)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,170 @@
+"""Bench-trend gate: fresh ``BENCH_*.json`` vs the committed baselines.
+
+The CI bench lane regenerates every perf artifact into a scratch dir;
+this tool pairs each fresh file with the baseline of the same name
+committed at the repo root, flattens both JSONs to dotted-path numeric
+leaves, and renders a per-metric delta table.  When
+``$GITHUB_STEP_SUMMARY`` is set (or ``--summary`` given) the table is
+appended there as markdown, so the perf trajectory shows up in the PR
+UI instead of buried in artifacts.
+
+Gate: HOST-INVARIANT throughput metrics — ratios of two measurements
+taken on the same machine in the same run (``speedup``, ``geomean``,
+``relative_throughput``) — are higher-is-better and fail the run when
+the fresh value regresses more than ``--max-regression`` (default 10%).
+Absolute tokens/s and raw seconds are reported in the table but NOT
+gated: the committed baselines were measured on a different host than
+the CI runner, so an absolute-throughput gate would track runner speed,
+not code regressions.  Byte/parity invariants have their own hard gates
+inside each bench's ``--check``.
+
+    PYTHONPATH=src python -m benchmarks.trend \\
+        --baseline-dir . --fresh-dir bench-out
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+#: dotted-path substrings marking a higher-is-better, host-invariant
+#: throughput metric (same-run ratios; absolute tokens/s is reported
+#: but never gated — see the module docstring).
+THROUGHPUT_MARKERS = ("speedup", "geomean", "relative_throughput")
+
+#: noisy / non-metric paths never worth a table row.
+SKIP_MARKERS = ("trace", "shapes", "prefill_widths")
+
+
+def flatten(node, prefix="") -> dict[str, float]:
+    """JSON -> {dotted.path: numeric leaf} (bools and strings dropped)."""
+    out: dict[str, float] = {}
+    if isinstance(node, dict):
+        for k in sorted(node):
+            out.update(flatten(node[k], f"{prefix}{k}."))
+        return out
+    if isinstance(node, (list, tuple)):
+        return out  # traces / shape lists: not metrics
+    if isinstance(node, bool) or not isinstance(node, (int, float)):
+        return out
+    path = prefix.rstrip(".")
+    if not any(m in path for m in SKIP_MARKERS):
+        out[path] = float(node)
+    return out
+
+
+def is_throughput(path: str) -> bool:
+    return any(m in path for m in THROUGHPUT_MARKERS)
+
+
+def compare(baseline: dict, fresh: dict, max_regression: float):
+    """Per-metric rows + the throughput regressions past the gate."""
+    rows, regressions = [], []
+    for path in sorted(set(baseline) | set(fresh)):
+        b, f = baseline.get(path), fresh.get(path)
+        if b is None or f is None:
+            if b is not None and is_throughput(path):
+                # a GATED metric vanished: that silently kills its
+                # regression gate — fail, don't shrug.
+                rows.append((path, b, f, None, "REMOVED"))
+                regressions.append((path, b, None, None))
+                continue
+            rows.append((path, b, f, None, "added" if b is None else "removed"))
+            continue
+        delta = (f - b) / abs(b) if b else (0.0 if f == b else float("inf"))
+        gated = is_throughput(path)
+        status = ""
+        if gated:
+            status = "ok"
+            if delta < -max_regression:
+                status = "REGRESSION"
+                regressions.append((path, b, f, delta))
+        rows.append((path, b, f, delta, status))
+    return rows, regressions
+
+
+def _fmt(x) -> str:
+    if x is None:
+        return "—"
+    if abs(x) >= 1000:
+        return f"{x:,.0f}"
+    return f"{x:.4g}"
+
+
+def render_markdown(name: str, rows, max_regression: float) -> str:
+    lines = [f"### {name}", "",
+             "| metric | baseline | fresh | delta | gate |",
+             "|---|---:|---:|---:|---|"]
+    for path, b, f, delta, status in rows:
+        d = "—" if delta is None else f"{delta:+.1%}"
+        gate = {"": "", "ok": "✓", "REGRESSION": f"❌ > {max_regression:.0%}",
+                "REMOVED": "❌ gated metric removed",
+                "added": "new", "removed": "gone"}[status]
+        lines.append(f"| `{path}` | {_fmt(b)} | {_fmt(f)} | {d} | {gate} |")
+    lines.append("")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline-dir", default=".",
+                    help="directory holding the committed BENCH_*.json")
+    ap.add_argument("--fresh-dir", default="bench-out",
+                    help="directory the CI lane wrote fresh artifacts to")
+    ap.add_argument("--max-regression", type=float, default=0.10,
+                    help="throughput regression gate (fraction, default 0.10)")
+    ap.add_argument("--summary", default=None,
+                    help="markdown output path (defaults to "
+                         "$GITHUB_STEP_SUMMARY when set)")
+    args = ap.parse_args(argv)
+
+    fresh_paths = sorted(glob.glob(os.path.join(args.fresh_dir,
+                                                "BENCH_*.json")))
+    if not fresh_paths:
+        print(f"no fresh BENCH_*.json under {args.fresh_dir!r}",
+              file=sys.stderr)
+        return 1
+
+    all_md, failures = [], []
+    for fp in fresh_paths:
+        name = os.path.basename(fp)
+        bp = os.path.join(args.baseline_dir, name)
+        if not os.path.exists(bp):
+            all_md.append(f"### {name}\n\n(no committed baseline — "
+                          f"first run of this artifact)\n")
+            print(f"{name}: no baseline, skipping comparison")
+            continue
+        with open(bp) as fh:
+            baseline = flatten(json.load(fh))
+        with open(fp) as fh:
+            fresh = flatten(json.load(fh))
+        rows, regressions = compare(baseline, fresh, args.max_regression)
+        all_md.append(render_markdown(name, rows, args.max_regression))
+        for path, b, f, delta in regressions:
+            if f is None:
+                failures.append(
+                    f"{name}:{path} gated metric removed (baseline {b:g})")
+            else:
+                failures.append(f"{name}:{path} {b:g} -> {f:g} ({delta:+.1%})")
+        print(f"{name}: {len(rows)} metrics, "
+              f"{len(regressions)} throughput regressions")
+
+    md = "## Bench trend (fresh vs committed baselines)\n\n" + \
+        "\n".join(all_md)
+    summary_path = args.summary or os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary_path:
+        with open(summary_path, "a") as fh:
+            fh.write(md + "\n")
+    else:
+        print(md)
+
+    for msg in failures:
+        print(f"FAIL: throughput regression {msg}", file=sys.stderr)
+    return min(len(failures), 125)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -20,7 +20,7 @@ __version__ = "0.1.0"
 #: name -> submodule (lazy `repro.<name>` package access)
 _SUBMODULES = (
     "configs", "core", "dist", "engine", "kernels", "models",
-    "optim", "roofline",
+    "optim", "quant", "roofline",
 )
 
 #: name -> "module:attr" (lazy re-exports of the decision-surface API)
@@ -38,6 +38,9 @@ _EXPORTS = {
     "CostModel": "repro.engine:CostModel",
     "TPUModel": "repro.engine:TPUModel",
     "AnalyticalCostModel": "repro.engine:AnalyticalCostModel",
+    # quant (the int8 precision plane, ISSUE 5)
+    "QuantizedTensor": "repro.quant:QuantizedTensor",
+    "quantize_params": "repro.quant:quantize_params",
     # configs + workloads (numpy-level planning inputs)
     "GEMM": "repro.core.analytical_model:GEMM",
     "WORKLOADS": "repro.core.workloads:WORKLOADS",

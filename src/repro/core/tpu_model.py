@@ -30,6 +30,7 @@ import math
 
 # --- TPU v5e hardware constants (per chip) ---------------------------------
 PEAK_FLOPS = 197e12          # bf16 MXU
+PEAK_FLOPS_INT8 = 394e12     # int8 MXU path (2x bf16 on v5e)
 HBM_BW = 819e9               # bytes / s
 ICI_BW = 50e9                # bytes / s / link (rooflines elsewhere)
 VMEM = 16 * 2**20            # bytes / core
@@ -106,12 +107,20 @@ def _ramp_factor(m: int, n: int, cfg: TPUKernelConfig) -> float:
     return 1.0 + MXU / stream
 
 
+def peak_flops(in_bytes: int = 2) -> float:
+    """MXU peak for the operand width: 1-byte operands take the int8
+    path (2x bf16 on v5e) — the request's `in_bytes` reaches here from
+    the engine, so int8-plane plans see both the doubled roofline and
+    the halved VMEM footprint (larger tiles pass the Eq. 2 gate)."""
+    return PEAK_FLOPS_INT8 if in_bytes == 1 else PEAK_FLOPS
+
+
 def estimate(m: int, k: int, n: int, cfg: TPUKernelConfig,
              in_bytes: int = 2, out_bytes: int = 2) -> TPUKernelCost:
     mp, kp, np_ = _round_up(m, cfg.bm), _round_up(k, cfg.bk), _round_up(n, cfg.bn)
     padded = 2.0 * mp * kp * np_
     useful = 2.0 * m * k * n
-    t_c = padded * _ramp_factor(m, n, cfg) / PEAK_FLOPS
+    t_c = padded * _ramp_factor(m, n, cfg) / peak_flops(in_bytes)
     bytes_ = hbm_traffic(m, k, n, cfg, in_bytes, out_bytes)
     t_m = bytes_ / HBM_BW
     return TPUKernelCost(

@@ -212,6 +212,10 @@ def params_shardings(tree, mesh: Mesh):
 _CACHE_AXES = {
     "k": (None, "batch", "seq_kv", "kv_heads", None),
     "v": (None, "batch", "seq_kv", "kv_heads", None),
+    # int8 KV codec (DESIGN.md §7): per-row scales shard with the rows
+    # they describe (same layout minus the head_dim axis).
+    "k_scale": (None, "batch", "seq_kv", "kv_heads"),
+    "v_scale": (None, "batch", "seq_kv", "kv_heads"),
     "conv": (None, "batch", None, None),
     "state": (None, "batch", "heads", None, None),
     "h": (None, "batch", "mlp"),

@@ -39,6 +39,52 @@ from .registry import KernelRegistry, default_registry
 
 _STACK: list["Engine"] = []
 
+#: backends that execute through the int8 quantization plane (ISSUE 5).
+#: Their requests are keyed at in_bytes=1 regardless of the float dtype
+#: the arrays arrive in — the kernel quantizes operands before the MXU,
+#: so the cost model must size tiles (and the plan cache must key) on
+#: the bytes that actually move.
+INT8_BACKENDS = ("pallas-tpu-int8", "xla-int8")
+
+
+def backend_in_bytes(backend: str | None, itemsize: int) -> int:
+    """The in_bytes a request dispatched on `backend` is keyed with:
+    the operand itemsize, except int8 backends pin it to 1 (precision
+    is part of the decision-cache key)."""
+    return 1 if backend in INT8_BACKENDS else itemsize
+
+
+#: float backend -> its int8 sibling (quantize=True config upgrade).
+#: Both Pallas spellings map to "pallas-tpu-int8", which auto-resolves
+#: interpret mode off-TPU; int8 names pass through.
+_INT8_SIBLING = {
+    "xla-einsum": "xla-int8",
+    "pallas-tpu": "pallas-tpu-int8",
+    "pallas-interpret": "pallas-tpu-int8",
+    "pallas-tpu-int8": "pallas-tpu-int8",
+    "xla-int8": "xla-int8",
+}
+
+
+def int8_sibling(backend: str | None) -> str:
+    """The int8 backend a `quantize=True` Serve/Train config executes
+    on instead of `backend`; raises with the known names otherwise.
+    `None` resolves per host exactly like the float plane's default
+    (`Engine._resolve_backend`): the Pallas int8 kernel on a TPU, the
+    XLA reference elsewhere (interpret-mode Pallas would crawl on CPU
+    serving paths)."""
+    if backend is None:
+        import jax  # deferred: config construction must not force jax early
+
+        return ("pallas-tpu-int8" if jax.default_backend() == "tpu"
+                else "xla-int8")
+    sibling = _INT8_SIBLING.get(backend)
+    if sibling is None:
+        raise ValueError(
+            f"quantize=True cannot upgrade kernel_backend {backend!r} to "
+            f"an int8 sibling (known: {sorted(_INT8_SIBLING)})")
+    return sibling
+
 
 def _dtype_bytes(x) -> int:
     return int(x.dtype.itemsize)
@@ -94,6 +140,11 @@ class Engine:
 
         return "pallas-tpu" if jax.default_backend() == "tpu" else "pallas-interpret"
 
+    @property
+    def int8(self) -> bool:
+        """True when this engine executes on the quantized plane."""
+        return self.backend in INT8_BACKENDS
+
     # -- decide ------------------------------------------------------------
 
     def _rebind(self, request: KernelRequest,
@@ -145,9 +196,17 @@ class Engine:
 
     def _resolve(self, key: tuple, op: str, m: int, k: int, n: int,
                  groups: int, item_bytes: int) -> tuple:
-        """Miss path: full request -> decide -> registry, then memoize."""
+        """Miss path: full request -> decide -> registry, then memoize.
+        On an int8 backend requests key at in_bytes=1 (the width the
+        kernel actually moves in), so the same float shapes plan larger
+        tiles and never collide with a full-precision plan entry; the
+        OUTPUT stays the float compute width — the int8 kernels rescale
+        the int32 accumulator to a float result, and the cost model must
+        not undercount that output stream."""
         req = KernelRequest(op, m, k, n, groups=groups,
-                            in_bytes=item_bytes, out_bytes=item_bytes)
+                            in_bytes=backend_in_bytes(self.backend,
+                                                      item_bytes),
+                            out_bytes=item_bytes)
         dec = self.decide(req)
         entry = (dec, self.registry.get(dec.backend, op))
         self._memo[key] = entry
@@ -171,6 +230,26 @@ class Engine:
             raise ValueError(f"matmul dim mismatch {a.shape} @ {b.shape}")
         dec, fn = self._resolve(key, "gemm", m, k, n, 1, _dtype_bytes(a))
         return fn(dec, a, b, out_dtype=out_dtype)
+
+    def quant_matmul(self, a, w_q, w_scale, *, out_dtype=None):
+        """(M, K) float @ pre-quantized (K, N) int8 weight storage
+        (`quant.quantize_params`): dispatches the planned `gemm_w8`
+        kernel — activations quantize dynamically inside it, the stored
+        weight never materializes in float.  Only int8 backends register
+        the op; call sites guard on `engine.int8`."""
+        a, w_q, w_scale = _as_arrays(a, w_q, w_scale)
+        key = ("gemm_w8", a.aval, w_q.aval)
+        hit = self._memo.get(key)
+        if hit is not None:
+            self.plan.hits += 1
+            dec, fn = hit
+            return fn(dec, a, w_q, w_scale, out_dtype=out_dtype)
+        m, k = a.shape
+        k2, n = w_q.shape
+        if k != k2:
+            raise ValueError(f"matmul dim mismatch {a.shape} @ {w_q.shape}")
+        dec, fn = self._resolve(key, "gemm_w8", m, k, n, 1, _dtype_bytes(a))
+        return fn(dec, a, w_q, w_scale, out_dtype=out_dtype)
 
     def grouped_matmul(self, x, w, *, out_dtype=None):
         """x (E, C, D) @ w (E, D, F) -> (E, C, F), per-expert."""
@@ -259,7 +338,8 @@ def matmul(a, b, *, out_dtype=None):
 
 
 def decode_requests(cfg, *, batch: int, dtype_bytes: int = 2,
-                    seq: int = 1) -> tuple[KernelRequest, ...]:
+                    seq: int = 1, quantized_weights: bool = False,
+                    out_bytes: int | None = None) -> tuple[KernelRequest, ...]:
     """The exact engine requests one `models.transformer.decode_step`
     issues at slot-pool size `batch` (M = batch: one token per slot).
 
@@ -273,15 +353,24 @@ def decode_requests(cfg, *, batch: int, dtype_bytes: int = 2,
     are raw matmuls (not engine-routed) and do not appear.
 
     `seq > 1` instead describes one ragged ADMIT prefill at that padded
-    width (M = batch * seq) — the scheduler's other fixed call shape."""
+    width (M = batch * seq) — the scheduler's other fixed call shape.
+
+    `quantized_weights=True` mirrors a `quant.quantize_params` server:
+    the dense projections dispatch as `gemm_w8` (MoE expert stacks stay
+    float grouped GEMMs — quantize_params skips them).  `out_bytes`
+    (default: `dtype_bytes`) is the OUTPUT width — on an int8 posture
+    pass dtype_bytes=1, out_bytes=<compute width>, matching how the
+    runtime keys its requests (`Engine._resolve`)."""
     d, f, hd = cfg.d_model, cfg.d_ff, cfg.head_dim_
     nh, nkv = cfg.n_heads, cfg.n_kv
     tokens = batch * seq
+    out_b = out_bytes if out_bytes is not None else dtype_bytes
+    dense_op = "gemm_w8" if quantized_weights else "gemm"
     reqs: list[KernelRequest] = []
 
     def gemm(m, k, n, name):
-        reqs.append(KernelRequest("gemm", m, k, n, in_bytes=dtype_bytes,
-                                  out_bytes=dtype_bytes, name=name))
+        reqs.append(KernelRequest(dense_op, m, k, n, in_bytes=dtype_bytes,
+                                  out_bytes=out_b, name=name))
 
     def mlp_reqs(prefix):
         if cfg.moe is not None:
@@ -292,7 +381,7 @@ def decode_requests(cfg, *, batch: int, dtype_bytes: int = 2,
                                 (rows, f, d, "expert_down")):
                 reqs.append(KernelRequest(
                     "grouped_gemm", m, k, n, groups=moe.n_experts,
-                    in_bytes=dtype_bytes, out_bytes=dtype_bytes,
+                    in_bytes=dtype_bytes, out_bytes=out_b,
                     name=f"{prefix}/{nm}"))
         else:
             gemm(tokens, d, f, f"{prefix}/ffn_up")  # wi and wg share a shape
@@ -319,26 +408,37 @@ def plan_arch(cfg, *, seq_len: int | None = None, batch: int = 1,
               backend: str | None = None,
               dtype_bytes: int = 2,
               decode_batch: int | None = None,
-              admit_widths: tuple[int, ...] = ()) -> ExecutionPlan:
+              admit_widths: tuple[int, ...] = (),
+              quantized_weights: bool = False) -> ExecutionPlan:
     """Plan every GEMM of one `repro.models.config.ArchConfig` prefill
     pass via the `core.workloads.arch_gemms` lowering and return the
     warm `ExecutionPlan` (save it for serve warm-start).  `dtype_bytes`
-    is the serving compute dtype width (2 = bf16 default, 4 = f32).
+    is the serving compute dtype width (2 = bf16 default, 4 = f32); on
+    an int8 `backend` the requests' INPUT width is forced to 1 (runtime
+    requests there key at the quantized width, whatever float dtype the
+    arrays carry) while outputs keep the compute width — the int8
+    kernels rescale to float results.
     `decode_batch` additionally plans the fixed decode-step shapes for
     a slot pool of that size (see `decode_requests`) so a continuous-
     batching server's decode trace re-plans nothing; `admit_widths`
     does the same for its ragged-prefill admit widths (the scheduler's
-    `prefill_bucket` multiples)."""
+    `prefill_bucket` multiples).  `quantized_weights` plans the decode/
+    admit dense projections as `gemm_w8` (a `quant.quantize_params`
+    server dispatches those instead of `gemm`)."""
     from repro.core.workloads import ARCH_TRACE_SEQ, arch_gemms
 
+    in_bytes = backend_in_bytes(backend, dtype_bytes)
     eng = Engine(cost_model, backend=backend)
     eng.backend  # resolve now so the plan records a concrete backend
     eng.plan.backend = eng.backend
     eng.plan_gemms(arch_gemms(cfg, seq_len=seq_len or ARCH_TRACE_SEQ,
-                              batch=batch), in_bytes=dtype_bytes)
+                              batch=batch), in_bytes=in_bytes,
+                   out_bytes=dtype_bytes)
     if decode_batch:
         for width in (1,) + tuple(admit_widths):
             for req in decode_requests(cfg, batch=decode_batch,
-                                       dtype_bytes=dtype_bytes, seq=width):
+                                       dtype_bytes=in_bytes, seq=width,
+                                       quantized_weights=quantized_weights,
+                                       out_bytes=dtype_bytes):
                 eng.decide(req)
     return eng.plan

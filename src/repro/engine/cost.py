@@ -161,8 +161,29 @@ class AnalyticalCostModel:
         from repro.core.mapper import ReDasMapper
 
         self.spec = spec if spec is not None else REDAS
+        self._array_size = array_size
+        self._mapper_kw = mapper_kw
         self.mapper = ReDasMapper(self.spec, array_size=array_size, **mapper_kw)
+        # word_bytes -> mapper: requests carry their operand width and
+        # the multi-mode buffer holds capacity/word_bytes words, so a
+        # wider dtype halves the tile space the search may allocate.
+        self._mappers = {self.spec.word_bytes: self.mapper}
         self.name = f"redas-asic/{self.spec.name}"
+
+    def _mapper_for(self, in_bytes: int):
+        """The mapper sized for `in_bytes`-wide operands (the spec's
+        native width — int8, Table 4 — reuses the primary mapper)."""
+        mapper = self._mappers.get(in_bytes)
+        if mapper is None:
+            import dataclasses as _dc
+
+            from repro.core.mapper import ReDasMapper
+
+            spec = _dc.replace(self.spec, word_bytes=in_bytes)
+            mapper = ReDasMapper(spec, array_size=self._array_size,
+                                 **self._mapper_kw)
+            self._mappers[in_bytes] = mapper
+        return mapper
 
     def decide(self, request: KernelRequest) -> KernelDecision:
         from repro.core.analytical_model import GEMM
@@ -174,7 +195,7 @@ class AnalyticalCostModel:
         count = request.groups if request.op == "grouped_gemm" else 1
         gemm = GEMM(request.m, request.k, request.n, count=count,
                     name=request.name or "engine")
-        d = self.mapper.map_gemm(gemm)
+        d = self._mapper_for(request.in_bytes).map_gemm(gemm)
         cfg, rep = d.config, d.report
         return KernelDecision(
             op=request.op, dataflow=cfg.dataflow.value,

@@ -28,8 +28,11 @@ from typing import Iterator
 
 PLAN_FORMAT = "redas-execution-plan-v1"
 
-#: ops the engine knows how to plan and dispatch.
-KNOWN_OPS = ("gemm", "grouped_gemm", "attention")
+#: ops the engine knows how to plan and dispatch.  "gemm_w8" is a gemm
+#: whose right operand is pre-quantized int8 storage (ISSUE 5): it plans
+#: through the same search as "gemm" but keys separately so a plan can
+#: hold both postures side by side.
+KNOWN_OPS = ("gemm", "grouped_gemm", "attention", "gemm_w8")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -17,8 +17,10 @@ from __future__ import annotations
 
 from typing import Callable
 
-#: the backends the default registry guarantees (ISSUE 3 surface).
-BACKENDS = ("pallas-tpu", "pallas-interpret", "xla-einsum", "simulator")
+#: the backends the default registry guarantees (ISSUE 3 surface; the
+#: int8 pair is the ISSUE 5 quantization plane).
+BACKENDS = ("pallas-tpu", "pallas-interpret", "xla-einsum", "simulator",
+            "pallas-tpu-int8", "xla-int8")
 
 
 class KernelRegistry:
@@ -71,13 +73,15 @@ _DEFAULT: KernelRegistry | None = None
 
 
 def _load_kernel_registrations(reg: KernelRegistry) -> None:
-    from repro.kernels import flash_attention, grouped_gemm, redas_gemm
+    from repro.kernels import (flash_attention, grouped_gemm, quant_gemm,
+                               redas_gemm)
 
     from . import backends
 
     redas_gemm.register_into(reg)
     grouped_gemm.register_into(reg)
     flash_attention.register_into(reg)
+    quant_gemm.register_into(reg)
     backends.register_into(reg)
 
 

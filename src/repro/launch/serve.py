@@ -96,8 +96,14 @@ def main(argv=None) -> dict:
                     help="round admit widths up to this multiple "
                          "(bounds jit retraces; 1 = exact)")
     ap.add_argument("--kernel-backend", default=None,
-                    choices=("pallas-tpu", "pallas-interpret", "xla-einsum"),
+                    choices=("pallas-tpu", "pallas-interpret", "xla-einsum",
+                             "pallas-tpu-int8", "xla-int8"),
                     help="repro.engine backend for model matmuls")
+    ap.add_argument("--quantize", action="store_true",
+                    help="full int8 serving posture: quantize the dense "
+                         "weights (repro.quant.quantize_params), store the "
+                         "KV cache int8 (cache_dtype='int8'), and upgrade "
+                         "the kernel backend to its int8 sibling")
     ap.add_argument("--plan", default=None,
                     help="ExecutionPlan JSON to warm-start the decision "
                          "cache from (see repro.engine.plan_arch)")
@@ -112,13 +118,18 @@ def main(argv=None) -> dict:
                else args.prompt_len + args.gen + 1)
     scfg = serve_lib.ServeConfig(
         max_seq=max_seq, batch=args.batch,
-        compute_dtype=dtype, cache_dtype=dtype,
-        kernel_backend=args.kernel_backend, plan_path=args.plan)
+        compute_dtype=dtype,
+        cache_dtype=jnp.int8 if args.quantize else dtype,
+        kernel_backend=args.kernel_backend, plan_path=args.plan,
+        quantize=args.quantize)
     mesh = make_test_mesh()
 
     with mesh, shd.use_mesh(mesh):
         params = T.init_params(jax.random.PRNGKey(args.seed), cfg)
         params = jax.tree.map(lambda p: p.astype(dtype), params)
+        if args.quantize:
+            from repro.quant import quantize_params
+            params = quantize_params(params)
         if trace is not None:
             return _run_trace(params, cfg, scfg, args, trace)
         key = jax.random.PRNGKey(args.seed + 1)

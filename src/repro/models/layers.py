@@ -39,15 +39,25 @@ def dense(p, x: Array) -> Array:
     routes through the engine's planned kernel (mapper-chosen dataflow +
     blocks, unified decision cache — DESIGN.md §3); outside it, XLA
     einsum (the dry-run path; Pallas does not lower on the CPU
-    host-device backend)."""
+    host-device backend).
+
+    `quant.quantize_params` weights (QuantizedTensor: int8 storage +
+    per-channel scales) dispatch the planned `gemm_w8` kernel on an int8
+    engine (the stored weight never materializes in float); on any other
+    posture they dequantize to the compute dtype first (DESIGN.md §7)."""
     from repro.engine import active_engine
-    w = p["w"].astype(x.dtype)
+    from repro.quant import QuantizedTensor
+    w = p["w"]
     eng = active_engine()
-    if eng is not None:
-        y = eng.matmul(x.reshape(-1, x.shape[-1]), w,
-                       out_dtype=x.dtype).reshape(*x.shape[:-1], w.shape[-1])
+    quantized = isinstance(w, QuantizedTensor)
+    x2d = x.reshape(-1, x.shape[-1])
+    if quantized and eng is not None and eng.int8:
+        y2d = eng.quant_matmul(x2d, w.q, w.scale, out_dtype=x.dtype)
     else:
-        y = x @ w
+        wf = w.dequantize(x.dtype) if quantized else w.astype(x.dtype)
+        y2d = (eng.matmul(x2d, wf, out_dtype=x.dtype) if eng is not None
+               else x2d @ wf)
+    y = y2d.reshape(*x.shape[:-1], w.shape[-1])
     if "b" in p:
         y = y + p["b"].astype(x.dtype)
     return y
@@ -368,7 +378,9 @@ def attention_block(p, cfg, x: Array, positions: Array, *, window: int = 0) -> A
 
 
 def cached_attention(p, cfg, q: Array, k_cache: Array, v_cache: Array,
-                     q_pos: Array, kv_len: Array) -> Array:
+                     q_pos: Array, kv_len: Array, *,
+                     k_scale: Array | None = None,
+                     v_scale: Array | None = None) -> Array:
     """Decode-path attention: q (B,1,H,D) over a cache (B,Smax,KV,D) whose
     slots beyond kv_len are masked.  The caller inserts the new token's
     k/v into the cache *before* calling (see serve_lib), so causality is
@@ -380,15 +392,27 @@ def cached_attention(p, cfg, q: Array, k_cache: Array, v_cache: Array,
     (B, H, 1, Smax) — tiny — and a plain einsum over the cache keeps the
     SPMD story clean when the cache's sequence dim is sharded over 'data'
     (long_500k): GSPMD turns the softmax reductions into psums instead of
-    gathering the cache."""
+    gathering the cache.
+
+    int8 cache codec (DESIGN.md §7): pass the stored rows RAW with their
+    per-row scales `k_scale`/`v_scale` (B, Smax, KV).  Scales are
+    constant along head_dim, so they factor out of both contractions —
+    scores are scaled after the QK^T einsum and v_scale folds into the
+    softmax weights — and no dequantized float copy of the cache is ever
+    materialized."""
     b, sq, h, d = q.shape
     kv = k_cache.shape[2]
     g = h // kv
+    row = lambda sc: sc.astype(jnp.float32).transpose(0, 2, 1)[:, :, None, None, :]
     qg = (q.reshape(b, sq, kv, g, d) / math.sqrt(d)).astype(jnp.float32)
     s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k_cache.astype(jnp.float32))
+    if k_scale is not None:
+        s = s * row(k_scale)
     valid = jnp.arange(k_cache.shape[1])[None, :] < kv_len[:, None]  # (B,S)
     s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
     p_attn = jax.nn.softmax(s, axis=-1)
+    if v_scale is not None:
+        p_attn = p_attn * row(v_scale)
     o = jnp.einsum("bkgqs,bskd->bqkgd", p_attn, v_cache.astype(jnp.float32))
     o = o.reshape(b, sq, h, d).astype(q.dtype)
     return dense(p["wo"], o.reshape(b, sq, cfg.n_heads * cfg.head_dim_))

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from ..dist.sharding import constrain
+from ..quant import kv_quantize
 from . import layers, moe, rglru, ssm
 from .config import ArchConfig
 from .layers import dense, mlp, mlp_init, rms_norm
@@ -203,14 +204,23 @@ class CacheSpec:
 def _slot_cache_shape(kind: str, cfg: ArchConfig, spec: CacheSpec,
                       dtype) -> dict:
     b, hd, kv = spec.batch, cfg.head_dim_, cfg.n_kv
-    if kind == "attn":
-        s = spec.max_seq
-        return {"k": jnp.zeros((b, s, kv, hd), dtype),
-                "v": jnp.zeros((b, s, kv, hd), dtype)}
-    if kind == "local":
-        s = min(cfg.window, spec.max_seq)
-        return {"k": jnp.zeros((b, s, kv, hd), dtype),
-                "v": jnp.zeros((b, s, kv, hd), dtype)}
+    quant = jnp.dtype(dtype) == jnp.int8
+    if quant and kind not in ("attn", "local"):
+        # int8 quantizes attention KV rows only; recurrent state is
+        # read-modify-write every step and would accumulate quantization
+        # noise, so it stays bf16 (DESIGN.md §7 — the config-time
+        # validator in serve_lib rejects archs where nothing quantizes).
+        dtype = jnp.bfloat16
+    if kind in ("attn", "local"):
+        s = spec.max_seq if kind == "attn" else min(cfg.window, spec.max_seq)
+        c = {"k": jnp.zeros((b, s, kv, hd), dtype),
+             "v": jnp.zeros((b, s, kv, hd), dtype)}
+        if quant:
+            # per-row codec (quant.kv_quantize): one f32 scale per
+            # stored row per kv head rides next to the int8 rows.
+            c["k_scale"] = jnp.zeros((b, s, kv), jnp.float32)
+            c["v_scale"] = jnp.zeros((b, s, kv), jnp.float32)
+        return c
     if kind == "ssm":
         sc, d_in = cfg.ssm, cfg.ssm.expand * cfg.d_model
         heads = d_in // sc.head_dim
@@ -266,17 +276,32 @@ def _decode_block(kind: str, p, cfg: ArchConfig, x: Array, t: Array, c: dict,
             p["attn"], cfg, rms_norm(p["norm1"], x, cfg.norm_eps), pos)
         size = c["k"].shape[1]
         idx = (t % size).astype(jnp.int32)
-        k_c = layers.slot_update(c["k"], idx, k_new[:, 0], active)
-        v_c = layers.slot_update(c["v"], idx, v_new[:, 0], active)
+        if "k_scale" in c:  # int8 codec: quantize the new row, store
+            # its scale beside it; attention reads the int8 rows RAW
+            # with the scales folded into its einsums (no dequantized
+            # float copy of the cache — layers.cached_attention).
+            kq, ks = kv_quantize(k_new[:, 0])
+            vq, vs = kv_quantize(v_new[:, 0])
+            new_c = {"k": layers.slot_update(c["k"], idx, kq, active),
+                     "v": layers.slot_update(c["v"], idx, vq, active),
+                     "k_scale": layers.slot_update(c["k_scale"], idx, ks,
+                                                   active),
+                     "v_scale": layers.slot_update(c["v_scale"], idx, vs,
+                                                   active)}
+        else:
+            new_c = {"k": layers.slot_update(c["k"], idx, k_new[:, 0], active),
+                     "v": layers.slot_update(c["v"], idx, v_new[:, 0], active)}
         kv_len = jnp.minimum(t + 1, size)
-        h = layers.cached_attention(p["attn"], cfg, q, k_c, v_c, pos, kv_len)
+        h = layers.cached_attention(
+            p["attn"], cfg, q, new_c["k"], new_c["v"], pos, kv_len,
+            k_scale=new_c.get("k_scale"), v_scale=new_c.get("v_scale"))
         x = x + h
         h2in = rms_norm(p["norm2"], x, cfg.norm_eps)
         if cfg.moe is not None:
             h2, _ = moe.moe_block(p["moe"], cfg, h2in)
         else:
             h2 = mlp(p["mlp"], h2in)
-        return x + h2, {"k": k_c, "v": v_c}
+        return x + h2, new_c
     if kind == "ssm":
         h, conv, state = ssm.ssm_decode_step(
             p["ssm"], cfg, rms_norm(p["norm1"], x, cfg.norm_eps),
@@ -393,7 +418,8 @@ def prefill(params, cfg: ArchConfig, tokens: Array, cache: dict, *,
 
 def _ring_place(k: Array, lengths: Array, size: int) -> Array:
     """Per-slot ring placement: store each slot's last `size` valid rows
-    at their absolute ring positions (pos % size).  k (B, S, KV, hd);
+    at their absolute ring positions (pos % size).  k (B, S, ...) — any
+    trailing dims (KV, hd) for rows, (KV,) for the int8 codec's scales;
     slots shorter than the ring keep rows [0, L) at identity positions
     (rows >= L are garbage, masked by the slot's clock at decode)."""
     s = k.shape[1]
@@ -401,7 +427,8 @@ def _ring_place(k: Array, lengths: Array, size: int) -> Array:
     ll = lengths[:, None].astype(jnp.int32)
     pos = jnp.where(ll >= size, ll - size + jnp.mod(r - ll, size), r)
     pos = jnp.clip(pos, 0, s - 1)
-    return jnp.take_along_axis(k, pos[:, :, None, None], axis=1)
+    idx = pos.reshape(pos.shape + (1,) * (k.ndim - 2))
+    return jnp.take_along_axis(k, idx, axis=1)
 
 
 def _prefill_block(kind: str, p, cfg: ArchConfig, x, positions, c,
@@ -412,19 +439,25 @@ def _prefill_block(kind: str, p, cfg: ArchConfig, x, positions, c,
         xin = rms_norm(p["norm1"], x, cfg.norm_eps)
         q, k, v = layers.attn_qkv(p["attn"], cfg, xin, positions)
         size = c["k"].shape[1]
+        if "k_scale" in c:  # int8 codec: store quantized rows + scales,
+            # placed by the SAME ops as the rows they describe
+            kq, ks = kv_quantize(k)
+            vq, vs = kv_quantize(v)
+            store = {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+        else:
+            store = {"k": k, "v": v}
         if size >= s:  # full cache: write rows [0, s)
-            k_c = jax.lax.dynamic_update_slice(
-                c["k"], k.astype(c["k"].dtype), (0, 0, 0, 0))
-            v_c = jax.lax.dynamic_update_slice(
-                c["v"], v.astype(c["v"].dtype), (0, 0, 0, 0))
+            new_c = {nm: jax.lax.dynamic_update_slice(
+                c[nm], val.astype(c[nm].dtype), (0,) * c[nm].ndim)
+                for nm, val in store.items()}
         elif lengths is None:  # ring: keep the last `size` rows, rolled
-            tail_k, tail_v = k[:, -size:], v[:, -size:]
             roll = (s % size)
-            k_c = jnp.roll(tail_k, roll, axis=1).astype(c["k"].dtype)
-            v_c = jnp.roll(tail_v, roll, axis=1).astype(c["v"].dtype)
+            new_c = {nm: jnp.roll(val[:, -size:], roll,
+                                  axis=1).astype(c[nm].dtype)
+                     for nm, val in store.items()}
         else:  # ragged ring: each slot's tail at its own ring offsets
-            k_c = _ring_place(k, lengths, size).astype(c["k"].dtype)
-            v_c = _ring_place(v, lengths, size).astype(c["v"].dtype)
+            new_c = {nm: _ring_place(val, lengths, size).astype(c[nm].dtype)
+                     for nm, val in store.items()}
         kv_len = (jnp.full((b,), s, jnp.int32) if lengths is None
                   else lengths.astype(jnp.int32))
         if window > 0 and cfg.is_causal:
@@ -439,7 +472,7 @@ def _prefill_block(kind: str, p, cfg: ArchConfig, x, positions, c,
             h2, _ = moe.moe_block(p["moe"], cfg, h2in)
         else:
             h2 = mlp(p["mlp"], h2in)
-        return x + h2, {"k": k_c, "v": v_c}
+        return x + h2, new_c
     if kind == "ssm":
         xin = rms_norm(p["norm1"], x, cfg.norm_eps)
         h, conv, state = _ssm_prefill(p["ssm"], cfg, xin, lengths)

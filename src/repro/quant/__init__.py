@@ -1,0 +1,28 @@
+"""repro.quant — the int8 precision plane (ISSUE 5).
+
+ReDas's multi-mode buffers win by reallocating a fixed on-chip budget to
+match each layer's dataflow; the software analogue on TPU is shrinking
+the bytes each operand occupies.  This package owns the quantized
+representations:
+
+  * `QuantizedTensor` — int8 values + float per-channel scales, a pytree
+    (scans/jits slice it like any param leaf).
+  * `quantize` / `dequantize` — symmetric per-channel round-trip with
+    max-abs scaling (error <= scale/2 per element, property-tested).
+  * `quantize_params` — swap every `models.layers.dense` weight for its
+    quantized form (engine-routed call sites only; see the skip list).
+  * `kv_quantize` / `kv_dequantize` — the per-row KV-cache codec behind
+    ``ServeConfig(cache_dtype="int8")``.
+
+Execution lives elsewhere: `kernels/quant_gemm.py` is the Pallas
+int8 x int8 -> int32 kernel, registered into the engine as the
+"pallas-tpu-int8" / "xla-int8" backends (DESIGN.md §7).
+"""
+
+from .quantize import (QuantizedTensor, dequantize, kv_dequantize,
+                       kv_quantize, quantize, quantize_params, tree_bytes)
+
+__all__ = [
+    "QuantizedTensor", "dequantize", "kv_dequantize", "kv_quantize",
+    "quantize", "quantize_params", "tree_bytes",
+]

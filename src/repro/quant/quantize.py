@@ -1,0 +1,151 @@
+"""Symmetric per-channel int8 quantization (weights + KV-cache codec).
+
+Scale placement (DESIGN.md §7): scales sit on the axis that is NOT
+contracted by the consuming GEMM, so dequantization commutes with the
+matmul and the int32 accumulator can be rescaled once per output
+element instead of once per multiply:
+
+  weights  (…, K, N)  -> scale (…, 1, N): per OUTPUT channel, reduced
+           over the contraction axis K.  y = (x_q @ w_q) * s_x * s_w.
+  KV rows  (…, hd)    -> scale (…,): per stored row per kv head — each
+           cache row is written once and read many times, so its scale
+           rides along in the cache next to it.
+
+Symmetric (zero-point-free) because every consumer feeds a GEMM whose
+accumulator is int32: an asymmetric zero point would add a per-tile
+correction GEMM for ~0.2 bits of range on weight distributions that are
+centered anyway.  Max-abs scaling bounds round-trip error at scale/2
+per element (tests/test_quant.py property-tests the bound).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+#: int8 symmetric range: +-127 keeps the codomain symmetric (no -128).
+QMAX = 127.0
+
+#: param-dict keys whose "w" leaf is consumed by a RAW `@` instead of
+#: `models.layers.dense` — quantizing them would crash the caller, and
+#: they are tiny (router) or fused-projection (ssm) anyway.
+SKIP_KEYS = ("router", "in_proj", "out_proj")
+
+
+@jax.tree_util.register_pytree_node_class
+class QuantizedTensor:
+    """int8 values + broadcastable float32 scales, as one pytree node.
+
+    `q * scale` reconstructs the tensor; both children carry the same
+    leading dims, so `lax.scan` over stacked params slices a
+    QuantizedTensor exactly like a raw weight leaf.
+    """
+
+    def __init__(self, q, scale):
+        self.q = q
+        self.scale = scale
+
+    @property
+    def shape(self):
+        return self.q.shape
+
+    @property
+    def ndim(self):
+        return self.q.ndim
+
+    def dequantize(self, dtype=jnp.float32):
+        return (self.q.astype(jnp.float32) * self.scale).astype(dtype)
+
+    def tree_flatten(self):
+        return (self.q, self.scale), None
+
+    @classmethod
+    def tree_unflatten(cls, _aux, children):
+        return cls(*children)
+
+    def __repr__(self):
+        return (f"QuantizedTensor(shape={tuple(self.q.shape)}, "
+                f"scale_shape={tuple(jnp.shape(self.scale))})")
+
+
+def _scale_for(x, axis: int):
+    """Max-abs symmetric scale reducing `axis` (the contraction dim),
+    kept as a broadcastable dim so q * scale reconstructs in place."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis, keepdims=True)
+    return jnp.where(amax > 0.0, amax / QMAX, 1.0)
+
+
+def quantize(x, axis: int = -2) -> QuantizedTensor:
+    """Symmetric per-channel quantization of `x`, reducing `axis`.
+
+    The default `axis=-2` is the matmul-weight convention: a (K, N)
+    weight gets one scale per output channel N (shape (1, N)); stacked
+    or grouped weights (P, K, N) / (E, K, N) get (P, 1, N) — per group
+    per channel."""
+    scale = _scale_for(x, axis)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -QMAX, QMAX)
+    return QuantizedTensor(q.astype(jnp.int8), scale)
+
+
+def dequantize(qt: QuantizedTensor, dtype=jnp.float32):
+    return qt.dequantize(dtype)
+
+
+def quantize_params(params):
+    """Swap every `models.layers.dense` weight for its QuantizedTensor.
+
+    Targets: dicts shaped `{"w": <float array, ndim >= 2>}` — the
+    layers.dense param convention — EXCEPT under `SKIP_KEYS` (weights
+    consumed by a raw `@`: the MoE router and the SSM in/out
+    projections).  Everything else (norm scales, biases, conv filters,
+    embeddings, MoE expert stacks) keeps its dtype; expert stacks stay
+    float because `moe._expert_ffn` feeds the grouped-GEMM path whose
+    activations dominate its footprint anyway."""
+
+    def walk(node, skip: bool):
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                child_skip = skip or k in SKIP_KEYS
+                if (k == "w" and not skip
+                        and hasattr(v, "ndim") and v.ndim >= 2
+                        and jnp.issubdtype(v.dtype, jnp.floating)):
+                    out[k] = quantize(v)
+                else:
+                    out[k] = walk(v, child_skip)
+            return out
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v, skip) for v in node)
+        return node
+
+    return walk(params, False)
+
+
+def tree_bytes(tree) -> int:
+    """Total bytes of every array leaf (QuantizedTensor counts q + scale)."""
+    return sum(leaf.size * leaf.dtype.itemsize
+               for leaf in jax.tree.leaves(tree)
+               if hasattr(leaf, "dtype"))
+
+
+# ---------------------------------------------------------------------------
+# KV-cache codec (ServeConfig.cache_dtype == "int8")
+# ---------------------------------------------------------------------------
+
+
+def kv_quantize(x):
+    """Per-row cache codec: x (..., hd) float -> (q int8 (..., hd),
+    scale float32 (...,)).  One scale per stored row per kv head — the
+    row is the cache's write granularity (`layers.slot_update` writes
+    whole rows), so the scale lives next to it and eviction/overwrite
+    stay O(1) with no rescaling of neighbours."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    scale = jnp.where(amax > 0.0, amax / QMAX, 1.0)
+    q = jnp.clip(jnp.round(xf / scale[..., None]), -QMAX, QMAX)
+    return q.astype(jnp.int8), scale
+
+
+def kv_dequantize(q, scale, dtype=jnp.float32):
+    """Inverse of `kv_quantize`: q (..., hd) int8, scale (...,) -> float."""
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)

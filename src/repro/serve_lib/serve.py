@@ -32,6 +32,38 @@ from repro.models import transformer as T
 from repro.models.config import ArchConfig
 
 
+#: cache dtypes `models.transformer.init_cache` can represent.  int8
+#: selects the quantized KV codec (rows + per-row scales, DESIGN.md §7).
+SUPPORTED_CACHE_DTYPES = ("float32", "bfloat16", "float16", "int8")
+
+def validate_cache_dtype(cache_dtype, cfg=None):
+    """THE cache-dtype validator (ServeConfig and `init_cache` both
+    route through it): normalizes to `jnp.dtype`, rejects dtypes the
+    cache layout cannot represent, and — given the arch — rejects
+    quantized combos that would quantize nothing (int8 SSM / RG-LRU
+    state is unsupported; recurrent state stays bf16)."""
+    try:
+        dt = jnp.dtype(cache_dtype)
+    except TypeError as e:
+        raise ValueError(f"cache_dtype {cache_dtype!r} is not a dtype: {e}") from None
+    if dt.name not in SUPPORTED_CACHE_DTYPES:
+        raise ValueError(
+            f"cache_dtype {dt.name!r} is not a supported cache dtype "
+            f"(supported: {', '.join(SUPPORTED_CACHE_DTYPES)}; 'int8' "
+            f"selects the quantized KV codec — DESIGN.md §7)")
+    if cfg is not None and dt == jnp.dtype(jnp.int8):
+        kinds = set(cfg.layer_pattern)
+        if not kinds & {"attn", "local"}:
+            raise ValueError(
+                f"cache_dtype='int8' quantizes attention/sliding-window "
+                f"KV rows only, but this arch's layer pattern "
+                f"{cfg.layer_pattern} has no such layers — int8 "
+                f"SSM/RG-LRU state is unsupported (recurrent state is "
+                f"read-modify-write every step and stays bf16); use "
+                f"cache_dtype='bfloat16' for this arch")
+    return dt
+
+
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
     max_seq: int
@@ -42,14 +74,30 @@ class ServeConfig:
     kernel_backend: str | None = None
     # optional ExecutionPlan JSON to warm-start the decision cache from.
     plan_path: str | None = None
+    # int8 matmul plane (ISSUE 5): route every engine matmul through an
+    # int8 backend (upgrading `kernel_backend` to its int8 sibling) and
+    # expect `quant.quantize_params` weights.  Orthogonal to
+    # cache_dtype="int8" (the KV codec); launch/serve --quantize sets both.
+    quantize: bool = False
 
     def __post_init__(self):
         # Normalize to jnp.dtype so "bfloat16", jnp.bfloat16 and
         # np.dtype("bfloat16") spell EQUAL (and equally hashable)
         # configs — otherwise the _ENGINES memo below silently builds
         # one engine (and decision cache) per spelling.
-        object.__setattr__(self, "compute_dtype", jnp.dtype(self.compute_dtype))
-        object.__setattr__(self, "cache_dtype", jnp.dtype(self.cache_dtype))
+        compute = jnp.dtype(self.compute_dtype)
+        if not jnp.issubdtype(compute, jnp.floating):
+            raise ValueError(
+                f"compute_dtype must be floating ({compute.name!r} given); "
+                f"int8 compute is selected via quantize=True / an int8 "
+                f"kernel_backend, which quantizes inside the kernel")
+        object.__setattr__(self, "compute_dtype", compute)
+        object.__setattr__(self, "cache_dtype",
+                           validate_cache_dtype(self.cache_dtype))
+        if self.quantize:
+            object.__setattr__(
+                self, "kernel_backend",
+                engine_mod.int8_sibling(self.kernel_backend))
 
 
 # One engine per ServeConfig (frozen, hashable): repeated generate()
@@ -71,14 +119,18 @@ def warm_start_engine(scfg: ServeConfig) -> "engine_mod.Engine | None":
     if scfg.plan_path:
         plan = engine_mod.ExecutionPlan.load(scfg.plan_path)
         # dtype width is part of the decision-cache key: a plan built for
-        # another compute dtype would silently miss on every lookup.
-        want = jnp.dtype(scfg.compute_dtype).itemsize
+        # another compute dtype would silently miss on every lookup.  On
+        # an int8 backend every request keys at width 1 regardless of the
+        # float dtype the arrays carry (engine.backend_in_bytes).
+        want = engine_mod.backend_in_bytes(
+            scfg.kernel_backend, jnp.dtype(scfg.compute_dtype).itemsize)
         if len(plan) and not any(req.in_bytes == want for req, _ in plan):
             import warnings
             warnings.warn(
                 f"warm-start plan {scfg.plan_path!r} holds no decisions "
                 f"for in_bytes={want} (compute_dtype="
-                f"{jnp.dtype(scfg.compute_dtype).name}); every lookup "
+                f"{jnp.dtype(scfg.compute_dtype).name}, backend="
+                f"{scfg.kernel_backend!r}); every lookup "
                 f"will miss — re-plan with plan_arch(dtype_bytes={want})",
                 UserWarning, stacklevel=2)
     eng = engine_mod.Engine(backend=scfg.kernel_backend, plan=plan)
@@ -87,6 +139,11 @@ def warm_start_engine(scfg: ServeConfig) -> "engine_mod.Engine | None":
 
 
 def init_cache(cfg: ArchConfig, scfg: ServeConfig):
+    # arch-aware half of the shared validator: ServeConfig can't see the
+    # layer pattern, so unsupported quantized combos (int8 on an
+    # attention-free arch) are rejected HERE — config time, with an
+    # actionable message, not deep inside a jitted cache init.
+    validate_cache_dtype(scfg.cache_dtype, cfg)
     return T.init_cache(cfg, T.CacheSpec(scfg.max_seq, scfg.batch),
                         dtype=scfg.cache_dtype)
 

@@ -46,6 +46,17 @@ class TrainConfig:
     # XLA-native path.  One Engine (and so one decision cache) spans all
     # microbatch traces of the step.
     kernel_backend: str | None = None
+    # int8 forward plane (ISSUE 5): upgrade kernel_backend to its int8
+    # sibling, so every matmul quantizes its operands dynamically on the
+    # way into the MXU while the dispatch-layer VJP keeps cotangents in
+    # the float compute dtype (quantization-aware training posture).
+    quantize: bool = False
+
+    def __post_init__(self):
+        if self.quantize:
+            object.__setattr__(
+                self, "kernel_backend",
+                engine_mod.int8_sibling(self.kernel_backend))
 
 
 def init_state(key, cfg: ArchConfig, tcfg: TrainConfig) -> dict:

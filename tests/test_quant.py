@@ -1,0 +1,467 @@
+"""The int8 quantization plane (ISSUE 5): round-trip bounds, the
+quant GEMM backends, engine precision keying, the quantized KV cache,
+and quantized-vs-bf16 scheduler parity."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro import engine as engine_mod
+from repro.configs import get_config
+from repro.kernels import quant_gemm as qg
+from repro.models import transformer as T
+from repro.models.layers import dense
+from repro.quant import (QuantizedTensor, dequantize, kv_dequantize,
+                         kv_quantize, quantize, quantize_params, tree_bytes)
+from repro.serve_lib import serve as serve_lib
+from repro.serve_lib.scheduler import Request, Scheduler
+
+
+# --------------------------------------------------------------------------
+# Round-trip error bounds (satellite: property test)
+# --------------------------------------------------------------------------
+
+
+@settings(max_examples=25)
+@given(st.integers(2, 48), st.integers(1, 48), st.integers(0, 2**31 - 1),
+       st.sampled_from([0.01, 1.0, 37.5]))
+def test_quantize_roundtrip_error_bound(k, n, seed, spread):
+    """Per-channel symmetric int8: |x - deq(q(x))| <= scale/2 per
+    element, with scale constant along the reduced (contraction) axis."""
+    rng = np.random.default_rng(seed)
+    w = (rng.normal(size=(k, n)) * spread).astype(np.float32)
+    qt = quantize(jnp.asarray(w))
+    assert qt.q.dtype == jnp.int8
+    assert qt.scale.shape == (1, n)
+    err = np.abs(np.asarray(dequantize(qt)) - w)
+    bound = np.asarray(qt.scale) / 2.0 + 1e-7
+    assert (err <= bound).all(), (err.max(), bound.max())
+
+
+@settings(max_examples=25)
+@given(st.integers(1, 9), st.integers(1, 64), st.integers(0, 2**31 - 1))
+def test_kv_codec_roundtrip_error_bound(rows, hd, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(rows, 3, hd)).astype(np.float32) * 4.2
+    q, scale = kv_quantize(jnp.asarray(x))
+    assert q.dtype == jnp.int8 and scale.shape == (rows, 3)
+    err = np.abs(np.asarray(kv_dequantize(q, scale)) - x)
+    assert (err <= np.asarray(scale)[..., None] / 2.0 + 1e-7).all()
+
+
+def test_quantize_zero_channel_is_exact():
+    w = jnp.zeros((8, 4), jnp.float32)
+    qt = quantize(w)
+    assert np.asarray(qt.scale == 1.0).all()  # no div-by-zero scales
+    np.testing.assert_array_equal(np.asarray(dequantize(qt)), np.zeros((8, 4)))
+
+
+def test_quantize_grouped_weights_per_group_channels():
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(3, 16, 8)), jnp.float32)
+    qt = quantize(w)
+    assert qt.scale.shape == (3, 1, 8)
+
+
+# --------------------------------------------------------------------------
+# quantize_params: targets, skips, pytree behavior
+# --------------------------------------------------------------------------
+
+
+def test_quantize_params_targets_dense_and_skips_raw_matmul_weights():
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    qp = quantize_params(params)
+    blk = qp["stack"]["b0"]
+    assert isinstance(blk["attn"]["wq"]["w"], QuantizedTensor)
+    assert isinstance(blk["mlp"]["wi"]["w"], QuantizedTensor)
+    # embeddings / norms are consumed raw and stay float
+    assert not isinstance(qp["embed"], QuantizedTensor)
+    assert qp["final_norm"].dtype == jnp.float32
+    assert tree_bytes(qp) < tree_bytes(params)
+
+
+def test_quantize_params_skips_router_and_ssm_projections():
+    cfg = get_config("granite-moe-1b-a400m", smoke=True)
+    qp = quantize_params(T.init_params(jax.random.PRNGKey(0), cfg))
+    blk = qp["stack"]["b0"]
+    assert not isinstance(blk["moe"]["router"]["w"], QuantizedTensor)
+    # expert stacks stay float (grouped path)
+    assert not isinstance(blk["moe"]["experts"]["wi"], QuantizedTensor)
+    scfg = get_config("mamba2-780m", smoke=True)
+    qps = quantize_params(T.init_params(jax.random.PRNGKey(0), scfg))
+    ssm_p = qps["stack"]["b0"]["ssm"]
+    assert not isinstance(ssm_p["in_proj"]["w"], QuantizedTensor)
+    assert not isinstance(ssm_p["out_proj"]["w"], QuantizedTensor)
+
+
+def test_quantized_tensor_scans_like_a_param_leaf():
+    """lax.scan must slice a stacked QuantizedTensor per period exactly
+    like a raw stacked weight (the transformer scan contract)."""
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(4, 8, 6)), jnp.float32)
+    qt = quantize(w)
+
+    def body(c, qt_slice):
+        assert qt_slice.q.shape == (8, 6)
+        return c, qt_slice.dequantize()
+
+    _, outs = jax.lax.scan(body, 0, qt)
+    np.testing.assert_allclose(
+        np.asarray(outs), np.asarray(dequantize(qt)), rtol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# The int8 GEMM backends
+# --------------------------------------------------------------------------
+
+
+def test_quant_gemm_xla_close_to_float():
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(40, 96)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(96, 56)), jnp.float32)
+    out = qg.quant_gemm(a, b, use_pallas=False)
+    ref = a @ b
+    denom = float(jnp.max(jnp.abs(ref)))
+    assert float(jnp.max(jnp.abs(out - ref))) / denom < 0.03
+
+
+def test_quant_gemm_pallas_interpret_matches_xla_exactly():
+    """Same quantization decomposition, two execution paths: the int32
+    accumulations must agree bit-for-bit."""
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.normal(size=(33, 130)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(130, 70)), jnp.float32)
+    out_x = qg.quant_gemm(a, b, use_pallas=False)
+    out_p = qg.quant_gemm(a, b, use_pallas=True, interpret=True,
+                          bm=64, bk=256, bn=128)
+    np.testing.assert_array_equal(np.asarray(out_x), np.asarray(out_p))
+
+
+def test_quant_gemm_integer_inputs_exact():
+    """Inputs already on the int8 grid with max-abs 127 quantize at
+    scale 1 exactly, so the quantized GEMM equals the float GEMM."""
+    rng = np.random.default_rng(2)
+    a = np.asarray(rng.integers(-127, 128, size=(16, 32)), np.float32)
+    b = np.asarray(rng.integers(-127, 128, size=(32, 24)), np.float32)
+    a[:, 0] = 127.0   # pin every row's amax -> scale exactly 1
+    b[0, :] = -127.0  # pin every column's amax
+    out = qg.quant_gemm(jnp.asarray(a), jnp.asarray(b), use_pallas=False)
+    np.testing.assert_allclose(np.asarray(out), a @ b, rtol=1e-6)
+
+
+def test_quant_gemm_w8_matches_dequantized_reference():
+    rng = np.random.default_rng(3)
+    a = jnp.asarray(rng.normal(size=(24, 48)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(48, 40)), jnp.float32)
+    qt = quantize(w)
+    out = qg.quant_gemm_w8(a, qt.q, qt.scale, use_pallas=False)
+    a_q, s_a = qg.quantize_rows(a)
+    ref = (a_q.astype(jnp.int32) @ qt.q.astype(jnp.int32)).astype(jnp.float32)
+    ref = ref * s_a[:, None] * qt.scale.reshape(1, -1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-6)
+
+
+def test_int8_backends_registered_and_dispatch():
+    reg = engine_mod.default_registry()
+    for backend in engine_mod.INT8_BACKENDS:
+        for op in ("gemm", "gemm_w8", "grouped_gemm", "attention"):
+            assert reg.has(backend, op), (backend, op)
+    rng = np.random.default_rng(4)
+    a = jnp.asarray(rng.normal(size=(16, 64)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(64, 32)), jnp.float32)
+    outs = {}
+    for backend in engine_mod.INT8_BACKENDS:
+        with engine_mod.use_engine(backend=backend) as eng:
+            outs[backend] = np.asarray(eng.matmul(a, b))
+            assert eng.int8
+    # both int8 backends run the same decomposition
+    np.testing.assert_array_equal(outs["pallas-tpu-int8"], outs["xla-int8"])
+
+
+def test_int8_grouped_matmul_close():
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(3, 8, 32)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(3, 32, 16)), jnp.float32)
+    ref = jnp.einsum("ecd,edf->ecf", x, w)
+    with engine_mod.use_engine(backend="xla-int8") as eng:
+        out = eng.grouped_matmul(x, w)
+    denom = float(jnp.max(jnp.abs(ref)))
+    assert float(jnp.max(jnp.abs(out - ref))) / denom < 0.05
+
+
+def test_int8_vjp_cotangents_stay_float():
+    """Training flows: the quantized forward has a dispatch-layer VJP
+    whose cotangent GEMMs are float (close to the float-GEMM grads)."""
+    rng = np.random.default_rng(6)
+    a = jnp.asarray(rng.normal(size=(16, 48)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(48, 24)), jnp.float32)
+
+    def loss_q(a, b):
+        with engine_mod.use_engine(backend="xla-int8") as eng:
+            return jnp.sum(eng.matmul(a, b) ** 2)
+
+    with engine_mod.use_engine(backend="xla-int8"):
+        ga, gb = jax.grad(loss_q, argnums=(0, 1))(a, b)
+    ra, rb = jax.grad(lambda a, b: jnp.sum((a @ b) ** 2), argnums=(0, 1))(a, b)
+    assert ga.dtype == a.dtype and gb.dtype == b.dtype
+    for g, r in ((ga, ra), (gb, rb)):
+        denom = float(jnp.max(jnp.abs(r)))
+        assert float(jnp.max(jnp.abs(g - r))) / denom < 0.06
+
+
+# --------------------------------------------------------------------------
+# Engine precision keying + cost-model width awareness
+# --------------------------------------------------------------------------
+
+
+def test_int8_backend_keys_plan_at_one_byte():
+    rng = np.random.default_rng(7)
+    a = jnp.asarray(rng.normal(size=(16, 64)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(64, 32)), jnp.float32)
+    with engine_mod.use_engine(backend="xla-int8") as eng:
+        eng.matmul(a, b)
+    (req, _), = list(eng.plan)
+    # operands key at the quantized width; the output keeps the float
+    # compute width (the kernel rescales the int32 accumulator).
+    assert req.in_bytes == 1 and req.out_bytes == 4
+
+
+def test_precision_is_part_of_the_decision_cache_key():
+    r1 = engine_mod.KernelRequest("gemm", 512, 512, 512, in_bytes=1,
+                                  out_bytes=1)
+    r2 = engine_mod.KernelRequest("gemm", 512, 512, 512, in_bytes=2,
+                                  out_bytes=2)
+    assert r1.key() != r2.key()
+    plan = engine_mod.ExecutionPlan()
+    model = engine_mod.TPUModel()
+    plan.add(r1, model.decide(r1))
+    assert plan.lookup(r2) is None  # bf16 must not reuse the int8 plan
+
+
+def test_tpu_model_int8_widens_tile_space_and_speeds_plans():
+    """Byte width reaches the cost model: the Eq. 2 VMEM gate admits
+    tile configs at 1 byte that it rejects at 2 (int8 plans may pick
+    larger tiles), and the modeled int8 GEMM is strictly faster (2x MXU
+    peak + halved HBM traffic)."""
+    from repro.core import tpu_model as tm
+
+    cfg = tm.TPUKernelConfig("os", 512, 2048, 2048)
+    assert cfg.vmem_bytes(in_bytes=2) > tm.VMEM     # rejected for bf16
+    assert cfg.vmem_bytes(in_bytes=1) <= tm.VMEM    # admitted for int8
+    model = engine_mod.TPUModel()
+    big = dict(m=4096, k=4096, n=4096)
+    d8 = model.decide(engine_mod.KernelRequest("gemm", **big, in_bytes=1,
+                                               out_bytes=1))
+    d16 = model.decide(engine_mod.KernelRequest("gemm", **big, in_bytes=2,
+                                                out_bytes=2))
+    assert d8.seconds < d16.seconds
+
+
+def test_asic_cost_model_honors_request_width():
+    """The ASIC multi-mode buffer holds capacity/word_bytes words: a
+    2-byte request must never get a LARGER modeled tile space than the
+    native int8 one."""
+    model = engine_mod.AnalyticalCostModel()
+    d1 = model.decide(engine_mod.KernelRequest("gemm", 1024, 1024, 1024,
+                                               in_bytes=1, out_bytes=1))
+    d2 = model.decide(engine_mod.KernelRequest("gemm", 1024, 1024, 1024,
+                                               in_bytes=2, out_bytes=2))
+    tile = lambda d: d.bm * d.bk * d.bn
+    assert tile(d2) <= tile(d1)
+
+
+# --------------------------------------------------------------------------
+# dense() with quantized weights
+# --------------------------------------------------------------------------
+
+
+def test_dense_dequantizes_outside_int8_engine():
+    rng = np.random.default_rng(8)
+    p = {"w": jnp.asarray(rng.normal(size=(32, 16)), jnp.float32)}
+    x = jnp.asarray(rng.normal(size=(4, 32)), jnp.float32)
+    pq = {"w": quantize(p["w"])}
+    ref = np.asarray(dense(p, x))
+    out = np.asarray(dense(pq, x))  # no engine: dequantized float matmul
+    assert np.max(np.abs(out - ref)) / np.max(np.abs(ref)) < 0.02
+    with engine_mod.use_engine(backend="xla-einsum"):  # float engine
+        out2 = np.asarray(dense(pq, x))
+    np.testing.assert_allclose(out2, out, rtol=1e-5, atol=1e-5)
+
+
+def test_dense_dispatches_gemm_w8_on_int8_engine():
+    rng = np.random.default_rng(9)
+    p = {"w": quantize(jnp.asarray(rng.normal(size=(32, 16)), jnp.float32)),
+         "b": jnp.zeros((16,), jnp.float32)}
+    x = jnp.asarray(rng.normal(size=(4, 32)), jnp.float32)
+    with engine_mod.use_engine(backend="xla-int8") as eng:
+        out = dense(p, x)
+    ops = {req.op for req, _ in eng.plan}
+    assert ops == {"gemm_w8"}
+    assert out.shape == (4, 16)
+
+
+# --------------------------------------------------------------------------
+# The shared cache-dtype validator (satellite)
+# --------------------------------------------------------------------------
+
+
+def test_cache_dtype_validator_rejects_unsupported_dtype():
+    with pytest.raises(ValueError, match="int8.*quantized KV|supported"):
+        serve_lib.ServeConfig(max_seq=8, batch=1, cache_dtype=jnp.int16)
+    with pytest.raises(ValueError, match="not a dtype"):
+        serve_lib.ServeConfig(max_seq=8, batch=1, cache_dtype="not-a-dtype")
+
+
+def test_cache_dtype_validator_rejects_int8_recurrent_only_arch():
+    cfg = get_config("mamba2-780m", smoke=True)
+    scfg = serve_lib.ServeConfig(max_seq=16, batch=1,
+                                 compute_dtype=jnp.float32,
+                                 cache_dtype=jnp.int8)
+    with pytest.raises(ValueError, match="SSM/RG-LRU state is unsupported"):
+        serve_lib.init_cache(cfg, scfg)
+
+
+def test_compute_dtype_must_be_floating():
+    with pytest.raises(ValueError, match="compute_dtype must be floating"):
+        serve_lib.ServeConfig(max_seq=8, batch=1, compute_dtype=jnp.int8)
+
+
+def test_quantize_knob_upgrades_backend():
+    scfg = serve_lib.ServeConfig(max_seq=8, batch=1, quantize=True)
+    assert scfg.kernel_backend == "xla-int8"
+    scfg = serve_lib.ServeConfig(max_seq=8, batch=1, quantize=True,
+                                 kernel_backend="pallas-tpu")
+    assert scfg.kernel_backend == "pallas-tpu-int8"
+    with pytest.raises(ValueError, match="cannot upgrade"):
+        serve_lib.ServeConfig(max_seq=8, batch=1, quantize=True,
+                              kernel_backend="simulator")
+
+
+def test_train_config_quantize_knob():
+    from repro.train_lib.train import TrainConfig
+    tcfg = TrainConfig(quantize=True)
+    assert tcfg.kernel_backend == "xla-int8"
+
+
+# --------------------------------------------------------------------------
+# Quantized KV cache: layout + hybrid archs
+# --------------------------------------------------------------------------
+
+
+def test_int8_cache_layout_rows_and_scales():
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    scfg = serve_lib.ServeConfig(max_seq=24, batch=2,
+                                 compute_dtype=jnp.float32,
+                                 cache_dtype=jnp.int8)
+    cache = serve_lib.init_cache(cfg, scfg)
+    slot = cache["slots"]["b0"]
+    assert slot["k"].dtype == jnp.int8
+    assert slot["k_scale"].dtype == jnp.float32
+    assert slot["k_scale"].shape == slot["k"].shape[:-1]
+    assert {"k", "v", "k_scale", "v_scale"} <= set(slot)
+
+
+def test_int8_cache_hybrid_arch_keeps_recurrent_state_bf16():
+    cfg = get_config("recurrentgemma-2b", smoke=True)
+    assert "rglru" in cfg.layer_pattern and "local" in cfg.layer_pattern
+    scfg = serve_lib.ServeConfig(max_seq=24, batch=2,
+                                 compute_dtype=jnp.float32,
+                                 cache_dtype=jnp.int8)
+    cache = serve_lib.init_cache(cfg, scfg)
+    kinds = dict(zip([f"b{j}" for j in range(len(cfg.layer_pattern))],
+                     cfg.layer_pattern))
+    for name, kind in kinds.items():
+        slot = cache["slots"][name]
+        if kind in ("attn", "local"):
+            assert slot["k"].dtype == jnp.int8
+        else:
+            assert slot["conv"].dtype == jnp.bfloat16
+            assert slot["h"].dtype == jnp.bfloat16
+
+
+def test_int8_cache_bytes_shrink():
+    cfg = dataclasses.replace(get_config("qwen2-1.5b", smoke=True),
+                              head_dim=64)
+    mk = lambda dt: serve_lib.init_cache(cfg, serve_lib.ServeConfig(
+        max_seq=32, batch=2, compute_dtype=jnp.float32, cache_dtype=dt))
+    ratio = tree_bytes(mk(jnp.bfloat16)) / tree_bytes(mk(jnp.int8))
+    assert ratio >= 1.8, ratio
+
+
+# --------------------------------------------------------------------------
+# Scheduler parity: quantized cache vs bf16 on a mixed-length trace
+# --------------------------------------------------------------------------
+
+
+TRACE = [(6, 8), (10, 2), (6, 5), (14, 9), (10, 3), (6, 7), (14, 2), (10, 6)]
+
+
+def _mk_requests(cfg):
+    rng = np.random.default_rng(0)
+    return [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab, p).astype(np.int32),
+                    max_new_tokens=g)
+            for i, (p, g) in enumerate(TRACE)]
+
+
+def _run_sched(cfg, params, cache_dtype, **scfg_kw):
+    max_seq = max(p + g for p, g in TRACE) + 1
+    scfg = serve_lib.ServeConfig(max_seq=max_seq, batch=3,
+                                 compute_dtype=jnp.float32,
+                                 cache_dtype=cache_dtype, **scfg_kw)
+    sched = Scheduler(params, cfg, scfg)
+    return sched.run(_mk_requests(cfg))
+
+
+def test_scheduler_int8_cache_greedy_parity():
+    """The KV codec's ~0.4% row error must not flip any greedy token on
+    the mixed-length smoke trace (full attention cache)."""
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    base = _run_sched(cfg, params, jnp.bfloat16)
+    quant = _run_sched(cfg, params, jnp.int8)
+    assert set(base) == set(quant)
+    for uid in base:
+        np.testing.assert_array_equal(base[uid].tokens, quant[uid].tokens,
+                                      err_msg=f"request {uid}")
+
+
+def test_scheduler_int8_ring_cache_flips_near_ties_only():
+    """Ring (sliding-window) caches quantize too; greedy streams may
+    flip a token whose baseline top-2 margin is a near-tie (measured
+    6.8e-3 on this trace vs ~0.5 typical), so the gate is stepwise:
+    >= 95% agreement across the trace."""
+    cfg = get_config("gemma3-12b", smoke=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    base = _run_sched(cfg, params, jnp.bfloat16)
+    quant = _run_sched(cfg, params, jnp.int8)
+    agree = total = 0
+    for uid in base:
+        tb, tq = base[uid].tokens, quant[uid].tokens
+        n = min(len(tb), len(tq))
+        agree += int((tb[:n] == tq[:n]).sum())
+        total += n
+    assert agree / total >= 0.95, (agree, total)
+
+
+def test_scheduler_full_int8_posture_runs_and_mostly_agrees():
+    """Weights + matmuls + cache all int8: sequences may diverge after a
+    near-tie flip (documented), but stepwise agreement stays high and
+    everything dispatches through the engine."""
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    base = _run_sched(cfg, params, jnp.bfloat16)
+    quant = _run_sched(cfg, quantize_params(params), jnp.int8, quantize=True)
+    agree = total = 0
+    for uid in base:
+        tb, tq = base[uid].tokens, quant[uid].tokens
+        n = min(len(tb), len(tq))
+        agree += int((tb[:n] == tq[:n]).sum())
+        total += n
+    assert total > 0 and agree / total > 0.5, (agree, total)
