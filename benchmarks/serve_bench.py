@@ -26,6 +26,18 @@ is miss-free.
 
     PYTHONPATH=src python -m benchmarks.serve_bench --smoke --check \
         --out BENCH_PR4.json
+
+``--shared-prefix`` switches to the PR-6 trace: every request shares a
+long common prompt prefix and the SAME Scheduler serves it twice — once
+with the contiguous per-slot cache, once with
+``cache_layout="paged"`` where the radix prefix index lets later
+requests reuse the already-prefilled prefix pages.  Emits
+``BENCH_PR6.json``; ``--check`` gates paged >= 1.5x useful tokens/s,
+exact greedy parity, prefill-token reuse > 1x, and a miss-free engine
+steady state.
+
+    PYTHONPATH=src python -m benchmarks.serve_bench --smoke --check \
+        --shared-prefix --out BENCH_PR6.json
 """
 
 from __future__ import annotations
@@ -50,6 +62,23 @@ def make_trace(smoke: bool) -> tuple[int, list[tuple[int, int]]]:
         lens = [8, 16, 8, 24, 16, 8, 24, 16, 8, 12, 12, 16, 8, 24, 12, 8]
         gens = [24, 4, 12, 20, 6, 28, 4, 16, 8, 24, 4, 12, 20, 6, 28, 10]
     return pool, list(zip(lens, gens))
+
+
+def make_shared_trace(smoke: bool) -> tuple[int, int, int, list[tuple[int, int]]]:
+    """(pool, page_size, prefix_len, [(suffix_len, gen_len), ...]) —
+    one long prompt prefix common to every request (a page-multiple, so
+    the whole prefix is shareable full pages) plus short unique
+    suffixes and small budgets: prefill dominates, which is exactly the
+    work prefix sharing removes."""
+    if smoke:
+        pool, page, prefix = 3, 16, 384
+        sufs = [5, 8, 6, 7, 5, 8, 6, 5, 7, 8, 6, 5]
+        gens = [3, 2, 4, 2, 3, 2, 4, 3, 2, 3, 2, 4]
+    else:
+        pool, page, prefix = 4, 16, 448
+        sufs = [5, 8, 6, 7, 5, 8, 6, 5, 7, 8, 6, 5, 8, 7, 6, 5]
+        gens = [3, 2, 4, 2, 3, 2, 4, 3, 2, 3, 2, 4, 2, 3, 4, 2]
+    return pool, page, prefix, list(zip(sufs, gens))
 
 
 def _build(arch: str, pool: int, max_seq: int, backend=None):
@@ -80,14 +109,34 @@ def _requests(cfg, trace):
             for i, (p, g) in enumerate(trace)]
 
 
-def run_continuous(cfg, params, scfg, trace, bucket: int):
+def _shared_requests(cfg, prefix_len: int, trace):
+    """Shared-prefix request list: one common `prefix_len` prompt head,
+    per-request unique suffixes (deterministic, so both layouts and the
+    posture pass serve byte-identical traces)."""
+    import numpy as np
+
+    from repro.serve_lib.scheduler import Request
+
+    rng = np.random.default_rng(0)
+    prefix = rng.integers(0, cfg.vocab, prefix_len).astype(np.int32)
+    reqs = []
+    for i, (s, g) in enumerate(trace):
+        suffix = rng.integers(0, cfg.vocab, s).astype(np.int32)
+        reqs.append(Request(uid=i, prompt=np.concatenate([prefix, suffix]),
+                            max_new_tokens=g))
+    return reqs
+
+
+def run_continuous(cfg, params, scfg, trace, bucket: int, reqs_fn=None):
     """Serve through the Scheduler; returns (report_row, {uid: tokens})."""
     from repro.serve_lib.scheduler import Scheduler
+
+    make = reqs_fn or (lambda: _requests(cfg, trace))
 
     def serve_once():
         sched = Scheduler(params, cfg, scfg, prefill_bucket=bucket)
         t0 = time.time()
-        comps = sched.run(_requests(cfg, trace))
+        comps = sched.run(make())
         return time.time() - t0, sched, comps
 
     serve_once()  # warm-up: jit compiles for the decode + admit widths
@@ -182,16 +231,123 @@ def run_engine_posture(arch, pool, max_seq, trace, bucket, warmup_steps=3):
     }
 
 
+def run_engine_posture_paged(arch, pool, page, prefix_len, max_seq, trace,
+                             bucket):
+    """Serve the shared-prefix trace twice through ONE warm-started
+    engine (paged layout): the first pass populates the runtime memo on
+    top of the plan_arch(..., paged_pages=...) warm start, the second
+    identical pass must add ZERO new plan misses — the paged-decode and
+    shared-admit shapes are fully pre-decided."""
+    import dataclasses
+
+    from repro import engine as engine_mod
+    from repro.serve_lib.scheduler import Scheduler
+
+    cfg, params, scfg = _build(arch, pool, max_seq, backend="xla-einsum")
+    scfg = dataclasses.replace(scfg, cache_layout="paged", page_size=page)
+    width = -(-(prefix_len + max(s for s, _ in trace)) // bucket) * bucket
+    plan = engine_mod.plan_arch(
+        cfg, seq_len=width, dtype_bytes=4, decode_batch=pool,
+        admit_widths=tuple(range(bucket, width + 1, bucket)),
+        backend="xla-einsum",
+        paged_pages=scfg.slot_pages, page_size=page)
+    eng = engine_mod.Engine(backend="xla-einsum", plan=plan)
+    planned = len(plan)
+    reqs = lambda: _shared_requests(cfg, prefix_len, trace)
+    Scheduler(params, cfg, scfg, engine=eng, prefill_bucket=bucket).run(reqs())
+    warm = dict(plan.stats)
+    Scheduler(params, cfg, scfg, engine=eng, prefill_bucket=bucket).run(reqs())
+    final = dict(plan.stats)
+    return {
+        "backend": "xla-einsum",
+        "planned_decisions": planned,
+        "after_warmup": warm,
+        "final": final,
+        # a repeat serve of the same trace re-plans nothing
+        "steady_state_new_misses": final["misses"] - warm["misses"],
+        "steady_state_new_hits": final["hits"] - warm["hits"],
+    }
+
+
+def run_shared_prefix(args) -> tuple[dict, list[str]]:
+    """PR-6 mode: contiguous vs paged Scheduler on a shared-prefix
+    trace.  Returns (report, check_failures)."""
+    import dataclasses
+
+    pool, page, prefix_len, trace = make_shared_trace(args.smoke)
+    max_seq = prefix_len + max(s + g for s, g in trace) + 1
+    cfg, params, scfg = _build(args.arch, pool, max_seq)
+    scfg_paged = dataclasses.replace(scfg, cache_layout="paged",
+                                     page_size=page)
+    reqs = lambda: _shared_requests(cfg, prefix_len, trace)
+
+    cont, cont_toks = run_continuous(cfg, params, scfg, trace,
+                                     args.prefill_bucket, reqs_fn=reqs)
+    paged, paged_toks = run_continuous(cfg, params, scfg_paged, trace,
+                                       args.prefill_bucket, reqs_fn=reqs)
+    parity = all(paged_toks[u] == cont_toks[u] for u in cont_toks)
+    engine = run_engine_posture_paged(args.arch, pool, page, prefix_len,
+                                      max_seq, trace, args.prefill_bucket)
+
+    report = {
+        "bench": "serve_paged_shared_prefix",
+        "arch": args.arch, "smoke": args.smoke, "pool_slots": pool,
+        "page_size": page, "prefix_len": prefix_len, "trace": trace,
+        "contiguous": cont,
+        "paged": paged,
+        "speedup_tokens_per_s": round(
+            paged["tokens_per_s"] / cont["tokens_per_s"], 3),
+        # host-invariant: prefilled-token counts, not wall clock
+        "prefix_reuse_ratio": round(
+            cont["prefill_tokens"] / paged["prefill_tokens"], 3),
+        "greedy_parity": parity,
+        "engine": engine,
+    }
+
+    failures = []
+    if not parity:
+        failures.append("paged and contiguous emitted different tokens")
+    if args.check:
+        if report["speedup_tokens_per_s"] < 1.5:
+            failures.append(
+                f"paged did not reach 1.5x over contiguous "
+                f"({report['speedup_tokens_per_s']}x)")
+        if report["prefix_reuse_ratio"] <= 1.0:
+            failures.append(
+                f"prefix sharing saved no prefill tokens "
+                f"(reuse ratio {report['prefix_reuse_ratio']})")
+        if engine["steady_state_new_misses"] != 0:
+            failures.append(
+                f"paged serve re-planned after warm-up "
+                f"({engine['steady_state_new_misses']} new misses)")
+    return report, failures
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-1.5b")
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--out", default="BENCH_PR4.json")
+    ap.add_argument("--out", default=None)
     ap.add_argument("--prefill-bucket", type=int, default=8)
+    ap.add_argument("--shared-prefix", action="store_true",
+                    help="PR-6 mode: contiguous vs paged cache layout on "
+                         "a shared-prefix trace (emits BENCH_PR6.json)")
     ap.add_argument("--check", action="store_true",
                     help="exit nonzero unless continuous wins and the "
                          "engine steady state re-plans nothing")
     args = ap.parse_args(argv)
+    if args.out is None:
+        args.out = "BENCH_PR6.json" if args.shared_prefix else "BENCH_PR4.json"
+
+    if args.shared_prefix:
+        report, failures = run_shared_prefix(args)
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(json.dumps(report, indent=1, sort_keys=True))
+        for msg in failures:
+            print(f"FAIL: {msg}", file=sys.stderr)
+        return len(failures)
 
     pool, trace = make_trace(args.smoke)
     max_seq = max(p + g for p, g in trace) + 1

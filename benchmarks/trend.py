@@ -33,7 +33,8 @@ import sys
 #: dotted-path substrings marking a higher-is-better, host-invariant
 #: throughput metric (same-run ratios; absolute tokens/s is reported
 #: but never gated — see the module docstring).
-THROUGHPUT_MARKERS = ("speedup", "geomean", "relative_throughput")
+THROUGHPUT_MARKERS = ("speedup", "geomean", "relative_throughput",
+                      "reuse_ratio")
 
 #: noisy / non-metric paths never worth a table row.
 SKIP_MARKERS = ("trace", "shapes", "prefill_widths")

@@ -219,7 +219,22 @@ _CACHE_AXES = {
     "conv": (None, "batch", None, None),
     "state": (None, "batch", "heads", None, None),
     "h": (None, "batch", "mlp"),
+    # paged KV pools (DESIGN.md §8): the pool's page axis takes the
+    # "seq_kv" role (pages ARE the sequence, shuffled) — any slot's
+    # block-table row scatters across shards, so decode gathers balance.
+    # There is no batch axis; block tables stay host-side/replicated.
+    "k_pages": (None, "seq_kv", None, "kv_heads", None),
+    "v_pages": (None, "seq_kv", None, "kv_heads", None),
+    "k_scale_pages": (None, "seq_kv", None, "kv_heads"),
+    "v_scale_pages": (None, "seq_kv", None, "kv_heads"),
 }
+
+
+def block_table_pspec(mesh: Mesh, shape=None):
+    """PartitionSpec for a (B, n_bt) block table: slots over 'batch',
+    table entries replicated (every shard of a paged pool needs the
+    whole row to resolve its pages)."""
+    return spec(shape or (1, 1), ("batch", None), mesh) if shape else P("batch", None)
 
 
 def cache_shardings(cache_tree, mesh: Mesh):

@@ -283,6 +283,29 @@ class Engine:
                                 _dtype_bytes(q))
         return fn(dec, q, k, v, causal=causal, window=window)
 
+    def paged_attention(self, q, k_pages, v_pages, block_tables, kv_len, *,
+                        k_scale=None, v_scale=None):
+        """Paged decode attention (DESIGN.md §8): q (B, 1, H, D) over
+        pools (P, page, KV, D) addressed through `block_tables`
+        (B, n_bt); int8 pools pass their per-row scale pools alongside.
+        Keyed like the runtime shape it is: n = the full page span the
+        table can address (n_bt * page), groups = B * H."""
+        q, k_pages, v_pages, block_tables, kv_len = _as_arrays(
+            q, k_pages, v_pages, block_tables, kv_len)
+        key = ("paged_attention", q.aval, k_pages.aval, block_tables.aval)
+        hit = self._memo.get(key)
+        if hit is not None:
+            self.plan.hits += 1
+            dec, fn = hit
+            return fn(dec, q, k_pages, v_pages, block_tables, kv_len,
+                      k_scale=k_scale, v_scale=v_scale)
+        b, sq, h, d = q.shape
+        span = block_tables.shape[1] * k_pages.shape[1]
+        dec, fn = self._resolve(key, "paged_attention", sq, d, span, b * h,
+                                _dtype_bytes(q))
+        return fn(dec, q, k_pages, v_pages, block_tables, kv_len,
+                  k_scale=k_scale, v_scale=v_scale)
+
 
 # ---------------------------------------------------------------------------
 # Context management
@@ -339,7 +362,8 @@ def matmul(a, b, *, out_dtype=None):
 
 def decode_requests(cfg, *, batch: int, dtype_bytes: int = 2,
                     seq: int = 1, quantized_weights: bool = False,
-                    out_bytes: int | None = None) -> tuple[KernelRequest, ...]:
+                    out_bytes: int | None = None, paged_pages: int = 0,
+                    page_size: int = 0) -> tuple[KernelRequest, ...]:
     """The exact engine requests one `models.transformer.decode_step`
     issues at slot-pool size `batch` (M = batch: one token per slot).
 
@@ -393,6 +417,14 @@ def decode_requests(cfg, *, batch: int, dtype_bytes: int = 2,
             gemm(tokens, d, nkv * hd, f"{kind}/wk")  # wv is the same shape
             gemm(tokens, nh * hd, d, f"{kind}/wo")
             mlp_reqs(kind)
+            if kind == "attn" and paged_pages and page_size and seq == 1:
+                # paged decode gather-attention: n = the page span one
+                # block-table row can address — exactly how the runtime
+                # Engine.paged_attention keys its request
+                reqs.append(KernelRequest(
+                    "paged_attention", seq, hd, paged_pages * page_size,
+                    groups=batch * nh, in_bytes=dtype_bytes,
+                    out_bytes=out_b, name="attn/paged"))
         elif kind == "rglru":
             w = cfg.rglru_width or d
             gemm(tokens, d, w, "rglru/lin_x")  # lin_y is the same shape
@@ -409,7 +441,8 @@ def plan_arch(cfg, *, seq_len: int | None = None, batch: int = 1,
               dtype_bytes: int = 2,
               decode_batch: int | None = None,
               admit_widths: tuple[int, ...] = (),
-              quantized_weights: bool = False) -> ExecutionPlan:
+              quantized_weights: bool = False,
+              paged_pages: int = 0, page_size: int = 0) -> ExecutionPlan:
     """Plan every GEMM of one `repro.models.config.ArchConfig` prefill
     pass via the `core.workloads.arch_gemms` lowering and return the
     warm `ExecutionPlan` (save it for serve warm-start).  `dtype_bytes`
@@ -424,7 +457,11 @@ def plan_arch(cfg, *, seq_len: int | None = None, batch: int = 1,
     does the same for its ragged-prefill admit widths (the scheduler's
     `prefill_bucket` multiples).  `quantized_weights` plans the decode/
     admit dense projections as `gemm_w8` (a `quant.quantize_params`
-    server dispatches those instead of `gemm`)."""
+    server dispatches those instead of `gemm`).  `paged_pages` /
+    `page_size` (a `cache_layout="paged"` server: slot_pages and the
+    page size) additionally plan the paged decode gather-attention
+    shape, so the paged scheduler's steady state also re-plans
+    nothing."""
     from repro.core.workloads import ARCH_TRACE_SEQ, arch_gemms
 
     in_bytes = backend_in_bytes(backend, dtype_bytes)
@@ -439,6 +476,8 @@ def plan_arch(cfg, *, seq_len: int | None = None, batch: int = 1,
             for req in decode_requests(cfg, batch=decode_batch,
                                        dtype_bytes=in_bytes, seq=width,
                                        quantized_weights=quantized_weights,
-                                       out_bytes=dtype_bytes):
+                                       out_bytes=dtype_bytes,
+                                       paged_pages=paged_pages,
+                                       page_size=page_size):
                 eng.decide(req)
     return eng.plan

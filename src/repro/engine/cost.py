@@ -68,7 +68,9 @@ class TPUModel:
     default_backend: str | None = None  # Engine resolves a Pallas backend
 
     def decide(self, request: KernelRequest) -> KernelDecision:
-        if request.op == "attention":
+        if request.op in ("attention", "paged_attention"):
+            # paged decode is the same flash roofline with n = the page
+            # span the block table can address (pages stream exactly once)
             return self._decide_attention(request)
         if request.op == "grouped_gemm":
             return self._decide_grouped(request)
@@ -188,7 +190,7 @@ class AnalyticalCostModel:
     def decide(self, request: KernelRequest) -> KernelDecision:
         from repro.core.analytical_model import GEMM
 
-        if request.op == "attention":
+        if request.op in ("attention", "paged_attention"):
             raise ValueError(
                 "the ASIC plane plans GEMMs; lower attention to its "
                 "score/context GEMMs first (core.workloads.arch_gemms)")

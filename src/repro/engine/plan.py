@@ -32,7 +32,8 @@ PLAN_FORMAT = "redas-execution-plan-v1"
 #: whose right operand is pre-quantized int8 storage (ISSUE 5): it plans
 #: through the same search as "gemm" but keys separately so a plan can
 #: hold both postures side by side.
-KNOWN_OPS = ("gemm", "grouped_gemm", "attention", "gemm_w8")
+KNOWN_OPS = ("gemm", "grouped_gemm", "attention", "gemm_w8",
+             "paged_attention")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -73,8 +73,8 @@ _DEFAULT: KernelRegistry | None = None
 
 
 def _load_kernel_registrations(reg: KernelRegistry) -> None:
-    from repro.kernels import (flash_attention, grouped_gemm, quant_gemm,
-                               redas_gemm)
+    from repro.kernels import (flash_attention, grouped_gemm,
+                               paged_attention, quant_gemm, redas_gemm)
 
     from . import backends
 
@@ -82,6 +82,7 @@ def _load_kernel_registrations(reg: KernelRegistry) -> None:
     grouped_gemm.register_into(reg)
     flash_attention.register_into(reg)
     quant_gemm.register_into(reg)
+    paged_attention.register_into(reg)
     backends.register_into(reg)
 
 

@@ -107,6 +107,13 @@ def main(argv=None) -> dict:
     ap.add_argument("--plan", default=None,
                     help="ExecutionPlan JSON to warm-start the decision "
                          "cache from (see repro.engine.plan_arch)")
+    ap.add_argument("--cache-layout", default="contiguous",
+                    choices=("contiguous", "paged"),
+                    help="KV-cache layout; 'paged' (trace mode only) pools "
+                         "fixed pages behind per-slot block tables and "
+                         "shares prefilled prompt pages across requests")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per page for --cache-layout paged")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -116,12 +123,16 @@ def main(argv=None) -> dict:
     trace = parse_trace(args.trace) if args.trace else None
     max_seq = (max(p + g for p, g in trace) + 1 if trace
                else args.prompt_len + args.gen + 1)
+    if args.cache_layout == "paged" and trace is None:
+        raise SystemExit("--cache-layout paged needs --trace (the block-table "
+                         "plane lives in the continuous-batching scheduler)")
     scfg = serve_lib.ServeConfig(
         max_seq=max_seq, batch=args.batch,
         compute_dtype=dtype,
         cache_dtype=jnp.int8 if args.quantize else dtype,
         kernel_backend=args.kernel_backend, plan_path=args.plan,
-        quantize=args.quantize)
+        quantize=args.quantize,
+        cache_layout=args.cache_layout, page_size=args.page_size)
     mesh = make_test_mesh()
 
     with mesh, shd.use_mesh(mesh):

@@ -109,6 +109,19 @@ def gather_rows(x: Array, idx: Array) -> Array:
     return jnp.take_along_axis(x, idx.reshape(shape), axis=1)
 
 
+def paged_slot_update(pool: Array, page_idx: Array, offset: Array,
+                      new: Array) -> Array:
+    """Write one row per batch slot into the paged pool (DESIGN.md §8).
+
+    pool (P, page, ...); page_idx / offset (B,) name each slot's
+    physical page and in-page row; new (B, ...).  Masking rides the
+    indices: callers pass a sentinel page_idx >= P for slots that must
+    not write (inactive, or unadmitted in a ragged prefill) and
+    `mode="drop"` discards those scatters — no read-modify-where pass
+    over the pool."""
+    return pool.at[page_idx, offset].set(new.astype(pool.dtype), mode="drop")
+
+
 # --------------------------------------------------------------------------
 # Rotary position embeddings
 # --------------------------------------------------------------------------
@@ -415,4 +428,30 @@ def cached_attention(p, cfg, q: Array, k_cache: Array, v_cache: Array,
         p_attn = p_attn * row(v_scale)
     o = jnp.einsum("bkgqs,bskd->bqkgd", p_attn, v_cache.astype(jnp.float32))
     o = o.reshape(b, sq, h, d).astype(q.dtype)
+    return dense(p["wo"], o.reshape(b, sq, cfg.n_heads * cfg.head_dim_))
+
+
+def paged_cached_attention(p, cfg, q: Array, c: dict, block_tables: Array,
+                           kv_len: Array) -> Array:
+    """Decode attention over the paged pool: q (B,1,H,D) against the
+    cache dict's `k_pages`/`v_pages` pools through `block_tables`
+    (B, n_bt).  Inside an engine whose backend registers the
+    `paged_attention` op the planned kernel runs (scalar-prefetch
+    gather, DESIGN.md §8); otherwise the reference gather — which is
+    bit-identical to `cached_attention` on the same live rows, the
+    property the parity tests pin.  int8 pools ship their per-row scale
+    pages through the same block table (scales page with their rows)."""
+    from repro.engine import active_engine
+    b, sq, h, d = q.shape
+    k_scale = c.get("k_scale_pages")
+    v_scale = c.get("v_scale_pages")
+    eng = active_engine()
+    if eng is not None and eng.registry.has(eng.backend, "paged_attention"):
+        o = eng.paged_attention(q, c["k_pages"], c["v_pages"], block_tables,
+                                kv_len, k_scale=k_scale, v_scale=v_scale)
+    else:
+        from repro.kernels.paged_attention import paged_attention_reference
+        o = paged_attention_reference(q, c["k_pages"], c["v_pages"],
+                                      block_tables, kv_len,
+                                      k_scale=k_scale, v_scale=v_scale)
     return dense(p["wo"], o.reshape(b, sq, cfg.n_heads * cfg.head_dim_))

@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from ..dist.sharding import constrain
-from ..quant import kv_quantize
+from ..quant import kv_dequantize, kv_quantize
 from . import layers, moe, rglru, ssm
 from .config import ArchConfig
 from .layers import dense, mlp, mlp_init, rms_norm
@@ -196,9 +196,17 @@ def forward(params, cfg: ArchConfig, tokens: Array | None = None, *,
 
 @dataclasses.dataclass(frozen=True)
 class CacheSpec:
-    """Static description of the per-block cache for a serving config."""
+    """Static description of the per-block cache for a serving config.
+
+    `page_size`/`n_pages` select the paged layout (DESIGN.md §8): full
+    attention KV moves from per-slot `(B, max_seq, ...)` regions into
+    one pool of `n_pages` fixed pages addressed through per-slot block
+    tables; sliding-window rings and recurrent state keep their slot
+    layout (they are already O(window)/O(1) — paging buys nothing)."""
     max_seq: int
     batch: int
+    page_size: int | None = None
+    n_pages: int | None = None
 
 
 def _slot_cache_shape(kind: str, cfg: ArchConfig, spec: CacheSpec,
@@ -211,6 +219,24 @@ def _slot_cache_shape(kind: str, cfg: ArchConfig, spec: CacheSpec,
         # noise, so it stays bf16 (DESIGN.md §7 — the config-time
         # validator in serve_lib rejects archs where nothing quantizes).
         dtype = jnp.bfloat16
+    if kind == "attn" and spec.page_size:
+        if not spec.n_pages:
+            raise ValueError("paged CacheSpec needs n_pages")
+        # page pool: physical page p of every layer lives in that
+        # layer's own pool at row p — one block table addresses all
+        # layers.  The int8 codec's per-row scales page WITH their rows
+        # (same pool index, same block table) so a page is always
+        # self-describing.
+        c = {"k_pages": jnp.zeros((spec.n_pages, spec.page_size, kv, hd),
+                                  dtype),
+             "v_pages": jnp.zeros((spec.n_pages, spec.page_size, kv, hd),
+                                  dtype)}
+        if quant:
+            c["k_scale_pages"] = jnp.zeros(
+                (spec.n_pages, spec.page_size, kv), jnp.float32)
+            c["v_scale_pages"] = jnp.zeros(
+                (spec.n_pages, spec.page_size, kv), jnp.float32)
+        return c
     if kind in ("attn", "local"):
         s = spec.max_seq if kind == "attn" else min(cfg.window, spec.max_seq)
         c = {"k": jnp.zeros((b, s, kv, hd), dtype),
@@ -262,39 +288,83 @@ def _merge_slot(active, new: dict, old: dict) -> dict:
     return jax.tree.map(pick, new, old)
 
 
+def _merge_block(active, new: dict, old: dict) -> dict:
+    """`_merge_slot`, except paged pools pass through untouched: their
+    leading dim is pages (not batch) and every paged write already
+    bakes the slot mask into its scatter indices (sentinel page -> the
+    scatter's `mode="drop"`), so a post-hoc where() would be both a
+    shape error and redundant."""
+    if "k_pages" in new:
+        return new
+    return _merge_slot(active, new, old)
+
+
 def _decode_block(kind: str, p, cfg: ArchConfig, x: Array, t: Array, c: dict,
-                  active: Array | None = None):
+                  active: Array | None = None,
+                  block_tables: Array | None = None):
     """One-token step for one block; returns (x, new_cache_slice).
 
     `t` (B,) is the per-slot cache clock: each slot writes its new KV
     row at its own position and attends its own valid prefix, so one
     fused step serves a pool of sequences of different ages.  `active`
-    (B,) masks cache updates for empty / evicted slots."""
+    (B,) masks cache updates for empty / evicted slots.  Paged blocks
+    (`"k_pages" in c`) resolve the write position through
+    `block_tables` (B, n_bt) instead of a per-slot row."""
     pos = t[:, None].astype(jnp.int32)  # (B, 1) per-slot positions
     if kind in ("attn", "local"):
         q, k_new, v_new = layers.attn_qkv(
             p["attn"], cfg, rms_norm(p["norm1"], x, cfg.norm_eps), pos)
-        size = c["k"].shape[1]
-        idx = (t % size).astype(jnp.int32)
-        if "k_scale" in c:  # int8 codec: quantize the new row, store
-            # its scale beside it; attention reads the int8 rows RAW
-            # with the scales folded into its einsums (no dequantized
-            # float copy of the cache — layers.cached_attention).
-            kq, ks = kv_quantize(k_new[:, 0])
-            vq, vs = kv_quantize(v_new[:, 0])
-            new_c = {"k": layers.slot_update(c["k"], idx, kq, active),
-                     "v": layers.slot_update(c["v"], idx, vq, active),
-                     "k_scale": layers.slot_update(c["k_scale"], idx, ks,
-                                                   active),
-                     "v_scale": layers.slot_update(c["v_scale"], idx, vs,
-                                                   active)}
+        if "k_pages" in c:
+            if block_tables is None:
+                raise ValueError("paged cache decode needs block_tables")
+            n_pool, page = c["k_pages"].shape[0], c["k_pages"].shape[1]
+            pidx = (t // page).astype(jnp.int32)
+            phys = jnp.take_along_axis(block_tables, pidx[:, None],
+                                       axis=1)[:, 0]
+            # the slot mask and unallocated holes both route to the
+            # sentinel row n_pool: paged_slot_update's mode="drop"
+            # discards those writes without touching the pool
+            if active is not None:
+                phys = jnp.where(active, phys, n_pool)
+            phys = jnp.where(phys < 0, n_pool, phys).astype(jnp.int32)
+            off = (t % page).astype(jnp.int32)
+            if "k_scale_pages" in c:
+                kq, ks = kv_quantize(k_new[:, 0])
+                vq, vs = kv_quantize(v_new[:, 0])
+                store = {"k_pages": kq, "v_pages": vq,
+                         "k_scale_pages": ks, "v_scale_pages": vs}
+            else:
+                store = {"k_pages": k_new[:, 0], "v_pages": v_new[:, 0]}
+            new_c = {nm: layers.paged_slot_update(c[nm], phys, off, val)
+                     for nm, val in store.items()}
+            # full attention never wraps: the slot's whole history is
+            # paged in, so the valid length is just the clock
+            h = layers.paged_cached_attention(
+                p["attn"], cfg, q, new_c, block_tables, t + 1)
         else:
-            new_c = {"k": layers.slot_update(c["k"], idx, k_new[:, 0], active),
-                     "v": layers.slot_update(c["v"], idx, v_new[:, 0], active)}
-        kv_len = jnp.minimum(t + 1, size)
-        h = layers.cached_attention(
-            p["attn"], cfg, q, new_c["k"], new_c["v"], pos, kv_len,
-            k_scale=new_c.get("k_scale"), v_scale=new_c.get("v_scale"))
+            size = c["k"].shape[1]
+            idx = (t % size).astype(jnp.int32)
+            if "k_scale" in c:  # int8 codec: quantize the new row, store
+                # its scale beside it; attention reads the int8 rows RAW
+                # with the scales folded into its einsums (no dequantized
+                # float copy of the cache — layers.cached_attention).
+                kq, ks = kv_quantize(k_new[:, 0])
+                vq, vs = kv_quantize(v_new[:, 0])
+                new_c = {"k": layers.slot_update(c["k"], idx, kq, active),
+                         "v": layers.slot_update(c["v"], idx, vq, active),
+                         "k_scale": layers.slot_update(c["k_scale"], idx, ks,
+                                                       active),
+                         "v_scale": layers.slot_update(c["v_scale"], idx, vs,
+                                                       active)}
+            else:
+                new_c = {"k": layers.slot_update(c["k"], idx, k_new[:, 0],
+                                                 active),
+                         "v": layers.slot_update(c["v"], idx, v_new[:, 0],
+                                                 active)}
+            kv_len = jnp.minimum(t + 1, size)
+            h = layers.cached_attention(
+                p["attn"], cfg, q, new_c["k"], new_c["v"], pos, kv_len,
+                k_scale=new_c.get("k_scale"), v_scale=new_c.get("v_scale"))
         x = x + h
         h2in = rms_norm(p["norm2"], x, cfg.norm_eps)
         if cfg.moe is not None:
@@ -321,7 +391,8 @@ def _decode_block(kind: str, p, cfg: ArchConfig, x: Array, t: Array, c: dict,
 
 
 def decode_step(params, cfg: ArchConfig, cache: dict, token: Array, *,
-                compute_dtype=jnp.bfloat16, active: Array | None = None):
+                compute_dtype=jnp.bfloat16, active: Array | None = None,
+                block_tables: Array | None = None):
     """token (B, 1) int32 -> (logits (B, 1, V), new_cache).
 
     `cache["t"]` is a per-slot clock (B,); `active` (B,) bool masks
@@ -329,7 +400,10 @@ def decode_step(params, cfg: ArchConfig, cache: dict, token: Array, *,
     cache and clock and their logits rows are garbage to discard.  The
     call shapes are independent of which slots are active, so a
     continuous-batching scheduler reuses one jitted step (and one
-    engine decision cache) for every step it ever takes."""
+    engine decision cache) for every step it ever takes.
+    `block_tables` (B, n_bt) int32 addresses paged attention pools
+    (required iff the cache was built with a paged CacheSpec); every
+    attention layer reads the same table."""
     b = token.shape[0]
     t = cache["t"]
     if t.ndim == 0:  # legacy scalar clock (pre-vector caches)
@@ -341,7 +415,7 @@ def decode_step(params, cfg: ArchConfig, cache: dict, token: Array, *,
         pp, cc = inp
         for j, kind in enumerate(cfg.layer_pattern):
             x, cc_new = _decode_block(kind, pp[f"b{j}"], cfg, x, t,
-                                      cc[f"b{j}"], active)
+                                      cc[f"b{j}"], active, block_tables)
             cc = {**cc, f"b{j}": cc_new}
         return x, cc
 
@@ -349,7 +423,7 @@ def decode_step(params, cfg: ArchConfig, cache: dict, token: Array, *,
     new_tail = []
     for i, p_tail in enumerate(params["tail"]):
         x, c_new = _decode_block(cfg.layer_pattern[i], p_tail, cfg, x, t,
-                                 cache["tail"][i], active)
+                                 cache["tail"][i], active, block_tables)
         new_tail.append(c_new)
     logits = _logits_out(params, cfg, x)
     new_t = t + 1 if active is None else jnp.where(active, t + 1, t)
@@ -358,7 +432,9 @@ def decode_step(params, cfg: ArchConfig, cache: dict, token: Array, *,
 
 def prefill(params, cfg: ArchConfig, tokens: Array, cache: dict, *,
             embeds: Array | None = None, compute_dtype=jnp.bfloat16,
-            lengths: Array | None = None, update_mask: Array | None = None):
+            lengths: Array | None = None, update_mask: Array | None = None,
+            block_tables: Array | None = None,
+            hist_len: Array | None = None, hist_pages: int = 0):
     """Run the prompt, filling `cache`; returns (last-token logits, cache).
 
     Implementation: the full-sequence path plus per-block cache writes —
@@ -375,21 +451,45 @@ def prefill(params, cfg: ArchConfig, tokens: Array, cache: dict, *,
     additionally restricts which slots' cache entries (and clocks) are
     written at all — slots outside the mask keep their previous state,
     so a scheduler can admit new requests into free slots of a live
-    cache without disturbing in-flight sequences."""
+    cache without disturbing in-flight sequences.
+
+    Paged mode: `block_tables` (B, n_bt) addresses the pools of a paged
+    CacheSpec cache.  `hist_len` (B,) says how many prompt tokens are
+    ALREADY resident in each slot's shared prefix pages (prefix cache
+    hit): `tokens` then holds only the un-resident suffix, queries take
+    absolute positions `hist_len + i`, and attention runs over the
+    gathered history pages plus the suffix.  `hist_pages` (static)
+    bounds the history gather: max(hist_len) // page_size."""
     if lengths is not None and (embeds is not None or cfg.prefix_tokens):
         raise NotImplementedError(
             "ragged prefill does not support embeds / VLM prefix archs")
+    if block_tables is not None and lengths is None:
+        raise NotImplementedError(
+            "paged prefill is ragged-only (pass lengths)")
+    if hist_len is not None and block_tables is None:
+        raise ValueError("hist_len needs block_tables (paged cache)")
+    if hist_pages and hist_len is None:
+        raise ValueError("hist_pages needs hist_len")
+    if block_tables is not None and hist_pages > block_tables.shape[1]:
+        raise ValueError(f"hist_pages {hist_pages} exceeds block table "
+                         f"span {block_tables.shape[1]}")
     x = _embed_in(params, cfg, tokens, embeds, compute_dtype)
     b, s = x.shape[0], x.shape[1]
     positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    if hist_len is not None:
+        # suffix-only prefill: rotary and causal masking need the
+        # absolute positions past each slot's resident prefix
+        positions = positions + hist_len[:, None].astype(jnp.int32)
 
     def body(carry, inp):
         x, = carry
         pp, cc = inp
         for j, kind in enumerate(cfg.layer_pattern):
             x, cc_new = _prefill_block(kind, pp[f"b{j}"], cfg, x, positions,
-                                       cc[f"b{j}"], lengths)
-            cc = {**cc, f"b{j}": _merge_slot(update_mask, cc_new, cc[f"b{j}"])}
+                                       cc[f"b{j}"], lengths, update_mask,
+                                       block_tables, hist_len, hist_pages)
+            cc = {**cc,
+                  f"b{j}": _merge_block(update_mask, cc_new, cc[f"b{j}"])}
         x = constrain(x, "batch", "residual", None)
         return (x,), cc
 
@@ -399,8 +499,10 @@ def prefill(params, cfg: ArchConfig, tokens: Array, cache: dict, *,
     new_tail = []
     for i, p_tail in enumerate(params["tail"]):
         x, c_new = _prefill_block(cfg.layer_pattern[i], p_tail, cfg, x,
-                                  positions, cache["tail"][i], lengths)
-        new_tail.append(_merge_slot(update_mask, c_new, cache["tail"][i]))
+                                  positions, cache["tail"][i], lengths,
+                                  update_mask, block_tables, hist_len,
+                                  hist_pages)
+        new_tail.append(_merge_block(update_mask, c_new, cache["tail"][i]))
     if lengths is None:
         logits = _logits_out(params, cfg, x[:, -1:])
         new_t = jnp.full((b,), s, jnp.int32)
@@ -408,6 +510,9 @@ def prefill(params, cfg: ArchConfig, tokens: Array, cache: dict, *,
         last = layers.gather_rows(x, jnp.clip(lengths, 1, s) - 1)
         logits = _logits_out(params, cfg, last)
         new_t = lengths.astype(jnp.int32)
+        if hist_len is not None:
+            # the clock counts ALL resident rows, shared prefix included
+            new_t = new_t + hist_len.astype(jnp.int32)
     if update_mask is not None:
         old_t = cache["t"]
         if old_t.ndim == 0:  # legacy scalar clock
@@ -431,40 +536,118 @@ def _ring_place(k: Array, lengths: Array, size: int) -> Array:
     return jnp.take_along_axis(k, idx, axis=1)
 
 
+def _paged_prefill_attn(cfg: ArchConfig, q, k, v, c: dict, positions,
+                        lengths, update_mask, block_tables, hist_len,
+                        hist_pages: int):
+    """Paged attention prefill: scatter the suffix rows through the
+    block table and attend over (gathered history pages + suffix).
+
+    Returns (new_cache, o).  The attention buffer is logical-row
+    indexed — row r holds the token at absolute position r — built from
+    `hist_pages` gathered pages plus the suffix scattered at its
+    absolute rows, so slots with shorter (or no) shared history simply
+    overwrite their gathered rows with the live suffix.  With no
+    history (h0 == 0) the buffer carries exactly the rows the
+    contiguous ragged path hands `flash_attention` (invalid rows are
+    zeros instead of pad-token garbage; both mask to an exact 0.0
+    contribution), so paged prefill is bit-identical to contiguous."""
+    b, s, kv, hd = k.shape
+    n_pool, page = c["k_pages"].shape[0], c["k_pages"].shape[1]
+    n_bt = block_tables.shape[1]
+    ll = (jnp.full((b,), s) if lengths is None else lengths).astype(jnp.int32)
+    hist0 = (jnp.zeros((b,)) if hist_len is None else hist_len).astype(
+        jnp.int32)
+    j = jnp.arange(s, dtype=jnp.int32)[None, :]
+    absp = hist0[:, None] + j                       # (B, S) absolute rows
+    valid = j < ll[:, None]
+    if update_mask is not None:
+        valid &= update_mask[:, None]
+    pidx = jnp.clip(absp // page, 0, n_bt - 1)
+    phys = jnp.take_along_axis(block_tables, pidx, axis=1)
+    # invalid rows and unallocated table holes route to the sentinel
+    # pool row n_pool; mode="drop" discards those scatters
+    phys = jnp.where(valid & (phys >= 0), phys, n_pool).astype(jnp.int32)
+    off = (absp % page).astype(jnp.int32)
+    if "k_scale_pages" in c:  # int8 codec: scales page with their rows
+        kq, ks = kv_quantize(k)
+        vq, vs = kv_quantize(v)
+        store = {"k_pages": kq, "v_pages": vq,
+                 "k_scale_pages": ks, "v_scale_pages": vs}
+    else:
+        store = {"k_pages": k, "v_pages": v}
+    new_c = {nm: c[nm].at[phys, off].set(val.astype(c[nm].dtype),
+                                         mode="drop")
+             for nm, val in store.items()}
+
+    h0 = hist_pages * page
+    bufk = jnp.zeros((b, h0 + s, kv, hd), k.dtype)
+    bufv = jnp.zeros((b, h0 + s, kv, hd), v.dtype)
+    if h0:
+        idx = jnp.clip(block_tables[:, :hist_pages], 0, n_pool - 1)
+        hk = c["k_pages"][idx].reshape(b, h0, kv, hd)
+        hv = c["v_pages"][idx].reshape(b, h0, kv, hd)
+        if "k_scale_pages" in c:
+            hk = kv_dequantize(hk, c["k_scale_pages"][idx].reshape(b, h0, kv),
+                               k.dtype)
+            hv = kv_dequantize(hv, c["v_scale_pages"][idx].reshape(b, h0, kv),
+                               v.dtype)
+        bufk = bufk.at[:, :h0].set(hk.astype(k.dtype))
+        bufv = bufv.at[:, :h0].set(hv.astype(v.dtype))
+    rows = jnp.where(valid, absp, h0 + s)           # sentinel -> dropped
+    bidx = jnp.arange(b, dtype=jnp.int32)[:, None]
+    bufk = bufk.at[bidx, rows].set(k, mode="drop")
+    bufv = bufv.at[bidx, rows].set(v, mode="drop")
+    o = layers.flash_attention(q, bufk, bufv, positions, hist0 + ll,
+                               cfg.is_causal, 0, min(512, h0 + s))
+    return new_c, o
+
+
 def _prefill_block(kind: str, p, cfg: ArchConfig, x, positions, c,
-                   lengths: Array | None = None):
+                   lengths: Array | None = None,
+                   update_mask: Array | None = None,
+                   block_tables: Array | None = None,
+                   hist_len: Array | None = None, hist_pages: int = 0):
     b, s = x.shape[0], x.shape[1]
     if kind in ("attn", "local"):
         window = cfg.window if kind == "local" else 0
         xin = rms_norm(p["norm1"], x, cfg.norm_eps)
         q, k, v = layers.attn_qkv(p["attn"], cfg, xin, positions)
-        size = c["k"].shape[1]
-        if "k_scale" in c:  # int8 codec: store quantized rows + scales,
-            # placed by the SAME ops as the rows they describe
-            kq, ks = kv_quantize(k)
-            vq, vs = kv_quantize(v)
-            store = {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+        if "k_pages" in c:
+            if block_tables is None:
+                raise ValueError("paged cache prefill needs block_tables")
+            new_c, o = _paged_prefill_attn(cfg, q, k, v, c, positions,
+                                           lengths, update_mask,
+                                           block_tables, hist_len,
+                                           hist_pages)
         else:
-            store = {"k": k, "v": v}
-        if size >= s:  # full cache: write rows [0, s)
-            new_c = {nm: jax.lax.dynamic_update_slice(
-                c[nm], val.astype(c[nm].dtype), (0,) * c[nm].ndim)
-                for nm, val in store.items()}
-        elif lengths is None:  # ring: keep the last `size` rows, rolled
-            roll = (s % size)
-            new_c = {nm: jnp.roll(val[:, -size:], roll,
-                                  axis=1).astype(c[nm].dtype)
-                     for nm, val in store.items()}
-        else:  # ragged ring: each slot's tail at its own ring offsets
-            new_c = {nm: _ring_place(val, lengths, size).astype(c[nm].dtype)
-                     for nm, val in store.items()}
-        kv_len = (jnp.full((b,), s, jnp.int32) if lengths is None
-                  else lengths.astype(jnp.int32))
-        if window > 0 and cfg.is_causal:
-            o = layers.local_attention(q, k, v, window)
-        else:
-            o = layers.flash_attention(q, k, v, positions, kv_len,
-                                       cfg.is_causal, window, min(512, s))
+            size = c["k"].shape[1]
+            if "k_scale" in c:  # int8 codec: store quantized rows + scales,
+                # placed by the SAME ops as the rows they describe
+                kq, ks = kv_quantize(k)
+                vq, vs = kv_quantize(v)
+                store = {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+            else:
+                store = {"k": k, "v": v}
+            if size >= s:  # full cache: write rows [0, s)
+                new_c = {nm: jax.lax.dynamic_update_slice(
+                    c[nm], val.astype(c[nm].dtype), (0,) * c[nm].ndim)
+                    for nm, val in store.items()}
+            elif lengths is None:  # ring: keep the last `size` rows, rolled
+                roll = (s % size)
+                new_c = {nm: jnp.roll(val[:, -size:], roll,
+                                      axis=1).astype(c[nm].dtype)
+                         for nm, val in store.items()}
+            else:  # ragged ring: each slot's tail at its own ring offsets
+                new_c = {nm: _ring_place(val, lengths,
+                                         size).astype(c[nm].dtype)
+                         for nm, val in store.items()}
+            kv_len = (jnp.full((b,), s, jnp.int32) if lengths is None
+                      else lengths.astype(jnp.int32))
+            if window > 0 and cfg.is_causal:
+                o = layers.local_attention(q, k, v, window)
+            else:
+                o = layers.flash_attention(q, k, v, positions, kv_len,
+                                           cfg.is_causal, window, min(512, s))
         x = x + dense(p["attn"]["wo"],
                       o.reshape(b, s, cfg.n_heads * cfg.head_dim_))
         h2in = rms_norm(p["norm2"], x, cfg.norm_eps)

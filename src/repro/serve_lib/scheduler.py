@@ -53,6 +53,7 @@ from repro.models import transformer as T
 from repro.models.config import ArchConfig
 
 from . import serve as serve_lib
+from .paged import PagedKV, PoolExhausted
 
 
 @dataclasses.dataclass
@@ -87,11 +88,29 @@ class _Slot:
 
 
 @functools.lru_cache(maxsize=64)
-def _jitted_steps(cfg: ArchConfig, scfg: serve_lib.ServeConfig, engine):
+def _jitted_steps(cfg: ArchConfig, scfg: serve_lib.ServeConfig, engine,
+                  paged: bool = False):
     """One jitted (ragged prefill, masked decode) pair per posture, so
     every Scheduler instance over the same configs reuses the traced
     executables.  The engine joins the key because traces bind the
-    engine context active when first taken (DESIGN.md §3)."""
+    engine context active when first taken (DESIGN.md §3).  The paged
+    pair additionally threads the block tables (and the shared-prefix
+    history: `hist_pages` is static — one retrace per distinct history
+    page count, same O(max_seq / page) bound the prefill widths have)."""
+    if paged:
+        def _paged_prefill(p, tok, cache, lens, mask, bt, hist, *,
+                           hist_pages):
+            return T.prefill(p, cfg, tok, cache,
+                             compute_dtype=scfg.compute_dtype, lengths=lens,
+                             update_mask=mask, block_tables=bt,
+                             hist_len=hist, hist_pages=hist_pages)
+
+        prefill = jax.jit(_paged_prefill, static_argnames=("hist_pages",))
+        decode = jax.jit(
+            lambda p, cache, tok, act, bt: T.decode_step(
+                p, cfg, cache, tok, compute_dtype=scfg.compute_dtype,
+                active=act, block_tables=bt))
+        return prefill, decode
     prefill = jax.jit(
         lambda p, tok, cache, lens, mask: T.prefill(
             p, cfg, tok, cache, compute_dtype=scfg.compute_dtype,
@@ -128,15 +147,34 @@ class Scheduler:
         self.engine = (engine if engine is not None
                        else serve_lib.warm_start_engine(scfg))
         self.cache = serve_lib.init_cache(cfg, scfg)
+        # the paged plane is live only when the arch HAS full-attention
+        # layers to page (on window/SSM/RG-LRU-only archs a paged
+        # ServeConfig builds the identical contiguous cache and runs the
+        # contiguous code path — paging those kinds buys nothing).
+        # Prefix sharing needs EVERY layer's prompt state to live in
+        # shareable pages, so it arms on pure-attention archs only.
+        self.paged: PagedKV | None = None
+        if scfg.cache_layout == "paged" and "attn" in cfg.layer_pattern:
+            self.paged = PagedKV(
+                batch=scfg.batch, max_seq=scfg.max_seq,
+                page_size=scfg.page_size, n_pages=scfg.resolved_n_pages,
+                prefix_sharing=set(cfg.layer_pattern) == {"attn"})
         self.slots: list[_Slot | None] = [None] * scfg.batch
         self.queue: collections.deque[Request] = collections.deque()
         self.completions: dict[int, Completion] = {}
         self.step_count = 0
         self.stats = {"admitted": 0, "finished": 0, "prefill_calls": 0,
                       "decode_steps": 0, "decode_tokens": 0,
-                      "prefill_widths": set()}
+                      "prefill_widths": set(),
+                      # prefilled token/width totals: the FLOP-relevant
+                      # counters prefix sharing drives DOWN (the PR 6
+                      # bench's reuse ratio and the sharing tests key on
+                      # these, like PR 4's decode-call counter)
+                      "prefill_tokens": 0, "prefill_width_sum": 0,
+                      "shared_prefix_tokens": 0}
         self._live_uids: set[int] = set()
-        self._prefill, self._decode = _jitted_steps(cfg, scfg, self.engine)
+        self._prefill, self._decode = _jitted_steps(
+            cfg, scfg, self.engine, self.paged is not None)
 
     # -- request intake ----------------------------------------------------
 
@@ -192,6 +230,10 @@ class Scheduler:
             self.completions[slot.req.uid] = comp
             finished.append(comp)
             self.slots[i] = None  # slot free for the next queued request
+            if self.paged is not None:
+                # deref the slot's pages: private ones free immediately,
+                # shared ones live on in other slots / the prefix index
+                self.paged.release(i)
             self.stats["finished"] += 1
 
     # -- the two batch calls ----------------------------------------------
@@ -201,30 +243,78 @@ class Scheduler:
         if not free or not self.queue:
             return
         picks: list[tuple[int, Request]] = []
-        while free and self.queue:
-            picks.append((free.pop(0), self.queue.popleft()))
+        hists: dict[int, int] = {}
+        if self.paged is not None:
+            # peek-then-pop: PoolExhausted leaves the request queued
+            # (backpressure — completions will free pages) instead of
+            # dropping it.  Stuck with every slot free means the pool
+            # genuinely cannot hold the prompt: fail with intent.
+            while free and self.queue:
+                i, req = free[0], self.queue[0]
+                prompt = np.asarray(req.prompt, np.int32).reshape(-1)
+                try:
+                    hists[i] = self.paged.admit(i, prompt.tolist())
+                except PoolExhausted:
+                    if not picks and self.n_active == 0:
+                        raise RuntimeError(
+                            f"page pool ({self.paged.n_pages} pages of "
+                            f"{self.paged.page}) cannot hold request "
+                            f"{req.uid}'s prompt ({prompt.size} tokens) "
+                            f"even with every slot free — raise "
+                            f"ServeConfig.n_pages") from None
+                    break
+                free.pop(0)
+                self.queue.popleft()
+                picks.append((i, req))
+            if not picks:
+                return
+        else:
+            while free and self.queue:
+                picks.append((free.pop(0), self.queue.popleft()))
         b = self.scfg.batch
-        maxlen = max(int(np.asarray(r.prompt).size) for _, r in picks)
+        # with a prefix-cache hit only the un-resident suffix prefills
+        maxlen = max(int(np.asarray(r.prompt).size) - hists.get(i, 0)
+                     for i, r in picks)
         width = -(-maxlen // self.prefill_bucket) * self.prefill_bucket
         width = min(width, self.scfg.max_seq)
         tokens = np.zeros((b, width), np.int32)
         lengths = np.ones((b,), np.int32)
         mask = np.zeros((b,), bool)
+        hist_arr = np.zeros((b,), np.int32)
         for i, req in picks:
             prompt = np.asarray(req.prompt, np.int32).reshape(-1)
-            tokens[i, : prompt.size] = prompt
-            lengths[i] = prompt.size
+            suffix = prompt[hists.get(i, 0):]
+            tokens[i, : suffix.size] = suffix
+            lengths[i] = suffix.size
+            hist_arr[i] = hists.get(i, 0)
             mask[i] = True
             self.slots[i] = _Slot(req=req, key=req.key, emitted=[],
                                   last_token=0, admit_step=self.step_count)
         with self._scope():
-            logits, self.cache = self._prefill(
-                self.params, jnp.asarray(tokens), self.cache,
-                jnp.asarray(lengths), jnp.asarray(mask))
+            if self.paged is not None:
+                hist_pages = int(hist_arr.max()) // self.scfg.page_size
+                logits, self.cache = self._prefill(
+                    self.params, jnp.asarray(tokens), self.cache,
+                    jnp.asarray(lengths), jnp.asarray(mask),
+                    jnp.asarray(self.paged.tables), jnp.asarray(hist_arr),
+                    hist_pages=hist_pages)
+            else:
+                logits, self.cache = self._prefill(
+                    self.params, jnp.asarray(tokens), self.cache,
+                    jnp.asarray(lengths), jnp.asarray(mask))
+        if self.paged is not None:
+            # index the now-resident full prompt pages so later
+            # admissions with the same prefix reuse them
+            for i, req in picks:
+                self.paged.note_prefilled(
+                    i, np.asarray(req.prompt, np.int32).tolist())
+            self.stats["shared_prefix_tokens"] = self.paged.shared_tokens
         rows = np.asarray(logits[:, -1], np.float32)
         self.stats["admitted"] += len(picks)
         self.stats["prefill_calls"] += 1
         self.stats["prefill_widths"].add(width)
+        self.stats["prefill_tokens"] += int(lengths[mask].sum())
+        self.stats["prefill_width_sum"] += width
         # first output token comes from the prefill logits (same
         # semantics as serve.generate)
         for i, _ in picks:
@@ -237,10 +327,25 @@ class Scheduler:
         toks = np.asarray(
             [s.last_token if s is not None else 0 for s in self.slots],
             np.int32)[:, None]
+        if self.paged is not None:
+            # make each active slot's write-frontier page exist (and be
+            # private — asserted) before the fused step writes it.  The
+            # write position is the slot's clock: prompt_len + emitted - 1
+            # (the first emitted token came from prefill, not decode).
+            for i, s in enumerate(self.slots):
+                if s is not None:
+                    pos = (int(np.asarray(s.req.prompt).size)
+                           + len(s.emitted) - 1)
+                    self.paged.ensure_decode_page(i, pos)
         with self._scope():
-            logits, self.cache = self._decode(
-                self.params, self.cache, jnp.asarray(toks),
-                jnp.asarray(active))
+            if self.paged is not None:
+                logits, self.cache = self._decode(
+                    self.params, self.cache, jnp.asarray(toks),
+                    jnp.asarray(active), jnp.asarray(self.paged.tables))
+            else:
+                logits, self.cache = self._decode(
+                    self.params, self.cache, jnp.asarray(toks),
+                    jnp.asarray(active))
         rows = np.asarray(logits[:, -1], np.float32)
         self.stats["decode_steps"] += 1
         self.stats["decode_tokens"] += int(active.sum())

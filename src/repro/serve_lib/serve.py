@@ -79,6 +79,16 @@ class ServeConfig:
     # expect `quant.quantize_params` weights.  Orthogonal to
     # cache_dtype="int8" (the KV codec); launch/serve --quantize sets both.
     quantize: bool = False
+    # KV layout (DESIGN.md §8): "paged" moves full-attention KV into a
+    # page pool behind per-slot block tables (scheduler-only; enables
+    # cross-request prefix sharing).  "contiguous" is the PR 4 layout
+    # and stays the parity oracle.
+    cache_layout: str = "contiguous"
+    page_size: int = 16
+    # pool size in pages; None -> batch * slot_pages + 2 * slot_pages
+    # (every slot can always fill, plus headroom so the prefix index
+    # retains entries across evictions)
+    n_pages: int | None = None
 
     def __post_init__(self):
         # Normalize to jnp.dtype so "bfloat16", jnp.bfloat16 and
@@ -98,6 +108,32 @@ class ServeConfig:
             object.__setattr__(
                 self, "kernel_backend",
                 engine_mod.int8_sibling(self.kernel_backend))
+        if self.cache_layout not in ("contiguous", "paged"):
+            raise ValueError(
+                f"cache_layout {self.cache_layout!r} is not one of "
+                f"('contiguous', 'paged')")
+        if self.cache_layout == "paged":
+            if self.page_size < 1:
+                raise ValueError(f"page_size must be >= 1: {self.page_size}")
+            if self.n_pages is not None and self.n_pages < self.slot_pages:
+                raise ValueError(
+                    f"n_pages={self.n_pages} cannot hold even one full "
+                    f"slot ({self.slot_pages} pages for max_seq="
+                    f"{self.max_seq} at page_size={self.page_size})")
+
+    @property
+    def slot_pages(self) -> int:
+        """Block-table width: pages one slot needs for max_seq rows."""
+        return -(-self.max_seq // self.page_size)
+
+    @property
+    def resolved_n_pages(self) -> int:
+        """Pool size: explicit `n_pages`, or a default sized so every
+        slot can always allocate its worst case (no admission deadlock)
+        with two slots' worth of headroom for retained prefix pages."""
+        if self.n_pages is not None:
+            return self.n_pages
+        return self.batch * self.slot_pages + 2 * self.slot_pages
 
 
 # One engine per ServeConfig (frozen, hashable): repeated generate()
@@ -144,8 +180,12 @@ def init_cache(cfg: ArchConfig, scfg: ServeConfig):
     # attention-free arch) are rejected HERE — config time, with an
     # actionable message, not deep inside a jitted cache init.
     validate_cache_dtype(scfg.cache_dtype, cfg)
-    return T.init_cache(cfg, T.CacheSpec(scfg.max_seq, scfg.batch),
-                        dtype=scfg.cache_dtype)
+    paged = scfg.cache_layout == "paged"
+    spec = T.CacheSpec(
+        scfg.max_seq, scfg.batch,
+        page_size=scfg.page_size if paged else None,
+        n_pages=scfg.resolved_n_pages if paged else None)
+    return T.init_cache(cfg, spec, dtype=scfg.cache_dtype)
 
 
 def make_prefill_step(cfg: ArchConfig, scfg: ServeConfig):
@@ -183,6 +223,11 @@ def generate(params, cfg: ArchConfig, scfg: ServeConfig, prompt: jax.Array,
     Engine to keep one decision cache across many generate calls)."""
     if n_tokens < 1:
         raise ValueError(f"n_tokens must be >= 1, got {n_tokens}")
+    if scfg.cache_layout == "paged":
+        raise NotImplementedError(
+            "generate() serves the contiguous layout only; the paged "
+            "layout needs the block-table plane the continuous-batching "
+            "Scheduler owns (serve_lib.Scheduler, DESIGN.md §8)")
     if temperature > 0.0 and key is None:
         raise ValueError(
             "generate(temperature>0) samples and needs a PRNG key — pass "

@@ -38,6 +38,24 @@ def booleans() -> SearchStrategy:
     return SearchStrategy(lambda rng: rng.random() < 0.5)
 
 
+def lists(elements: SearchStrategy, *, min_size: int = 0,
+          max_size: int = 10) -> SearchStrategy:
+    def draw(rng: random.Random) -> list:
+        n = integers(min_size, max_size).example(rng)  # boundary-biased
+        return [elements.example(rng) for _ in range(n)]
+    return SearchStrategy(draw)
+
+
+def permutations(values) -> SearchStrategy:
+    pool = list(values)
+
+    def draw(rng: random.Random) -> list:
+        out = list(pool)
+        rng.shuffle(out)
+        return out
+    return SearchStrategy(draw)
+
+
 def builds(target, *arg_strategies, **kw_strategies) -> SearchStrategy:
     def draw(rng: random.Random):
         args = [s.example(rng) for s in arg_strategies]

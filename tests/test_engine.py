@@ -204,7 +204,8 @@ def test_registry_backends_complete():
     reg = default_registry()
     assert set(BACKENDS) <= set(reg.backends())
     for backend in ("pallas-tpu", "pallas-interpret", "xla-einsum"):
-        assert set(reg.ops(backend)) == {"attention", "gemm", "grouped_gemm"}
+        assert set(reg.ops(backend)) == {"attention", "gemm", "grouped_gemm",
+                                         "paged_attention"}
     assert reg.ops("simulator") == ("gemm",)
     with pytest.raises(KeyError, match="no kernel registered"):
         reg.get("simulator", "attention")
