@@ -234,7 +234,7 @@ def block_table_pspec(mesh: Mesh, shape=None):
     """PartitionSpec for a (B, n_bt) block table: slots over 'batch',
     table entries replicated (every shard of a paged pool needs the
     whole row to resolve its pages)."""
-    return spec(shape or (1, 1), ("batch", None), mesh) if shape else P("batch", None)
+    return spec(shape, ("batch", None), mesh) if shape else P("batch", None)
 
 
 def cache_shardings(cache_tree, mesh: Mesh):

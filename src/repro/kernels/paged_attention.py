@@ -30,7 +30,11 @@ v_scale after normalizing by the plain softmax denominator).
 
 Unallocated table entries clamp to page 0; every position of such a
 page is >= kv_len, so its scores mask to NEG_INF and contribute an
-exact 0 — stale or foreign rows never leak into the output.
+exact 0 — stale or foreign rows never leak into the output.  A fully
+masked slot (kv_len == 0, i.e. inactive) outputs exact zeros in the
+kernel via the running-max == NEG_INF guard; the pure-jax reference
+softmaxes all-NEG_INF rows to a uniform average instead, so the two
+paths agree only for kv_len >= 1 (all live slots).
 """
 
 from __future__ import annotations
@@ -112,8 +116,12 @@ def _kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, *rest, scale: float,
 
     m_prev = m_ref[...]
     m_new = jnp.maximum(m_prev, s.max(axis=1))
-    p = jnp.exp(s - m_new[:, None])
-    corr = jnp.exp(m_prev - m_new)
+    # When every position so far is masked (kv_len == 0), m_new is still
+    # NEG_INF and exp(s - m_new) would be exp(0) = 1 — guard so fully
+    # masked rows contribute an exact 0 instead of averaging page-0 v.
+    dead = m_new == NEG_INF
+    p = jnp.where(dead[:, None], 0.0, jnp.exp(s - m_new[:, None]))
+    corr = jnp.where(dead, 0.0, jnp.exp(m_prev - m_new))
     l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
     m_ref[...] = m_new
     if quantized:

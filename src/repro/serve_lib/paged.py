@@ -242,8 +242,16 @@ class PagedKV:
             n_share = min(len(matched), (n_tok - 1) // self.page)
             shared = matched[:n_share]
         n_total = (n_tok - 1) // self.page + 1
-        fresh = self._alloc(n_total - len(shared))
+        # Pin the shared pages BEFORE allocating: under pool pressure
+        # _alloc evicts index entries, and without our reference that
+        # eviction could free the pages we just matched — and even hand
+        # them back out as `fresh`, aliasing the suffix onto the prefix.
         self.alloc.ref(shared)
+        try:
+            fresh = self._alloc(n_total - len(shared))
+        except PoolExhausted:
+            self.alloc.deref(shared)
+            raise
         row = self.tables[slot]
         row[: len(shared)] = shared
         row[len(shared): n_total] = fresh

@@ -181,6 +181,43 @@ def test_pool_exhaustion_is_atomic():
     kv.check_invariants()
 
 
+def test_admit_pool_pressure_does_not_free_matched_prefix():
+    """Regression: admit() must pin matched shared pages BEFORE
+    allocating the suffix — under pool pressure _alloc evicts index
+    entries, and an unpinned match could be freed (and re-issued as the
+    suffix's fresh pages) mid-admit.  An infeasible request fails with
+    PoolExhausted and leaves the accounting clean, never a crash or an
+    aliased table."""
+    kv = PagedKV(batch=1, max_seq=8, page_size=1, n_pages=5)
+    kv.admit(0, [1, 2, 3])
+    kv.note_prefilled(0, [1, 2, 3])
+    kv.release(0)                       # prefix lives only in the index
+    with pytest.raises(PoolExhausted):
+        kv.admit(0, [1, 2, 3, 4, 5, 6])  # needs 6 pages of a 5-page pool
+    assert (kv.tables[0] < 0).all()
+    kv.check_invariants()
+
+
+def test_admit_under_pressure_evicts_only_unshared_entries():
+    """When eviction during admit CAN free enough pages, it reclaims
+    LRU index entries while the just-matched shared prefix survives
+    pinned — the suffix never aliases onto the shared pages."""
+    kv = PagedKV(batch=2, max_seq=8, page_size=1, n_pages=6)
+    kv.admit(0, [1, 2, 3])
+    kv.note_prefilled(0, [1, 2, 3])
+    kv.release(0)
+    kv.admit(0, [9, 9])
+    kv.note_prefilled(0, [9, 9])
+    kv.release(0)                       # 5 indexed pages, 1 free
+    shared_before = kv.index.lookup([1, 2, 3])
+    hist = kv.admit(1, [1, 2, 3, 4, 5])  # needs 2 fresh: evicts [9, 9]
+    assert hist == 3
+    row = [int(p) for p in kv.tables[1][:5]]
+    assert row[:3] == shared_before     # matched pages survived eviction
+    assert len(set(row)) == 5           # fresh pages never alias shared
+    kv.check_invariants()
+
+
 # --------------------------------------------------------------------------
 # Parity: paged scheduler == contiguous scheduler, every cache kind
 # --------------------------------------------------------------------------
@@ -304,6 +341,25 @@ def test_paged_kernel_matches_reference():
                                      k_scale=ks, v_scale=vs)
     out8 = paged_attention_tpu(q, k8, v8, bt, lens, ks, vs, interpret=True)
     np.testing.assert_allclose(np.asarray(out8), np.asarray(ref8),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_kernel_fully_masked_slot_is_exact_zero():
+    """A slot with kv_len == 0 (inactive) has EVERY position masked; the
+    kernel's online softmax must emit exact zeros for it rather than an
+    average of clamped page-0 v rows (the m == NEG_INF guard)."""
+    rng = np.random.default_rng(1)
+    b, h, kv, d, page, n_bt, n_pool = 2, 4, 2, 16, 8, 3, 8
+    q = jnp.asarray(rng.normal(size=(b, 1, h, d)), jnp.float32)
+    kf = jnp.asarray(rng.normal(size=(n_pool, page, kv, d)), jnp.float32)
+    vf = jnp.asarray(rng.normal(size=(n_pool, page, kv, d)), jnp.float32)
+    bt = jnp.asarray([[0, 1, 2], [-1, -1, -1]], jnp.int32)
+    lens = jnp.asarray([11, 0], jnp.int32)
+    out = paged_attention_tpu(q, kf, vf, bt, lens, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out[1]), 0.0)
+    # and the live slot is untouched by the guard
+    ref = paged_attention_reference(q, kf, vf, bt, lens)
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(ref[0]),
                                rtol=2e-5, atol=2e-5)
 
 
