@@ -1,0 +1,169 @@
+"""Speculative-decoding bench: accepted-tokens/s vs the plain decode path.
+
+A decode-heavy request trace (short prompts, long generation budgets —
+the regime where every emitted token costs one fused decode dispatch)
+is served twice over the same model, slot pool and admit bucketing:
+
+  baseline     the PR-4 continuous-batching Scheduler: one fused
+               1-wide decode step per emitted token per tick.
+  speculative  ``ServeConfig(speculate_k=K)``: each tick drafts K
+               tokens (one jitted K-step scan), scores all K+1
+               positions in ONE fused verify pass, and commits the
+               longest matching prefix via per-slot clock rollback —
+               so a tick emits up to K+1 tokens per slot in three
+               dispatches instead of K+1.
+
+Speculation is greedy-only and must emit byte-identical tokens to the
+baseline (checked — the accept rule keeps every token the target model
+itself would have picked).  The headline gate is the wall-clock
+``accepted_tokens_ratio`` — speculative useful tokens/s over baseline
+useful tokens/s, same machine, same run — which must reach 1.3x.
+``accept_rate`` (accepted draft tokens / drafted tokens) is also
+reported and trend-gated; with the default self-draft it is exact.
+
+A separate engine-posture pass serves the trace twice through ONE
+``plan_arch(..., verify_k=K)``-warmed engine: the second pass must add
+ZERO new plan misses (the K+1-wide verify shape is pre-declared, so
+the speculative steady state never re-plans).
+
+Emits ``BENCH_PR7.json``; with ``--check`` exits nonzero on any gate.
+
+    PYTHONPATH=src python -m benchmarks.spec_bench --smoke --check \
+        --out BENCH_PR7.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+
+from benchmarks.serve_bench import _build, _requests, run_continuous
+
+
+def make_trace(smoke: bool) -> tuple[int, list[tuple[int, int]]]:
+    """(pool_size, [(prompt_len, gen_len), ...]) — short prompts with
+    long ragged budgets, so decode ticks dominate wall clock and the
+    draft/verify plane has room to compress them."""
+    if smoke:
+        pool = 3
+        lens = [6, 8, 6, 10, 8, 6]
+        gens = [16, 12, 20, 14, 18, 12]
+    else:
+        pool = 4
+        lens = [8, 12, 8, 16, 12, 8, 16, 12, 8, 12]
+        gens = [32, 24, 40, 28, 36, 24, 32, 40, 28, 36]
+    return pool, list(zip(lens, gens))
+
+
+def run_engine_posture_spec(arch, pool, max_seq, trace, bucket, k, draft):
+    """Serve the trace twice through ONE warm-started engine with the
+    speculative posture on: ``plan_arch(..., verify_k=k)`` pre-declares
+    the K+1-wide verify GEMMs next to the 1-wide decode and the admit
+    widths, so the second identical pass must add ZERO new plan
+    misses."""
+    from repro import engine as engine_mod
+    from repro.serve_lib.scheduler import Scheduler
+
+    cfg, params, scfg = _build(arch, pool, max_seq, backend="xla-einsum")
+    scfg = dataclasses.replace(scfg, speculate_k=k, draft=draft)
+    width = -(-max(p for p, _ in trace) // bucket) * bucket
+    plan = engine_mod.plan_arch(
+        cfg, seq_len=width, dtype_bytes=4, decode_batch=pool,
+        admit_widths=tuple(range(bucket, width + 1, bucket)),
+        verify_k=k, backend="xla-einsum")
+    eng = engine_mod.Engine(backend="xla-einsum", plan=plan)
+    planned = len(plan)
+    reqs = lambda: _requests(cfg, trace)
+    Scheduler(params, cfg, scfg, engine=eng, prefill_bucket=bucket).run(reqs())
+    warm = dict(plan.stats)
+    Scheduler(params, cfg, scfg, engine=eng, prefill_bucket=bucket).run(reqs())
+    final = dict(plan.stats)
+    return {
+        "backend": "xla-einsum",
+        "planned_decisions": planned,
+        "after_warmup": warm,
+        "final": final,
+        # draft, verify and admit shapes are all pre-declared: a repeat
+        # serve of the same trace re-plans nothing
+        "steady_state_new_misses": final["misses"] - warm["misses"],
+        "steady_state_new_hits": final["hits"] - warm["hits"],
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default="BENCH_PR7.json")
+    ap.add_argument("--prefill-bucket", type=int, default=8)
+    ap.add_argument("--speculate", type=int, default=4, metavar="K",
+                    help="draft tokens per tick (verify width K+1)")
+    ap.add_argument("--draft", default="self", choices=("self", "self-int8"),
+                    help="draft model: 'self' shares the target params "
+                         "(accept rate 1 under greedy), 'self-int8' drafts "
+                         "with an int8-quantized copy")
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero unless speculation reaches 1.3x "
+                         "accepted tokens/s with exact greedy parity and "
+                         "a miss-free engine steady state")
+    args = ap.parse_args(argv)
+    k = args.speculate
+
+    pool, trace = make_trace(args.smoke)
+    # same max_seq both ways: the verify pass writes k rows past the
+    # last accepted token, and parity needs identical cache geometry
+    max_seq = max(p + g for p, g in trace) + k + 1
+    cfg, params, scfg = _build(args.arch, pool, max_seq)
+    scfg_spec = dataclasses.replace(scfg, speculate_k=k, draft=args.draft)
+
+    base, base_toks = run_continuous(cfg, params, scfg, trace,
+                                     args.prefill_bucket)
+    spec, spec_toks = run_continuous(cfg, params, scfg_spec, trace,
+                                     args.prefill_bucket)
+    parity = all(spec_toks[u] == base_toks[u] for u in base_toks)
+    engine = run_engine_posture_spec(args.arch, pool, max_seq, trace,
+                                     args.prefill_bucket, k, args.draft)
+
+    report = {
+        "bench": "serve_speculative_decode",
+        "arch": args.arch, "smoke": args.smoke, "pool_slots": pool,
+        "speculate_k": k, "draft": args.draft, "trace": trace,
+        "baseline": base,
+        "speculative": spec,
+        # wall-clock headline: useful (accepted) tokens/s, same run
+        "accepted_tokens_ratio": round(
+            spec["tokens_per_s"] / base["tokens_per_s"], 3),
+        # host-invariant: how many drafted tokens the verify pass kept
+        "accept_rate": round(
+            spec["accepted_draft_tokens"] / max(1, spec["draft_tokens"]), 4),
+        "greedy_parity": parity,
+        "engine": engine,
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(json.dumps(report, indent=1, sort_keys=True))
+
+    failures = []
+    if not parity:
+        failures.append("speculative and baseline emitted different tokens")
+    if args.check:
+        if report["accepted_tokens_ratio"] < 1.3:
+            failures.append(
+                f"speculation did not reach 1.3x accepted tokens/s "
+                f"({report['accepted_tokens_ratio']}x)")
+        if report["accept_rate"] <= 0.0:
+            failures.append("verify pass accepted no draft tokens")
+        if engine["steady_state_new_misses"] != 0:
+            failures.append(
+                f"speculative serve re-planned after warm-up "
+                f"({engine['steady_state_new_misses']} new misses)")
+    for msg in failures:
+        print(f"FAIL: {msg}", file=sys.stderr)
+    return len(failures)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

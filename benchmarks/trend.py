@@ -34,7 +34,7 @@ import sys
 #: throughput metric (same-run ratios; absolute tokens/s is reported
 #: but never gated — see the module docstring).
 THROUGHPUT_MARKERS = ("speedup", "geomean", "relative_throughput",
-                      "reuse_ratio")
+                      "reuse_ratio", "accept_rate", "accepted_tokens_ratio")
 
 #: noisy / non-metric paths never worth a table row.
 SKIP_MARKERS = ("trace", "shapes", "prefill_widths")

@@ -442,7 +442,8 @@ def plan_arch(cfg, *, seq_len: int | None = None, batch: int = 1,
               decode_batch: int | None = None,
               admit_widths: tuple[int, ...] = (),
               quantized_weights: bool = False,
-              paged_pages: int = 0, page_size: int = 0) -> ExecutionPlan:
+              paged_pages: int = 0, page_size: int = 0,
+              verify_k: int = 0) -> ExecutionPlan:
     """Plan every GEMM of one `repro.models.config.ArchConfig` prefill
     pass via the `core.workloads.arch_gemms` lowering and return the
     warm `ExecutionPlan` (save it for serve warm-start).  `dtype_bytes`
@@ -461,7 +462,11 @@ def plan_arch(cfg, *, seq_len: int | None = None, batch: int = 1,
     `page_size` (a `cache_layout="paged"` server: slot_pages and the
     page size) additionally plan the paged decode gather-attention
     shape, so the paged scheduler's steady state also re-plans
-    nothing."""
+    nothing.  `verify_k` (a `speculate_k=k` server) adds the k+1-wide
+    speculative verify width — the only extra decode shape the
+    speculative tick introduces (the draft's propose steps are the
+    width-1 shapes, its prefill the admit widths; the paged verify
+    bypasses the engine's paged_attention op entirely)."""
     from repro.core.workloads import ARCH_TRACE_SEQ, arch_gemms
 
     in_bytes = backend_in_bytes(backend, dtype_bytes)
@@ -472,7 +477,10 @@ def plan_arch(cfg, *, seq_len: int | None = None, batch: int = 1,
                               batch=batch), in_bytes=in_bytes,
                    out_bytes=dtype_bytes)
     if decode_batch:
-        for width in (1,) + tuple(admit_widths):
+        widths = (1,) + tuple(admit_widths)
+        if verify_k:
+            widths = widths + (verify_k + 1,)
+        for width in widths:
             for req in decode_requests(cfg, batch=decode_batch,
                                        dtype_bytes=in_bytes, seq=width,
                                        quantized_weights=quantized_weights,

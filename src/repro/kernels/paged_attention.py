@@ -80,8 +80,12 @@ def paged_attention_reference(q: jax.Array, k_pages: jax.Array,
     s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(jnp.float32))
     if k_scale is not None:
         s = s * row(k_scale[safe].reshape(b, s_rows, kv))
-    valid = jnp.arange(s_rows)[None, :] < kv_len[:, None]   # (B, S)
-    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    srange = jnp.arange(s_rows)
+    if kv_len.ndim == 1:
+        valid = (srange[None, :] < kv_len[:, None])[:, None, :]   # (B,1,S)
+    else:  # per-query lengths (B, Sq) — the W-wide speculative verify
+        valid = srange[None, None, :] < kv_len[:, :, None]        # (B,Sq,S)
+    s = jnp.where(valid[:, None, None, :, :], s, NEG_INF)
     p_attn = jax.nn.softmax(s, axis=-1)
     if v_scale is not None:
         p_attn = p_attn * row(v_scale[safe].reshape(b, s_rows, kv))

@@ -114,6 +114,15 @@ def main(argv=None) -> dict:
                          "shares prefilled prompt pages across requests")
     ap.add_argument("--page-size", type=int, default=16,
                     help="tokens per page for --cache-layout paged")
+    ap.add_argument("--speculate", type=int, default=0, metavar="K",
+                    help="speculative decoding (trace mode only): draft K "
+                         "tokens per tick and verify them in one fused "
+                         "K+1-wide pass; greedy-only, outputs bitwise "
+                         "identical to --speculate 0")
+    ap.add_argument("--draft", default="self", choices=("self", "self-int8"),
+                    help="draft model for --speculate: 'self' shares the "
+                         "target params, 'self-int8' drafts with an int8-"
+                         "quantized copy")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -126,13 +135,23 @@ def main(argv=None) -> dict:
     if args.cache_layout == "paged" and trace is None:
         raise SystemExit("--cache-layout paged needs --trace (the block-table "
                          "plane lives in the continuous-batching scheduler)")
+    if args.speculate:
+        if trace is None:
+            raise SystemExit("--speculate needs --trace (the draft/verify "
+                             "tick lives in the continuous-batching "
+                             "scheduler)")
+        if args.temperature > 0:
+            raise SystemExit("--speculate is greedy-only (temperature 0)")
+        max_seq += args.speculate  # verify writes k rows past the last token
     scfg = serve_lib.ServeConfig(
         max_seq=max_seq, batch=args.batch,
         compute_dtype=dtype,
         cache_dtype=jnp.int8 if args.quantize else dtype,
         kernel_backend=args.kernel_backend, plan_path=args.plan,
         quantize=args.quantize,
-        cache_layout=args.cache_layout, page_size=args.page_size)
+        cache_layout=args.cache_layout, page_size=args.page_size,
+        speculate_k=args.speculate,
+        draft=args.draft if args.speculate else None)
     mesh = make_test_mesh()
 
     with mesh, shd.use_mesh(mesh):

@@ -109,6 +109,16 @@ def gather_rows(x: Array, idx: Array) -> Array:
     return jnp.take_along_axis(x, idx.reshape(shape), axis=1)
 
 
+def slot_update_many(cache: Array, idx: Array, new: Array) -> Array:
+    """Write W rows per batch slot: cache (B, S, ...), idx (B, W) int32,
+    new (B, W, ...).  The speculative verify path writes all k+1 rows of
+    a slot at once (DESIGN.md §9); callers needing masking choose the
+    VALUES (e.g. write back the old row), not the indices — with W > 1
+    an index sentinel would need W distinct parking rows."""
+    bidx = jnp.arange(cache.shape[0])[:, None]
+    return cache.at[bidx, idx].set(new.astype(cache.dtype))
+
+
 def paged_slot_update(pool: Array, page_idx: Array, offset: Array,
                       new: Array) -> Array:
     """Write one row per batch slot into the paged pool (DESIGN.md §8).
@@ -393,7 +403,8 @@ def attention_block(p, cfg, x: Array, positions: Array, *, window: int = 0) -> A
 def cached_attention(p, cfg, q: Array, k_cache: Array, v_cache: Array,
                      q_pos: Array, kv_len: Array, *,
                      k_scale: Array | None = None,
-                     v_scale: Array | None = None) -> Array:
+                     v_scale: Array | None = None,
+                     exclude: Array | None = None) -> Array:
     """Decode-path attention: q (B,1,H,D) over a cache (B,Smax,KV,D) whose
     slots beyond kv_len are masked.  The caller inserts the new token's
     k/v into the cache *before* calling (see serve_lib), so causality is
@@ -406,6 +417,14 @@ def cached_attention(p, cfg, q: Array, k_cache: Array, v_cache: Array,
     SPMD story clean when the cache's sequence dim is sharded over 'data'
     (long_500k): GSPMD turns the softmax reductions into psums instead of
     gathering the cache.
+
+    Speculative verify (DESIGN.md §9) widens q to (B,W,H,D) with all W
+    rows pre-written: `kv_len` may then be (B, W) — a per-QUERY valid
+    length, which is what makes the W-wide pass causal (query j sees
+    rows < t+j+1 only; full attention only — ring caches step
+    sequentially, see transformer._spec_block).  `exclude`
+    (B, Sq, Smax) bool additionally masks arbitrary cache slots per
+    query for callers whose validity isn't a prefix.
 
     int8 cache codec (DESIGN.md §7): pass the stored rows RAW with their
     per-row scales `k_scale`/`v_scale` (B, Smax, KV).  Scales are
@@ -421,8 +440,14 @@ def cached_attention(p, cfg, q: Array, k_cache: Array, v_cache: Array,
     s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k_cache.astype(jnp.float32))
     if k_scale is not None:
         s = s * row(k_scale)
-    valid = jnp.arange(k_cache.shape[1])[None, :] < kv_len[:, None]  # (B,S)
-    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    srange = jnp.arange(k_cache.shape[1])
+    if kv_len.ndim == 1:
+        valid = (srange[None, :] < kv_len[:, None])[:, None, :]   # (B,1,S)
+    else:  # per-query lengths (B, Sq)
+        valid = srange[None, None, :] < kv_len[:, :, None]        # (B,Sq,S)
+    if exclude is not None:
+        valid = valid & ~exclude
+    s = jnp.where(valid[:, None, None, :, :], s, NEG_INF)
     p_attn = jax.nn.softmax(s, axis=-1)
     if v_scale is not None:
         p_attn = p_attn * row(v_scale)
@@ -440,13 +465,19 @@ def paged_cached_attention(p, cfg, q: Array, c: dict, block_tables: Array,
     gather, DESIGN.md §8); otherwise the reference gather — which is
     bit-identical to `cached_attention` on the same live rows, the
     property the parity tests pin.  int8 pools ship their per-row scale
-    pages through the same block table (scales page with their rows)."""
+    pages through the same block table (scales page with their rows).
+
+    The W-wide speculative verify (sq > 1, per-query `kv_len` (B, W))
+    always takes the reference path: the decode kernel is sq==1-shaped,
+    and bypassing the engine here keeps the verify pass from minting a
+    new `paged_attention` plan key (steady-state misses stay 0)."""
     from repro.engine import active_engine
     b, sq, h, d = q.shape
     k_scale = c.get("k_scale_pages")
     v_scale = c.get("v_scale_pages")
     eng = active_engine()
-    if eng is not None and eng.registry.has(eng.backend, "paged_attention"):
+    if eng is not None and sq == 1 and eng.registry.has(eng.backend,
+                                                        "paged_attention"):
         o = eng.paged_attention(q, c["k_pages"], c["v_pages"], block_tables,
                                 kv_len, k_scale=k_scale, v_scale=v_scale)
     else:

@@ -709,3 +709,319 @@ def _rglru_prefill(p, cfg, x, lengths: Array | None = None):
                                            p["conv_w"].shape[0])
     h, h_last = rglru.rglru_scan(p, u, valid=valid)
     return dense(p["lin_out"], h * y), conv_state, h_last
+
+
+# --------------------------------------------------------------------------
+# Speculative decoding (DESIGN.md §9)
+# --------------------------------------------------------------------------
+#
+# Two primitives carry the whole plane:
+#
+#   spec_forward   one W-wide teacher-forced pass (W = k+1 verify tokens)
+#                  that writes ALL W rows/states speculatively and hands
+#                  back an `undo` record sized to what rollback actually
+#                  needs per cache kind;
+#   spec_commit    clock = t0 + keep per slot, plus the minimal repair:
+#                  nothing for full attention (stale rows sit past the
+#                  clock, masked everywhere), restore the overwritten
+#                  ring rows beyond `keep` for sliding windows, select
+#                  the state after `keep` tokens from a (W+1)-stash for
+#                  SSM / RG-LRU.
+#
+# `verify_step` composes them with the greedy accept rule and
+# `spec_advance` reuses them to replay the accepted tokens through the
+# draft's own cache with an externally supplied `keep` — so the draft
+# and target stay clock-synchronized with three dispatches per tick.
+#
+# Parity is exact by construction: the recurrent kinds step the SAME
+# `*_decode_step` functions the plain decode path uses (scanned per
+# token), and attention reads the same cache rows a sequence of 1-wide
+# steps would have produced.
+
+
+def _spec_block(kind: str, p, cfg: ArchConfig, x: Array, t: Array, c: dict,
+                active: Array | None, block_tables: Array | None):
+    """W-wide teacher-forced step for one block: x (B, W, D), positions
+    t..t+W-1 per slot.  Returns (x, new_cache_slice, undo) where `undo`
+    holds exactly what `_commit_block` needs to roll this block back to
+    any prefix length in [0, W]."""
+    b, w = x.shape[0], x.shape[1]
+    pos = t[:, None].astype(jnp.int32) + jnp.arange(w, dtype=jnp.int32)[None]
+    if kind in ("attn", "local"):
+        q, k_new, v_new = layers.attn_qkv(
+            p["attn"], cfg, rms_norm(p["norm1"], x, cfg.norm_eps), pos)
+        if "k_pages" in c:
+            if block_tables is None:
+                raise ValueError("paged cache decode needs block_tables")
+            n_pool, page = c["k_pages"].shape[0], c["k_pages"].shape[1]
+            n_bt = block_tables.shape[1]
+            pidx = jnp.clip(pos // page, 0, n_bt - 1).astype(jnp.int32)
+            phys = jnp.take_along_axis(block_tables, pidx, axis=1)  # (B, W)
+            if active is not None:
+                phys = jnp.where(active[:, None], phys, n_pool)
+            phys = jnp.where(phys < 0, n_pool, phys).astype(jnp.int32)
+            off = (pos % page).astype(jnp.int32)
+            if "k_scale_pages" in c:
+                kq, ks = kv_quantize(k_new)
+                vq, vs = kv_quantize(v_new)
+                store = {"k_pages": kq, "v_pages": vq,
+                         "k_scale_pages": ks, "v_scale_pages": vs}
+            else:
+                store = {"k_pages": k_new, "v_pages": v_new}
+            new_c = {nm: layers.paged_slot_update(c[nm], phys, off, val)
+                     for nm, val in store.items()}
+            # per-QUERY valid length pos+1 makes the W-wide pass causal;
+            # full attention never wraps, so rejected rows just sit past
+            # the rolled-back clock (and their pages are released host-
+            # side) — no device-side undo at all
+            h = layers.paged_cached_attention(
+                p["attn"], cfg, q, new_c, block_tables, pos + 1)
+            undo: dict[str, Any] = {}
+        else:
+            size = c["k"].shape[1]
+            idx = (pos % size).astype(jnp.int32)                    # (B, W)
+            bidx = jnp.arange(b)[:, None]
+            if "k_scale" in c:
+                kq, ks = kv_quantize(k_new)
+                vq, vs = kv_quantize(v_new)
+                store = {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+            else:
+                store = {"k": k_new, "v": v_new}
+            if kind == "local":
+                # Ring caches can't run the fused W-wide attention: a
+                # wrapped write for draft token i destroys the ring row
+                # holding position t+i-size, which is still INSIDE the
+                # window of every earlier query j < i — masking the slot
+                # would shrink j's window, not reproduce it.  So the
+                # attention (and only the attention — QKV and the MLP
+                # stay W-wide) steps the ring sequentially, which is
+                # bit-for-bit the decode path's write-then-attend.
+                # Rollback still needs the W overwritten rows: capture
+                # them before the scan (W <= window, so the scan never
+                # writes the same row twice).
+                undo = {"idx": idx,
+                        "rows": {nm: c[nm][bidx, idx] for nm in store}}
+
+                def astep(cc, inp):
+                    q_i, pos_i, idx_i, vals = inp
+                    cc = {nm: layers.slot_update(cc[nm], idx_i, vals[nm])
+                          for nm in cc}
+                    h_i = layers.cached_attention(
+                        p["attn"], cfg, q_i[:, None], cc["k"], cc["v"],
+                        pos_i[:, None], jnp.minimum(pos_i + 1, size),
+                        k_scale=cc.get("k_scale"),
+                        v_scale=cc.get("v_scale"))
+                    return cc, h_i[:, 0]
+
+                new_c, hs = jax.lax.scan(
+                    astep, {nm: c[nm] for nm in store},
+                    (jnp.moveaxis(q, 1, 0), jnp.moveaxis(pos, 1, 0),
+                     jnp.moveaxis(idx, 1, 0),
+                     {nm: jnp.moveaxis(val, 1, 0)
+                      for nm, val in store.items()}))
+                h = jnp.moveaxis(hs, 0, 1)
+            else:
+                # full attention never wraps (headroom is validated at
+                # submit), so all W rows can land before one fused pass:
+                # per-query kv_len = pos+1 masks later rows from earlier
+                # queries and no undo is needed — rejected rows sit past
+                # the rolled-back clock, masked everywhere.
+                undo = {}
+                new_c = {nm: layers.slot_update_many(c[nm], idx, val)
+                         for nm, val in store.items()}
+                h = layers.cached_attention(
+                    p["attn"], cfg, q, new_c["k"], new_c["v"], pos,
+                    jnp.minimum(pos + 1, size),
+                    k_scale=new_c.get("k_scale"),
+                    v_scale=new_c.get("v_scale"))
+        x = x + h
+        h2in = rms_norm(p["norm2"], x, cfg.norm_eps)
+        if cfg.moe is not None:
+            h2, _ = moe.moe_block(p["moe"], cfg, h2in)
+        else:
+            h2 = mlp(p["mlp"], h2in)
+        return x + h2, new_c, undo
+    if kind == "ssm":
+        xin = rms_norm(p["norm1"], x, cfg.norm_eps)
+
+        def sstep(carry, xt):
+            conv, state = carry
+            y, conv2, state2 = ssm.ssm_decode_step(
+                p["ssm"], cfg, xt[:, None, :], conv, state)
+            # ys carry the PRE-step states: stash[i] = state after i
+            # tokens, so commit selects stash[keep] directly
+            return ((conv2.astype(conv.dtype), state2.astype(state.dtype)),
+                    (y[:, 0], conv, state))
+
+        (convf, statef), (ys, convs, states) = jax.lax.scan(
+            sstep, (c["conv"], c["state"]), jnp.moveaxis(xin, 1, 0))
+        new = {"conv": convf.astype(c["conv"].dtype), "state": statef}
+        undo = {"conv": jnp.concatenate([convs, convf[None]], axis=0),
+                "state": jnp.concatenate([states, statef[None]], axis=0)}
+        return x + jnp.moveaxis(ys, 0, 1), new, undo
+    if kind == "rglru":
+        xin = rms_norm(p["norm1"], x, cfg.norm_eps)
+
+        def rstep(carry, xt):
+            conv, hst = carry
+            o, conv2, h2 = rglru.rglru_decode_step(
+                p["rec"], cfg, xt[:, None, :], conv, hst)
+            return ((conv2.astype(conv.dtype), h2.astype(hst.dtype)),
+                    (o[:, 0], conv, hst))
+
+        (convf, hf), (os_, convs, hs) = jax.lax.scan(
+            rstep, (c["conv"], c["h"]), jnp.moveaxis(xin, 1, 0))
+        x = x + jnp.moveaxis(os_, 0, 1)
+        x = x + mlp(p["mlp"], rms_norm(p["norm2"], x, cfg.norm_eps))
+        new = {"conv": convf.astype(c["conv"].dtype),
+               "h": hf.astype(c["h"].dtype)}
+        undo = {"conv": jnp.concatenate([convs, convf[None]], axis=0),
+                "h": jnp.concatenate([hs, hf[None]], axis=0)}
+        return x, new, undo
+    raise ValueError(kind)
+
+
+def spec_forward(params, cfg: ArchConfig, cache: dict, tokens: Array, *,
+                 compute_dtype=jnp.bfloat16, active: Array | None = None,
+                 block_tables: Array | None = None):
+    """tokens (B, W) teacher-forced at positions t..t+W-1 -> (logits
+    (B, W, V), spec_cache, undo).  All W rows/states are written
+    speculatively; `spec_cache` has NOT had its clock advanced — feed it
+    with `undo` to `spec_commit` to pick each slot's accepted prefix."""
+    b = tokens.shape[0]
+    t = cache["t"]
+    if t.ndim == 0:  # legacy scalar clock (pre-vector caches)
+        t = jnp.broadcast_to(t, (b,))
+    x = params["embed"].astype(compute_dtype)[tokens]
+    x = constrain(x, "batch", None, "embed")
+
+    def body(x, inp):
+        pp, cc = inp
+        undos = {}
+        for j, kind in enumerate(cfg.layer_pattern):
+            x, cc_new, u = _spec_block(kind, pp[f"b{j}"], cfg, x, t,
+                                       cc[f"b{j}"], active, block_tables)
+            cc = {**cc, f"b{j}": cc_new}
+            undos[f"b{j}"] = u
+        return x, (cc, undos)
+
+    x, (new_slots, undo_slots) = jax.lax.scan(
+        body, x, (params["stack"], cache["slots"]))
+    new_tail, undo_tail = [], []
+    for i, p_tail in enumerate(params["tail"]):
+        x, c_new, u = _spec_block(cfg.layer_pattern[i], p_tail, cfg, x, t,
+                                  cache["tail"][i], active, block_tables)
+        new_tail.append(c_new)
+        undo_tail.append(u)
+    logits = _logits_out(params, cfg, x)
+    spec_cache = {"t": t, "slots": new_slots, "tail": new_tail}
+    return logits, spec_cache, {"t0": t, "slots": undo_slots,
+                                "tail": undo_tail}
+
+
+def _commit_block(kind: str, c: dict, undo: dict, keep: Array) -> dict:
+    """Roll one block's speculative writes back to `keep` (B,) tokens."""
+    if not undo:  # full attention: clock masking is the whole story
+        return c
+    if kind == "local":  # restore the ring rows beyond each slot's keep
+        idx = undo["idx"]                                           # (B, W)
+        w = idx.shape[1]
+        bidx = jnp.arange(idx.shape[0])[:, None]
+        committed = jnp.arange(w, dtype=jnp.int32)[None, :] < keep[:, None]
+        out = dict(c)
+        for nm, old in undo["rows"].items():
+            cur = c[nm][bidx, idx]
+            mask = committed.reshape(committed.shape
+                                     + (1,) * (cur.ndim - 2))
+            out[nm] = c[nm].at[bidx, idx].set(
+                jnp.where(mask, cur, old.astype(cur.dtype)))
+        return out
+    # recurrent: pick the state after `keep` tokens from the (W+1)-stash
+    out = dict(c)
+    for nm, stack in undo.items():
+        sel = jnp.take_along_axis(
+            stack, keep.reshape((1, -1) + (1,) * (stack.ndim - 2)),
+            axis=0)[0]
+        out[nm] = sel.astype(c[nm].dtype)
+    return out
+
+
+def spec_commit(cfg: ArchConfig, cache: dict, undo: dict,
+                keep: Array) -> dict:
+    """Accept each slot's first `keep` (B,) of the W speculative tokens:
+    clock-decrement rollback (t = t0 + keep) plus the per-kind repairs
+    of `_commit_block`.  keep == 0 leaves a slot exactly as it was."""
+    keep = keep.astype(jnp.int32)
+
+    def commit_period(inp):
+        cc, uu = inp
+        return {f"b{j}": _commit_block(kind, cc[f"b{j}"], uu[f"b{j}"], keep)
+                for j, kind in enumerate(cfg.layer_pattern)}
+
+    _, slots = jax.lax.scan(lambda carry, inp: (carry, commit_period(inp)),
+                            0, (cache["slots"], undo["slots"]))
+    tail = [_commit_block(cfg.layer_pattern[i], cache["tail"][i],
+                          undo["tail"][i], keep)
+            for i in range(len(cache["tail"]))]
+    return {"t": undo["t0"] + keep, "slots": slots, "tail": tail}
+
+
+def verify_step(params, cfg: ArchConfig, cache: dict, tokens: Array, *,
+                compute_dtype=jnp.bfloat16, active: Array | None = None,
+                block_tables: Array | None = None):
+    """Score W = k+1 verify tokens (slot's last committed token + k
+    drafts) in one pass; greedy-accept the longest matching prefix.
+
+    Returns (g (B, W) int32, n_acc (B,), new_cache): g[b, :n_acc[b]+1]
+    is exactly the token stream target-only greedy decode would emit
+    (the n_acc accepted drafts plus one correction/bonus token — every
+    tick commits at least one token), and new_cache is committed to
+    keep = n_acc + 1 rows per active slot."""
+    logits, spec_cache, undo = spec_forward(
+        params, cfg, cache, tokens, compute_dtype=compute_dtype,
+        active=active, block_tables=block_tables)
+    g = jnp.argmax(logits, axis=-1).astype(jnp.int32)               # (B, W)
+    match = (g[:, :-1] == tokens[:, 1:]).astype(jnp.int32)          # (B,W-1)
+    n_acc = jnp.cumprod(match, axis=1).sum(axis=1)                  # (B,)
+    keep = n_acc + 1
+    if active is not None:
+        keep = jnp.where(active, keep, 0)
+        n_acc = jnp.where(active, n_acc, 0)
+    return g, n_acc, spec_commit(cfg, spec_cache, undo, keep)
+
+
+def spec_advance(params, cfg: ArchConfig, cache: dict, tokens: Array,
+                 keep: Array, *, compute_dtype=jnp.bfloat16,
+                 active: Array | None = None,
+                 block_tables: Array | None = None):
+    """Replay `tokens` (B, W) through `cache`, committing only `keep`
+    (B,) of them — the draft-resync half of a speculative tick: the
+    draft's cache consumes the SAME verify window the target scored,
+    truncated to what the target accepted."""
+    _, spec_cache, undo = spec_forward(
+        params, cfg, cache, tokens, compute_dtype=compute_dtype,
+        active=active, block_tables=block_tables)
+    keep = keep.astype(jnp.int32)
+    if active is not None:
+        keep = jnp.where(active, keep, 0)
+    return spec_commit(cfg, spec_cache, undo, keep)
+
+
+def draft_propose(params, cfg: ArchConfig, cache: dict, token: Array,
+                  n: int, *, compute_dtype=jnp.bfloat16,
+                  active: Array | None = None):
+    """Greedy-propose `n` draft tokens from `token` (B,): an n-step scan
+    of `decode_step` with argmax feedback over a THROWAWAY copy of
+    `cache` — the caller's cache is not advanced (the persistent draft
+    cache is advanced by `spec_advance` replaying the verify window, so
+    it never diverges from what the target committed)."""
+    def step(carry, _):
+        cc, tok = carry
+        logits, cc = decode_step(params, cfg, cc, tok[:, None],
+                                 compute_dtype=compute_dtype, active=active)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return (cc, nxt), nxt
+
+    _, drafts = jax.lax.scan(step, (cache, token.astype(jnp.int32)),
+                             None, length=n)
+    return jnp.moveaxis(drafts, 0, 1)                               # (B, n)

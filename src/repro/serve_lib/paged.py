@@ -287,6 +287,22 @@ class PagedKV:
                 f"{page} with refcount {self.alloc.refcount[page]} — shared "
                 f"pages must never be written (re-own invariant)")
 
+    def rollback(self, slot: int, frontier_pos: int) -> None:
+        """Speculative rollback (DESIGN.md §9): the slot's clock was
+        decremented so its write frontier is `frontier_pos`; release any
+        page whose rows are now entirely past the frontier.  Rolled-back
+        pages were decode-frontier allocations, so they are refcount-1
+        private (asserted) — a shared page can never be vacated here."""
+        first_dead = frontier_pos // self.page + 1
+        row = self.tables[slot]
+        drop = [int(p) for p in row[first_dead:] if p >= 0]
+        for p in drop:
+            assert self.alloc.refcount[p] == 1, (
+                f"rollback of slot {slot} would free shared page {p} "
+                f"(refcount {self.alloc.refcount[p]})")
+        self.alloc.deref(drop)
+        row[first_dead:] = -1
+
     def release(self, slot: int) -> None:
         """Evicted slot: drop its references; shared pages survive in
         other slots / the index, private ones return to the free list."""

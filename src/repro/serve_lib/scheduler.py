@@ -122,6 +122,42 @@ def _jitted_steps(cfg: ArchConfig, scfg: serve_lib.ServeConfig, engine,
     return prefill, decode
 
 
+@functools.lru_cache(maxsize=64)
+def _jitted_spec_steps(cfg: ArchConfig, dcfg: ArchConfig,
+                       scfg: serve_lib.ServeConfig, engine,
+                       paged: bool = False):
+    """The speculative tick's jits (DESIGN.md §9): k-step greedy draft
+    `propose` over a throwaway cache copy, fused k+1-wide `verify` of
+    the target, `advance` replaying the verify window through the
+    persistent draft cache, and the draft's own ragged prefill.  The
+    draft cache is always contiguous (it is private per scheduler and
+    never shares prefixes), so only `verify` has a paged variant."""
+    k = scfg.speculate_k
+    if paged:
+        verify = jax.jit(
+            lambda p, cache, toks, act, bt: T.verify_step(
+                p, cfg, cache, toks, compute_dtype=scfg.compute_dtype,
+                active=act, block_tables=bt))
+    else:
+        verify = jax.jit(
+            lambda p, cache, toks, act: T.verify_step(
+                p, cfg, cache, toks, compute_dtype=scfg.compute_dtype,
+                active=act))
+    propose = jax.jit(
+        lambda p, cache, tok, act: T.draft_propose(
+            p, dcfg, cache, tok, k, compute_dtype=scfg.compute_dtype,
+            active=act))
+    advance = jax.jit(
+        lambda p, cache, toks, keep, act: T.spec_advance(
+            p, dcfg, cache, toks, keep, compute_dtype=scfg.compute_dtype,
+            active=act))
+    dprefill = jax.jit(
+        lambda p, tok, cache, lens, mask: T.prefill(
+            p, dcfg, tok, cache, compute_dtype=scfg.compute_dtype,
+            lengths=lens, update_mask=mask))
+    return verify, propose, advance, dprefill
+
+
 class Scheduler:
     """Engine-aware continuous-batching loop over a slot pool.
 
@@ -132,7 +168,8 @@ class Scheduler:
 
     def __init__(self, params, cfg: ArchConfig, scfg: serve_lib.ServeConfig,
                  *, engine: "engine_mod.Engine | None" = None,
-                 prefill_bucket: int = 1):
+                 prefill_bucket: int = 1, draft_params=None,
+                 draft_cfg: ArchConfig | None = None):
         if cfg.kind == "encoder":
             raise ValueError("encoder-only arch: no decode step")
         if cfg.embed_inputs or cfg.prefix_tokens:
@@ -140,6 +177,10 @@ class Scheduler:
                 "scheduler serves token prompts only (no embeds/VLM prefix)")
         if prefill_bucket < 1:
             raise ValueError(f"prefill_bucket must be >= 1: {prefill_bucket}")
+        if (draft_params is None) != (draft_cfg is None):
+            raise ValueError("draft_params and draft_cfg come together")
+        if draft_params is not None and not scfg.speculate_k:
+            raise ValueError("draft_params needs ServeConfig(speculate_k>0)")
         self.params = params
         self.cfg = cfg
         self.scfg = scfg
@@ -169,12 +210,48 @@ class Scheduler:
                       # prefilled token/width totals: the FLOP-relevant
                       # counters prefix sharing drives DOWN (the PR 6
                       # bench's reuse ratio and the sharing tests key on
-                      # these, like PR 4's decode-call counter)
+                      # these, like PR 4's decode-call counter).
+                      # prefill_width_sum is PER-SLOT: each prefill call
+                      # adds its width once per admitted slot, so
+                      # bucketing mixed-history admits by hist_pages
+                      # shows up as a drop (PR 7)
                       "prefill_tokens": 0, "prefill_width_sum": 0,
-                      "shared_prefix_tokens": 0}
+                      "shared_prefix_tokens": 0,
+                      # speculative plane (DESIGN.md §9)
+                      "spec_ticks": 0, "draft_tokens": 0,
+                      "accepted_draft_tokens": 0}
         self._live_uids: set[int] = set()
         self._prefill, self._decode = _jitted_steps(
             cfg, scfg, self.engine, self.paged is not None)
+        # -- speculative plane (DESIGN.md §9) -----------------------------
+        self.spec_k = scfg.speculate_k
+        self.draft_params = self.draft_cfg = self.draft_cache = None
+        if self.spec_k:
+            if draft_params is not None:
+                self.draft_params, self.draft_cfg = draft_params, draft_cfg
+            elif scfg.draft == "self-int8":
+                from repro.quant import quantize_params
+                self.draft_params, self.draft_cfg = quantize_params(params), cfg
+            else:  # None / "self": share the target params outright
+                self.draft_params, self.draft_cfg = params, cfg
+            w = self.spec_k + 1
+            for c in {cfg, self.draft_cfg}:
+                if "local" in c.layer_pattern:
+                    ring = min(c.window, scfg.max_seq)
+                    if w > ring:
+                        raise ValueError(
+                            f"speculate_k={self.spec_k}: the k+1-wide "
+                            f"verify writes {w} ring rows but the sliding "
+                            f"window holds only {ring} — rollback could "
+                            f"not restore a window it overwrote twice")
+            # private contiguous float cache: the draft replays full
+            # prompts and the accepted verify windows, sharing nothing
+            self.draft_cache = T.init_cache(
+                self.draft_cfg, T.CacheSpec(scfg.max_seq, scfg.batch),
+                dtype=scfg.compute_dtype)
+            self._verify, self._propose, self._advance, self._dprefill = (
+                _jitted_spec_steps(cfg, self.draft_cfg, scfg, self.engine,
+                                   self.paged is not None))
 
     # -- request intake ----------------------------------------------------
 
@@ -191,6 +268,19 @@ class Scheduler:
         if req.temperature > 0.0 and req.key is None:
             raise ValueError(
                 f"request {req.uid}: temperature > 0 needs a PRNG key")
+        if self.spec_k:
+            if req.temperature > 0.0:
+                raise ValueError(
+                    f"request {req.uid}: speculative decoding is greedy-"
+                    f"only (acceptance is computed in-graph via argmax; "
+                    f"temperature sampling would need a host RNG round-"
+                    f"trip per draft token)")
+            if n + req.max_new_tokens + self.spec_k > self.scfg.max_seq:
+                raise ValueError(
+                    f"request {req.uid}: prompt {n} + max_new "
+                    f"{req.max_new_tokens} + speculate_k {self.spec_k} "
+                    f"exceeds max_seq {self.scfg.max_seq} — the verify "
+                    f"pass writes k rows past the final token")
         if req.uid in self._live_uids:  # queued, in flight, or completed
             raise ValueError(f"duplicate request uid {req.uid}")
         self._live_uids.add(req.uid)
@@ -271,6 +361,41 @@ class Scheduler:
         else:
             while free and self.queue:
                 picks.append((free.pop(0), self.queue.popleft()))
+        # Bucket the admit group by shared-history page count: one
+        # prefill call per distinct hist_pages, each at ITS OWN group-max
+        # suffix width.  A mixed-history group no longer pays the widest
+        # suffix for every slot (the PR 6 width bug): a prefix-cache hit
+        # whose suffix is 3 tokens prefills at width 3 even when a fresh
+        # 40-token prompt admits in the same tick.
+        buckets: dict[int, list[tuple[int, Request]]] = {}
+        for i, req in picks:
+            hp = hists.get(i, 0) // self.scfg.page_size \
+                if self.paged is not None else 0
+            buckets.setdefault(hp, []).append((i, req))
+        rows: dict[int, np.ndarray] = {}
+        for hp in sorted(buckets):
+            rows.update(self._prefill_group(buckets[hp], hists, hp))
+        if self.paged is not None:
+            # index the now-resident full prompt pages so later
+            # admissions with the same prefix reuse them
+            for i, req in picks:
+                self.paged.note_prefilled(
+                    i, np.asarray(req.prompt, np.int32).tolist())
+            self.stats["shared_prefix_tokens"] = self.paged.shared_tokens
+        if self.spec_k:
+            self._draft_prefill(picks)
+        self.stats["admitted"] += len(picks)
+        # first output token comes from the prefill logits (same
+        # semantics as serve.generate)
+        for i, _ in picks:
+            self._emit(i, self._sample(self.slots[i], rows[i]), finished)
+
+    def _prefill_group(self, picks: list[tuple[int, Request]],
+                       hists: dict[int, int],
+                       hist_pages: int) -> dict[int, np.ndarray]:
+        """One ragged prefill call over `picks` (all sharing
+        `hist_pages` resident history pages); returns each admitted
+        slot's last-token logits row."""
         b = self.scfg.batch
         # with a prefix-cache hit only the un-resident suffix prefills
         maxlen = max(int(np.asarray(r.prompt).size) - hists.get(i, 0)
@@ -292,7 +417,6 @@ class Scheduler:
                                   last_token=0, admit_step=self.step_count)
         with self._scope():
             if self.paged is not None:
-                hist_pages = int(hist_arr.max()) // self.scfg.page_size
                 logits, self.cache = self._prefill(
                     self.params, jnp.asarray(tokens), self.cache,
                     jnp.asarray(lengths), jnp.asarray(mask),
@@ -302,23 +426,35 @@ class Scheduler:
                 logits, self.cache = self._prefill(
                     self.params, jnp.asarray(tokens), self.cache,
                     jnp.asarray(lengths), jnp.asarray(mask))
-        if self.paged is not None:
-            # index the now-resident full prompt pages so later
-            # admissions with the same prefix reuse them
-            for i, req in picks:
-                self.paged.note_prefilled(
-                    i, np.asarray(req.prompt, np.int32).tolist())
-            self.stats["shared_prefix_tokens"] = self.paged.shared_tokens
-        rows = np.asarray(logits[:, -1], np.float32)
-        self.stats["admitted"] += len(picks)
+        out_rows = np.asarray(logits[:, -1], np.float32)
         self.stats["prefill_calls"] += 1
         self.stats["prefill_widths"].add(width)
         self.stats["prefill_tokens"] += int(lengths[mask].sum())
-        self.stats["prefill_width_sum"] += width
-        # first output token comes from the prefill logits (same
-        # semantics as serve.generate)
-        for i, _ in picks:
-            self._emit(i, self._sample(self.slots[i], rows[i]), finished)
+        self.stats["prefill_width_sum"] += width * len(picks)
+        return {i: out_rows[i] for i, _ in picks}
+
+    def _draft_prefill(self, picks: list[tuple[int, Request]]) -> None:
+        """Prefill the draft cache with the FULL prompts of the slots
+        just admitted (the draft shares no prefixes — its cache is
+        private and contiguous).  The logits are discarded: the first
+        emitted token comes from the TARGET's prefill row, and the next
+        spec tick feeds it back through `draft_propose`."""
+        b = self.scfg.batch
+        maxlen = max(int(np.asarray(r.prompt).size) for _, r in picks)
+        width = -(-maxlen // self.prefill_bucket) * self.prefill_bucket
+        width = min(width, self.scfg.max_seq)
+        tokens = np.zeros((b, width), np.int32)
+        lengths = np.ones((b,), np.int32)
+        mask = np.zeros((b,), bool)
+        for i, req in picks:
+            prompt = np.asarray(req.prompt, np.int32).reshape(-1)
+            tokens[i, : prompt.size] = prompt
+            lengths[i] = prompt.size
+            mask[i] = True
+        with self._scope():
+            _, self.draft_cache = self._dprefill(
+                self.draft_params, jnp.asarray(tokens), self.draft_cache,
+                jnp.asarray(lengths), jnp.asarray(mask))
 
     def _decode_active(self, finished: list[Completion]) -> None:
         active = np.asarray([s is not None for s in self.slots])
@@ -353,14 +489,81 @@ class Scheduler:
             if active[i]:
                 self._emit(i, self._sample(self.slots[i], rows[i]), finished)
 
+    def _spec_tick(self, finished: list[Completion]) -> None:
+        """One speculative tick (DESIGN.md §9): draft k tokens, verify
+        all k+1 positions in one fused pass, emit each slot's accepted
+        prefix plus the target's correction token, resync the draft.
+        Three dispatches replace the k+1 sequential decode steps the
+        same tokens would otherwise cost."""
+        active = np.asarray([s is not None for s in self.slots])
+        if not active.any():
+            return
+        k = self.spec_k
+        last = np.asarray(
+            [s.last_token if s is not None else 0 for s in self.slots],
+            np.int32)
+        if self.paged is not None:
+            # the verify writes span pos..pos+k: make every page on the
+            # span exist (and be private) before the fused pass
+            for i, s in enumerate(self.slots):
+                if s is not None:
+                    pos = (int(np.asarray(s.req.prompt).size)
+                           + len(s.emitted) - 1)
+                    page = self.paged.page
+                    for pg in range(pos // page, (pos + k) // page + 1):
+                        self.paged.ensure_decode_page(
+                            i, max(pos, pg * page))
+        act = jnp.asarray(active)
+        with self._scope():
+            drafts = self._propose(self.draft_params, self.draft_cache,
+                                   jnp.asarray(last), act)
+            toks = jnp.concatenate([jnp.asarray(last)[:, None], drafts],
+                                   axis=1)
+            if self.paged is not None:
+                g, n_acc, self.cache = self._verify(
+                    self.params, self.cache, toks, act,
+                    jnp.asarray(self.paged.tables))
+            else:
+                g, n_acc, self.cache = self._verify(
+                    self.params, self.cache, toks, act)
+            self.draft_cache = self._advance(
+                self.draft_params, self.draft_cache, toks, n_acc + 1, act)
+        g_np = np.asarray(g)
+        acc_np = np.asarray(n_acc)
+        self.stats["decode_steps"] += 1
+        self.stats["spec_ticks"] += 1
+        self.stats["draft_tokens"] += k * int(active.sum())
+        self.stats["accepted_draft_tokens"] += int(acc_np[active].sum())
+        for i in range(len(self.slots)):
+            if not active[i]:
+                continue
+            s = self.slots[i]
+            # committed write frontier BEFORE this tick's emissions
+            t0 = int(np.asarray(s.req.prompt).size) + len(s.emitted) - 1
+            for j in range(int(acc_np[i]) + 1):
+                if self.slots[i] is None:  # EOS/budget mid-window
+                    break
+                self._emit(i, int(g_np[i, j]), finished)
+                self.stats["decode_tokens"] += 1
+            if self.paged is not None and self.slots[i] is not None:
+                # clock-decrement rollback happened in-graph; release
+                # any page now holding only rejected rows.  The last
+                # committed row is t0 + n_acc (keep = n_acc + 1 rows
+                # starting at t0).
+                self.paged.rollback(i, t0 + int(acc_np[i]))
+
     # -- driver ------------------------------------------------------------
 
     def step(self) -> list[Completion]:
         """One scheduler tick: admit into free slots, then one fused
-        decode over the pool.  Returns requests finished this tick."""
+        decode (or draft/verify/resync, when speculating) over the
+        pool.  Returns requests finished this tick."""
         finished: list[Completion] = []
         self._admit(finished)
-        self._decode_active(finished)
+        if self.spec_k:
+            self._spec_tick(finished)
+        else:
+            self._decode_active(finished)
         self.step_count += 1
         return finished
 

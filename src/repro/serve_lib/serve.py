@@ -89,6 +89,17 @@ class ServeConfig:
     # (every slot can always fill, plus headroom so the prefix index
     # retains entries across evictions)
     n_pages: int | None = None
+    # Speculative decoding (DESIGN.md §9): k > 0 makes every scheduler
+    # tick propose k draft tokens and verify them in one fused k+1-wide
+    # pass.  Greedy-only; accepted streams are bitwise identical to
+    # target-only decode.
+    speculate_k: int = 0
+    # draft choice: None/"self" shares the target params (accept ~= 1 —
+    # the fused-dispatch win); "self-int8" drafts with an int8-quantized
+    # copy (nearly free under the PR 5 posture, exercises rejection).
+    # Scheduler(draft_params=, draft_cfg=) overrides with an explicit
+    # small arch.
+    draft: str | None = None
 
     def __post_init__(self):
         # Normalize to jnp.dtype so "bfloat16", jnp.bfloat16 and
@@ -120,6 +131,16 @@ class ServeConfig:
                     f"n_pages={self.n_pages} cannot hold even one full "
                     f"slot ({self.slot_pages} pages for max_seq="
                     f"{self.max_seq} at page_size={self.page_size})")
+        if self.speculate_k < 0:
+            raise ValueError(f"speculate_k must be >= 0: {self.speculate_k}")
+        if self.draft is not None:
+            if self.speculate_k == 0:
+                raise ValueError("draft= needs speculate_k > 0")
+            if self.draft not in ("self", "self-int8"):
+                raise ValueError(
+                    f"draft {self.draft!r} is not one of ('self', "
+                    f"'self-int8'); pass an explicit small arch via "
+                    f"Scheduler(draft_params=, draft_cfg=)")
 
     @property
     def slot_pages(self) -> int:

@@ -107,6 +107,67 @@ def test_plan_arch_covers_trace():
     assert plan.hits == len(trace) - len(distinct)
 
 
+def test_plan_arch_verify_k_roundtrip_byte_identical(tmp_path):
+    """plan_arch(..., verify_k=K) declares the K+1-wide speculative
+    verify GEMMs next to the decode/admit widths, and the augmented
+    plan still round-trips byte-identical through JSON."""
+    from repro.configs import get_config
+
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    kw = dict(seq_len=16, dtype_bytes=4, decode_batch=3,
+              admit_widths=(8, 16), backend="pallas-interpret")
+    base = plan_arch(cfg, **kw)
+    plan = plan_arch(cfg, verify_k=4, **kw)
+    assert len(plan) > len(base)           # the verify width added shapes
+    assert any(req.m == 3 * 5 for req, _ in plan)  # m = pool * (k+1)
+    p1, p2 = tmp_path / "plan.json", tmp_path / "plan2.json"
+    plan.save(p1)
+    plan2 = ExecutionPlan.load(p1)
+    plan2.save(p2)
+    assert p2.read_text() == p1.read_text()
+    import dataclasses
+    for (req, dec), (req2, dec2) in zip(plan, plan2):
+        # `name` is a human label, excluded from the key and the JSON
+        assert dataclasses.replace(req, name="") == req2 and dec == dec2
+
+
+def test_spec_serve_replayed_from_plan_no_misses(tmp_path):
+    """A speculative server warm-started from a saved verify_k plan
+    serves its whole trace as pure cache lookups: zero new misses."""
+    import dataclasses
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    from repro.serve_lib import serve as serve_lib
+    from repro.serve_lib.scheduler import Request, Scheduler
+
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    pool, k, bucket = 2, 3, 8
+    plan_arch(cfg, seq_len=16, dtype_bytes=4, decode_batch=pool,
+              admit_widths=(8, 16), verify_k=k,
+              backend="xla-einsum").save(tmp_path / "plan.json")
+    eng = Engine(backend="xla-einsum",
+                 plan=ExecutionPlan.load(tmp_path / "plan.json"))
+    scfg = serve_lib.ServeConfig(max_seq=32, batch=pool,
+                                 compute_dtype=jnp.float32,
+                                 cache_dtype=jnp.float32,
+                                 speculate_k=k, draft="self")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=u, prompt=rng.integers(0, cfg.vocab, p)
+                    .astype(np.int32), max_new_tokens=g)
+            for u, (p, g) in enumerate([(6, 8), (12, 6), (9, 10)])]
+    misses_before = eng.plan.misses
+    sched = Scheduler(params, cfg, scfg, engine=eng, prefill_bucket=bucket)
+    comps = sched.run([dataclasses.replace(r) for r in reqs], max_steps=200)
+    assert sorted(comps) == [0, 1, 2]
+    assert sched.stats["spec_ticks"] > 0
+    assert eng.plan.misses == misses_before   # replay re-plans nothing
+    assert eng.plan.hits > 0
+
+
 def test_warm_start_plan_skips_search(tmp_path):
     """Serve warm-start: a loaded plan answers without cost-model work."""
     cfg_path = tmp_path / "plan.json"

@@ -432,6 +432,44 @@ def test_shared_prefix_parity_and_prefill_drop():
     assert sp.paged.shared_tokens == sp.stats["shared_prefix_tokens"]
 
 
+def test_mixed_history_admits_bucket_by_hist_pages():
+    """Admits are bucketed by shared-history page count: a prefix-cache
+    hit prefills at ITS OWN suffix width instead of paying the widest
+    fresh prompt admitted in the same tick (the PR 6 width bug)."""
+    cfg, params, contig, paged = _setup("qwen2-1.5b", batch=2, max_seq=64)
+    rng = np.random.default_rng(3)
+    prefix = rng.integers(0, cfg.vocab, 24).astype(np.int32)  # 3 full pages
+    fresh = rng.integers(0, cfg.vocab, 24).astype(np.int32)
+    suffix = rng.integers(0, cfg.vocab, 4).astype(np.int32)
+    reqs = [Request(uid=0, prompt=prefix.copy(), max_new_tokens=2),
+            Request(uid=1, prompt=np.concatenate([prefix, suffix]),
+                    max_new_tokens=2),
+            Request(uid=2, prompt=fresh.copy(), max_new_tokens=2)]
+
+    sp = Scheduler(params, cfg, paged, prefill_bucket=8)
+    sp.run([_clone(reqs)[0]], max_steps=50)     # indexes the prefix pages
+    calls0 = sp.stats["prefill_calls"]
+    wsum0 = sp.stats["prefill_width_sum"]
+    sp.run(_clone(reqs)[1:], max_steps=100)     # B (hit) + C (cold) together
+    sp.paged.check_invariants()
+    assert sorted(sp.completions) == [0, 1, 2]
+    # one prefill call per hist bucket, each at its own group width:
+    # B's 4-token suffix rounds to 8, C's cold 24 stays 24 — under the
+    # old single-call admit both slots paid width 24 (sum 48)
+    assert sp.stats["prefill_calls"] - calls0 == 2
+    assert sp.stats["prefill_widths"] >= {8, 24}
+    assert sp.stats["prefill_width_sum"] - wsum0 == 8 + 24
+
+    # bucketing only reshapes the admit calls — tokens stay bitwise
+    sc = Scheduler(params, cfg, contig, prefill_bucket=8)
+    sc.run([_clone(reqs)[0]], max_steps=50)
+    sc.run(_clone(reqs)[1:], max_steps=100)
+    for uid in sc.completions:
+        np.testing.assert_array_equal(sc.completions[uid].tokens,
+                                      sp.completions[uid].tokens,
+                                      err_msg=f"uid={uid}")
+
+
 # --------------------------------------------------------------------------
 # Stress: random admission/eviction/readmission under a tight pool
 # --------------------------------------------------------------------------

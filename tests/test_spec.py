@@ -1,0 +1,203 @@
+"""Speculative decoding (PR 7): draft/verify/commit parity and rollback.
+
+The load-bearing property is EXACT greedy parity: the verify pass
+scores the draft with the target model itself and the accept rule keeps
+only tokens the target's own argmax would have produced, so the
+speculative token stream must be BITWISE identical to the plain decode
+path — for every cache kind (full attention, sliding window, SSM,
+RG-LRU), under rejection-heavy drafts (clock-decrement rollback every
+tick), and composed with the paged layout and int8 caches.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.serve_lib import serve as serve_lib
+from repro.serve_lib.scheduler import Request, Scheduler
+
+KINDS = ["qwen2-1.5b", "mixtral-8x7b", "mamba2-780m", "recurrentgemma-2b"]
+
+
+def _cfg(arch):
+    cfg = get_config(arch, smoke=True)
+    if cfg.moe is not None:  # avoid capacity drops in exactness checks
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    return cfg
+
+
+def _setup(arch, batch, max_seq=48, k=3, **scfg_kw):
+    cfg = _cfg(arch)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    base = serve_lib.ServeConfig(max_seq=max_seq, batch=batch,
+                                 compute_dtype=jnp.float32,
+                                 cache_dtype=jnp.float32, **scfg_kw)
+    spec = dataclasses.replace(base, speculate_k=k, draft="self")
+    return cfg, params, base, spec
+
+
+def _requests(cfg, n, rng, max_prompt=16, max_gen=8):
+    reqs = []
+    for uid in range(n):
+        plen = int(rng.integers(3, max_prompt))
+        gen = int(rng.integers(2, max_gen + 1))
+        reqs.append(Request(
+            uid=uid, prompt=rng.integers(0, cfg.vocab, plen).astype(np.int32),
+            max_new_tokens=gen))
+    return reqs
+
+
+def _clone(reqs):
+    return [dataclasses.replace(r) for r in reqs]
+
+
+def _parity(a, b, tag):
+    assert sorted(a) == sorted(b)
+    for uid in a:
+        np.testing.assert_array_equal(a[uid].tokens, b[uid].tokens,
+                                      err_msg=f"{tag} uid={uid}")
+
+
+# --------------------------------------------------------------------------
+# Parity across every cache kind, accepting and rejecting drafts
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", KINDS)
+def test_spec_matches_plain_decode(arch):
+    """Self-draft (accept rate 1 under greedy): the speculative server
+    emits bitwise the plain server's tokens on all four cache kinds."""
+    cfg, params, base, spec = _setup(arch, batch=2)
+    rng = np.random.default_rng(0)
+    reqs = _requests(cfg, 4, rng)
+    a = Scheduler(params, cfg, base).run(_clone(reqs), max_steps=300)
+    ss = Scheduler(params, cfg, spec)
+    b = ss.run(_clone(reqs), max_steps=300)
+    _parity(a, b, arch)
+    st = ss.stats
+    assert st["spec_ticks"] > 0 and st["draft_tokens"] > 0
+    # the self-draft IS the target: greedy verify accepts everything
+    assert st["accepted_draft_tokens"] == st["draft_tokens"]
+
+
+@pytest.mark.parametrize("arch", KINDS)
+def test_spec_rollback_under_disagreeing_draft(arch):
+    """A draft from DIFFERENT weights mostly disagrees with the target,
+    so nearly every tick rejects and rolls the caches back (ring-row
+    restore, recurrent-state select, clock decrement) — parity must
+    survive the rejection-heavy regime on every cache kind."""
+    cfg, params, base, spec = _setup(arch, batch=2)
+    draft_params = T.init_params(jax.random.PRNGKey(7), cfg)
+    rng = np.random.default_rng(1)
+    reqs = _requests(cfg, 3, rng)
+    a = Scheduler(params, cfg, base).run(_clone(reqs), max_steps=300)
+    ss = Scheduler(params, cfg, spec,
+                   draft_params=draft_params, draft_cfg=cfg)
+    b = ss.run(_clone(reqs), max_steps=300)
+    _parity(a, b, arch)
+    st = ss.stats
+    # random disagreeing weights: rejection dominates, rollback exercised
+    assert st["accepted_draft_tokens"] < st["draft_tokens"]
+
+
+# --------------------------------------------------------------------------
+# Composition: paged layout, int8 caches, int8 self-draft
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("k", [1, 4])
+def test_spec_paged_int8_composition(k):
+    """Speculation over the paged int8 cache: verify writes k rows past
+    the frontier into pool pages, rejection derefs the vacated pages
+    (`PagedKV.rollback`), and the page accounting stays clean after
+    every tick."""
+    cfg = _cfg("qwen2-1.5b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    base = serve_lib.ServeConfig(max_seq=48, batch=2,
+                                 compute_dtype=jnp.float32,
+                                 cache_dtype=jnp.int8,
+                                 cache_layout="paged", page_size=8)
+    spec = dataclasses.replace(base, speculate_k=k, draft="self")
+    rng = np.random.default_rng(0)
+    reqs = _requests(cfg, 4, rng)
+    a = Scheduler(params, cfg, base).run(_clone(reqs), max_steps=300)
+    ss = Scheduler(params, cfg, spec)
+    for r in _clone(reqs):
+        ss.submit(r)
+    steps = 0
+    while ss.queue or ss.n_active:
+        ss.step()
+        ss.paged.check_invariants()
+        steps += 1
+        assert steps < 300, "speculative paged scheduler did not drain"
+    _parity(a, ss.completions, f"paged-int8 k={k}")
+
+
+def test_spec_self_int8_draft():
+    """draft='self-int8': the int8-quantized copy of the target drafts;
+    parity is still exact because verify always rescores with the
+    float target (the draft only proposes)."""
+    cfg, params, base, spec = _setup("qwen2-1.5b", batch=2)
+    spec = dataclasses.replace(spec, draft="self-int8")
+    rng = np.random.default_rng(2)
+    reqs = _requests(cfg, 3, rng)
+    a = Scheduler(params, cfg, base).run(_clone(reqs), max_steps=300)
+    b = Scheduler(params, cfg, spec).run(_clone(reqs), max_steps=300)
+    _parity(a, b, "self-int8")
+
+
+# --------------------------------------------------------------------------
+# Config/API surface
+# --------------------------------------------------------------------------
+
+
+def test_spec_config_validation():
+    with pytest.raises(ValueError, match="speculate_k"):
+        serve_lib.ServeConfig(max_seq=32, batch=2, speculate_k=-1)
+    with pytest.raises(ValueError, match="draft"):
+        serve_lib.ServeConfig(max_seq=32, batch=2, draft="self")
+    with pytest.raises(ValueError, match="draft"):
+        serve_lib.ServeConfig(max_seq=32, batch=2, speculate_k=2,
+                              draft="gpt-tiny")
+
+
+def test_spec_rejects_sampling_and_overflow():
+    cfg, params, _, spec = _setup("qwen2-1.5b", batch=2, max_seq=32, k=3)
+    sched = Scheduler(params, cfg, spec)
+    with pytest.raises(ValueError, match="greedy"):
+        sched.submit(Request(uid=0, prompt=np.zeros(4, np.int32),
+                             max_new_tokens=2, temperature=0.5,
+                             key=jax.random.PRNGKey(0)))
+    # headroom: prompt + budget + k must fit below max_seq
+    with pytest.raises(ValueError, match="max_seq"):
+        sched.submit(Request(uid=1, prompt=np.zeros(20, np.int32),
+                             max_new_tokens=10))
+
+
+def test_spec_window_too_small_fails_with_intent():
+    """A verify width wider than the sliding window cannot reproduce
+    the sequential ring state: constructor refuses, not corrupts."""
+    cfg = _cfg("recurrentgemma-2b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    window = min(cfg.window, 48)
+    spec = serve_lib.ServeConfig(max_seq=48, batch=2,
+                                 compute_dtype=jnp.float32,
+                                 cache_dtype=jnp.float32,
+                                 speculate_k=window, draft="self")
+    with pytest.raises(ValueError, match="window"):
+        Scheduler(params, cfg, spec)
+
+
+def test_spec_draft_pairing_validation():
+    cfg, params, base, spec = _setup("qwen2-1.5b", batch=2)
+    with pytest.raises(ValueError, match="draft_cfg"):
+        Scheduler(params, cfg, spec, draft_params=params)
+    with pytest.raises(ValueError, match="speculate_k"):
+        Scheduler(params, cfg, base,
+                  draft_params=params, draft_cfg=cfg)
