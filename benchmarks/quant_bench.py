@@ -36,6 +36,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
 
@@ -217,6 +218,16 @@ def main(argv=None) -> int:
         "bench": "quant_int8_vs_bf16",
         "arch": args.arch, "head_dim": args.head_dim, "smoke": args.smoke,
         "pool_slots": pool, "trace": trace,
+        # Explicit gating posture (ISSUE 8): the nightly bench-full lane
+        # runs this bench WITHOUT --check — exact int8 greedy parity is a
+        # smoke-trace gate, and on the full trace quantization error
+        # compounds over longer generations (one request may drift).
+        # Mark that in the artifact so the nightly table shows WHY it is
+        # not gated instead of looking green by omission.
+        "gate": "checked" if args.check else "report-only",
+        "gate_note": (None if args.check else
+                      "run without --check: full-trace int8 parity is "
+                      "report-only (drift compounds past the smoke trace)"),
         "bytes": bytes_row,
         "baseline_bf16": base_row,
         "kv_int8": kv_row,
@@ -228,6 +239,13 @@ def main(argv=None) -> int:
         json.dump(report, f, indent=1, sort_keys=True)
         f.write("\n")
     print(json.dumps(report, indent=1, sort_keys=True))
+    if not args.check:
+        summary = os.environ.get("GITHUB_STEP_SUMMARY")
+        if summary:
+            with open(summary, "a") as f:
+                f.write("**quant_bench: report-only** — no --check; "
+                        "full-trace int8 parity gates only on the smoke "
+                        "trace (see BENCH JSON `gate` field)\n")
 
     failures = []
     if args.check:

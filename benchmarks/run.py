@@ -1,32 +1,53 @@
 """Run every paper-table/figure benchmark; print name,us_per_call,derived
 CSV.  ``PYTHONPATH=src python -m benchmarks.run [--only fig11,...] [--list]``
 
+The module list is DISCOVERED from ``benchmarks/*.py`` (nothing to edit
+when a new bench lands) and classified by each module's ``main``
+signature — parsed with ``ast``, so ``--list`` imports nothing heavy:
+
+  * ``rows`` — ``main() -> list[str]`` (fig*, kernel_bench): run here,
+    rows printed as CSV;
+  * ``standalone`` — ``main(argv=None) -> int`` (bench, serve_bench,
+    quant_bench, spec_bench, sparse_bench): own CLI, JSON output and
+    hard gates; run individually by the CI bench lane
+    (``benchmarks.check_baselines`` lints that every one appears there),
+    listed but not run from this driver;
+  * ``viewer`` — ``main() -> None`` (roofline_table, dryrun_compare):
+    render ``runs/`` artifacts; listed but not run from this driver.
+
 Exit code is the number of failed modules (capped at 125 so it never
-collides with signal exit statuses); ``--list`` prints the module names
-and exits without importing anything heavy (no jax import)."""
+collides with signal exit statuses)."""
 
 from __future__ import annotations
 
 import argparse
+import ast
 import importlib
+import pathlib
 import sys
 import traceback
 
-MODULES = (
-    "fig03_ideal",
-    "fig11_speedup",
-    "fig12_power",
-    "fig14_util",
-    "fig15_breakdown",
-    "fig16_edp",
-    "fig17_adp",
-    "fig18_sensitivity",
-    "fig19_mapper",
-    "fig11_sensitivity",
-    "fig20_21_distribution",
-    "fig22_casestudy",
-    "kernel_bench",
-)
+EXCLUDE = {"__init__", "common", "run", "trend", "check_baselines"}
+
+
+def _classify(path: pathlib.Path) -> str:
+    """rows / standalone / viewer, from the module's main() signature
+    (ast-parsed: no import, so --list stays jax-free)."""
+    tree = ast.parse(path.read_text())
+    for node in tree.body:
+        if isinstance(node, ast.FunctionDef) and node.name == "main":
+            if node.args.args or node.args.kwonlyargs:
+                return "standalone"
+            ret = ast.unparse(node.returns) if node.returns else ""
+            return "rows" if "list" in ret else "viewer"
+    return "viewer"
+
+
+def discover() -> list[tuple[str, str]]:
+    """Sorted (module_name, kind) for every bench under benchmarks/."""
+    here = pathlib.Path(__file__).resolve().parent
+    return sorted((p.stem, _classify(p)) for p in here.glob("*.py")
+                  if p.stem not in EXCLUDE)
 
 
 def main() -> int:
@@ -34,18 +55,36 @@ def main() -> int:
     ap.add_argument("--only", default=None,
                     help="comma-separated module subset")
     ap.add_argument("--list", action="store_true",
-                    help="print module names and exit (imports nothing)")
+                    help="print discovered module names (+ kind) and exit "
+                         "(imports nothing heavy)")
     args = ap.parse_args()
+    found = discover()
     if args.list:
-        print("\n".join(MODULES))
+        for name, kind in found:
+            print(f"{name:24s} {kind}")
         return 0
-    mods = args.only.split(",") if args.only else MODULES
+    kinds = dict(found)
+    mods = args.only.split(",") if args.only else [
+        n for n, k in found if k == "rows"]
     print("name,us_per_call,derived")
     failures = 0
     for name in mods:
+        if kinds.get(name) == "standalone":
+            failures += 1
+            print(f"{name},0,STANDALONE", flush=True)
+            print(f"{name}: standalone bench with its own CLI; run "
+                  f"`python -m benchmarks.{name}` directly",
+                  file=sys.stderr)
+            continue
         try:
             mod = importlib.import_module(f"benchmarks.{name}")
-            for row in mod.main():
+            # viewers argparse sys.argv; present them their defaults
+            saved, sys.argv = sys.argv, [f"benchmarks.{name}"]
+            try:
+                rows = mod.main() or ()
+            finally:
+                sys.argv = saved
+            for row in rows:
                 print(row, flush=True)
         except Exception:
             failures += 1

@@ -1,0 +1,317 @@
+"""Structured-sparsity bench: N:M (2:4) sparse plane vs dense (ISSUE 8).
+
+Four planes of evidence, one JSON:
+
+  density sweep   DRACO-style: every Table-3 DNN GEMM trace
+                  (core.workloads) is planned twice through `TPUModel`
+                  — dense (density 1.0) and 2:4 sparse (density 0.5) —
+                  and the ratio of modeled trace seconds is the
+                  workload's *effective-throughput* gain.  Host-
+                  invariant (a ratio of two analytic decisions), so the
+                  per-workload `effective_speedup` rows and their
+                  `geomean_effective_speedup` are trend-gated; --check
+                  enforces geomean >= 1.3x (the FlexSA argument: at 2:4
+                  half the MACs and weight bytes vanish, index stream
+                  overhead eats some of it back).
+  mapper ranking  `AnalyticalCostModel` (the paper's Sec. 4 mapper) at
+                  a headline ResNet-50 shape: the sparse candidate must
+                  rank ABOVE its dense sibling at equal shape.
+  kernel parity   `pallas-tpu-sparse` vs `xla-sparse` through
+                  `Engine.sparse_matmul` — bit-exact (both scatter the
+                  same dense tile; float accumulation in f32).
+  serve posture   the serve_bench smoke trace through the continuous-
+                  batching scheduler: `prune_params` weights +
+                  `ServeConfig(sparsity="2:4")` vs the densified-oracle
+                  params on the float path — greedy parity must be
+                  EXACT (densify(sparsify(w)) is the same matmul by
+                  construction).  A `plan_arch(..., sparse_weights=
+                  True)`-warmed engine then replays the trace and must
+                  log zero steady-state plan misses.
+
+Wall-clock rows (tokens/s, `wallclock_sparse_over_dense`) are report-
+only: interpret-mode Pallas on a CPU host measures dispatch overhead,
+not the HBM savings the cost models account — their metric names carry
+no trend-gate marker on purpose.
+
+Emits ``BENCH_PR8.json``:
+
+    PYTHONPATH=src python -m benchmarks.sparse_bench --smoke --check \\
+        --out BENCH_PR8.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+import time
+
+from benchmarks.serve_bench import make_trace
+
+#: WORKLOADS keys (Table-3 abbreviations): ResNet-50, ViT, BERT-Large
+SMOKE_WORKLOADS = ("RE", "VI", "BE")
+
+
+# ---------------------------------------------------------------------------
+# Plane sweeps (no jax: pure cost-model arithmetic)
+# ---------------------------------------------------------------------------
+
+
+def density_sweep(smoke: bool) -> dict:
+    """Modeled trace seconds per Table-3 workload, dense vs 2:4."""
+    from repro.core.workloads import WORKLOADS
+    from repro.engine import KernelRequest, TPUModel
+
+    model = TPUModel()
+    names = SMOKE_WORKLOADS if smoke else tuple(WORKLOADS)
+    rows, ratios = {}, []
+    for name in names:
+        wl = WORKLOADS[name]
+        dense_s = sparse_s = 0.0
+        for g in wl.gemms:
+            dense = model.decide(KernelRequest("gemm", g.M, g.K, g.N))
+            sparse = model.decide(
+                KernelRequest("gemm_sparse", g.M, g.K, g.N, density=0.5))
+            dense_s += dense.seconds * g.count
+            sparse_s += sparse.seconds * g.count
+        ratio = dense_s / sparse_s
+        ratios.append(ratio)
+        rows[wl.abbr] = {
+            "gemms": wl.n_layers,
+            "dense_seconds": dense_s,
+            "sparse_seconds": sparse_s,
+            "effective_speedup": round(ratio, 4),
+        }
+    geomean = math.exp(sum(math.log(r) for r in ratios) / len(ratios))
+    return {"densities": [1.0, 0.5], "nm": "2:4", "workloads": rows,
+            "geomean_effective_speedup": round(geomean, 4)}
+
+
+def mapper_ranking() -> dict:
+    """The ASIC mapper must rank the sparse candidate above dense at an
+    equal headline shape (ResNet-50's (49, 2048, 512))."""
+    from repro.engine import AnalyticalCostModel, KernelRequest
+
+    model = AnalyticalCostModel()
+    m, k, n = 49, 2048, 512
+    dense = model.decide(KernelRequest("gemm", m, k, n, name="res50"))
+    sparse = model.decide(
+        KernelRequest("gemm_sparse", m, k, n, density=0.5, name="res50"))
+    return {
+        "shape": [m, k, n],
+        "dense_seconds": dense.seconds,
+        "sparse_seconds": sparse.seconds,
+        "mapper_speedup": round(dense.seconds / sparse.seconds, 4),
+        "sparse_ranked_above_dense": sparse.seconds < dense.seconds,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Kernel parity + serve postures (jax)
+# ---------------------------------------------------------------------------
+
+
+def pallas_xla_parity() -> dict:
+    """Both sparse backends dispatch through the engine and agree
+    bit-for-bit (shared scatter-to-dense tile, f32 accumulation)."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro import engine as engine_mod
+    from repro.sparse import sparsify
+
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(48, 256)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(256, 128)), jnp.float32)
+    st = sparsify(w, 2, 4)
+    outs = {}
+    for backend in engine_mod.SPARSE_BACKENDS:
+        with engine_mod.use_engine(backend=backend) as eng:
+            outs[backend] = np.asarray(eng.sparse_matmul(a, st))
+    exact = bool(np.array_equal(outs["pallas-tpu-sparse"],
+                                outs["xla-sparse"]))
+    return {"shapes": [[48, 256], [256, 128]], "bit_exact": exact}
+
+
+def _requests(cfg, trace):
+    import numpy as np
+
+    from repro.serve_lib.scheduler import Request
+
+    rng = np.random.default_rng(0)
+    return [Request(uid=i, prompt=rng.integers(0, cfg.vocab, p)
+                    .astype(np.int32), max_new_tokens=g)
+            for i, (p, g) in enumerate(trace)]
+
+
+def _serve(cfg, params, scfg, trace, bucket, engine=None):
+    from repro.serve_lib.scheduler import Scheduler
+
+    def once():
+        sched = Scheduler(params, cfg, scfg, engine=engine,
+                          prefill_bucket=bucket)
+        t0 = time.time()
+        comps = sched.run(_requests(cfg, trace))
+        return time.time() - t0, sched, comps
+
+    once()  # warm-up: jit compiles
+    dt, sched, comps = min((once() for _ in range(3)), key=lambda r: r[0])
+    tokens = sum(len(c.tokens) for c in comps.values())
+    row = {"seconds": round(dt, 4), "useful_tokens": tokens,
+           "tokens_per_s": round(tokens / dt, 2)}
+    return row, {u: c.tokens.tolist() for u, c in comps.items()}
+
+
+def _agreement(base_toks: dict, toks: dict) -> dict:
+    exact = agree = total = 0
+    for uid, tb in base_toks.items():
+        tq = toks[uid]
+        n = min(len(tb), len(tq))
+        agree += sum(a == b for a, b in zip(tb[:n], tq[:n]))
+        total += n
+        exact += int(tb == tq)
+    return {"exact_requests": exact, "requests": len(base_toks),
+            "agreeing_tokens": agree, "compared_tokens": total,
+            "stepwise_agreement": round(agree / total, 4)}
+
+
+def run_engine_posture(cfg, params, scfg, trace, bucket, pool,
+                       warmup_steps=3):
+    """Pruned serving through a `plan_arch(..., sparse_weights=True)`-
+    warmed sparse engine: decision-cache stats + the steady-state miss
+    delta (must be 0 — density keys the cache, so a collision with a
+    dense plan would show here as a miss)."""
+    from repro import engine as engine_mod
+    from repro.serve_lib.scheduler import Scheduler
+
+    width = -(-max(p for p, _ in trace) // bucket) * bucket
+    plan = engine_mod.plan_arch(
+        cfg, seq_len=width, decode_batch=pool,
+        admit_widths=tuple(range(bucket, width + 1, bucket)),
+        backend=scfg.kernel_backend, sparse_weights=True,
+        dtype_bytes=scfg.compute_dtype.itemsize)
+    eng = engine_mod.Engine(backend=scfg.kernel_backend, plan=plan)
+    sched = Scheduler(params, cfg, scfg, engine=eng, prefill_bucket=bucket)
+    for r in _requests(cfg, trace):
+        sched.submit(r)
+    for _ in range(warmup_steps):
+        sched.step()
+    warm = dict(plan.stats)
+    while sched.queue or sched.n_active:
+        sched.step()
+    final = dict(plan.stats)
+    return {
+        "backend": scfg.kernel_backend,
+        "planned_decisions": len(plan),
+        "planned_ops": sorted({req.op for req, _ in plan}),
+        "after_warmup": warm,
+        "final": final,
+        "steady_state_new_misses": final["misses"] - warm["misses"],
+        "steady_state_new_hits": final["hits"] - warm["hits"],
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default="BENCH_PR8.json")
+    ap.add_argument("--prefill-bucket", type=int, default=8)
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero unless the sparsity gates hold")
+    args = ap.parse_args(argv)
+
+    sweep_row = density_sweep(args.smoke)
+    mapper_row = mapper_ranking()
+    parity_row = pallas_xla_parity()
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    from repro.quant import tree_bytes
+    from repro.serve_lib import serve as serve_lib
+    from repro.sparse import densify_params, prune_params
+
+    pool, trace = make_trace(args.smoke)
+    max_seq = max(p + g for p, g in trace) + 1
+    cfg = get_config(args.arch, smoke=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    sparams = prune_params(params, 2, 4)
+    oracle = densify_params(sparams)
+
+    bytes_row = {
+        "param_bytes_dense": tree_bytes(params),
+        "param_bytes_sparse": tree_bytes(sparams),
+        "param_reduction": round(
+            tree_bytes(params) / tree_bytes(sparams), 3),
+    }
+
+    mk_scfg = lambda **kw: serve_lib.ServeConfig(
+        max_seq=max_seq, batch=pool, compute_dtype=jnp.float32, **kw)
+    scfg_dense = mk_scfg()
+    scfg_sparse = mk_scfg(sparsity="2:4")
+
+    dense_row, dense_toks = _serve(cfg, oracle, scfg_dense, trace,
+                                   args.prefill_bucket)
+    sparse_row, sparse_toks = _serve(cfg, sparams, scfg_sparse, trace,
+                                     args.prefill_bucket)
+    sparse_row["vs_dense"] = _agreement(dense_toks, sparse_toks)
+    # wall-clock ratio: interpret-mode dispatch overhead, NOT gated (the
+    # name intentionally avoids every trend.py THROUGHPUT_MARKER)
+    sparse_row["wallclock_sparse_over_dense"] = round(
+        sparse_row["tokens_per_s"] / dense_row["tokens_per_s"], 3)
+
+    engine_row = run_engine_posture(cfg, sparams, scfg_sparse, trace,
+                                    args.prefill_bucket, pool)
+
+    report = {
+        "bench": "sparse_nm_vs_dense",
+        "arch": args.arch, "smoke": args.smoke,
+        "pool_slots": pool, "trace": trace,
+        "gate": "checked" if args.check else "report-only",
+        "density_sweep": sweep_row,
+        "mapper": mapper_row,
+        "pallas_vs_xla_sparse": parity_row,
+        "bytes": bytes_row,
+        "baseline_dense": dense_row,
+        "sparse_2_4": sparse_row,
+        "engine": engine_row,
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(json.dumps(report, indent=1, sort_keys=True))
+
+    failures = []
+    if args.check:
+        if sweep_row["geomean_effective_speedup"] < 1.3:
+            failures.append(
+                f"2:4 effective-throughput geomean "
+                f"{sweep_row['geomean_effective_speedup']}x < 1.3x")
+        if not mapper_row["sparse_ranked_above_dense"]:
+            failures.append(
+                f"mapper ranked dense above sparse at equal shape "
+                f"({mapper_row['dense_seconds']:.3g}s <= "
+                f"{mapper_row['sparse_seconds']:.3g}s)")
+        if not parity_row["bit_exact"]:
+            failures.append("pallas-tpu-sparse diverged from xla-sparse")
+        agree = sparse_row["vs_dense"]
+        if agree["exact_requests"] != agree["requests"]:
+            failures.append(
+                f"pruned model broke greedy parity vs its densified "
+                f"oracle ({agree['exact_requests']}/{agree['requests']} "
+                f"requests exact)")
+        if engine_row["steady_state_new_misses"] != 0:
+            failures.append(
+                f"sparse decode path re-planned after warm-up "
+                f"({engine_row['steady_state_new_misses']} new misses)")
+    for msg in failures:
+        print(f"FAIL: {msg}", file=sys.stderr)
+    return len(failures)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

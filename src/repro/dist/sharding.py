@@ -159,7 +159,15 @@ def _path_name(path) -> str:
 def _auto_spec(name: str, shape, sizes: dict[str, int]) -> tuple:
     """Param-name pattern -> per-dim mesh-axis tuple (see the module
     docstring's rule table; trailing None entries may be omitted —
-    PartitionSpec pads with replication)."""
+    PartitionSpec pads with replication).
+
+    Wrapped-tensor leaves (quant.QuantizedTensor, sparse.SparseTensor)
+    need no special casing: their pytree children arrive as integer path
+    segments (".../w/0" values, ".../w/1" indices) and the shape-driven
+    rules place them together — an N:M SparseTensor's values and indices
+    share shape (K_eff, N), so both land on the same (data, model) spec
+    and every shard holds the index metadata for exactly the kept
+    values it owns."""
     data = sizes.get("data", 1)
     model = sizes.get("model", 1)
     ndim = len(shape)

@@ -16,17 +16,18 @@ One decision surface for both planes:
 Importing this package is jax-free; jax loads at first dispatch.
 """
 
-from .context import (INT8_BACKENDS, Engine, active_engine,
-                      backend_in_bytes, decode_requests, default_engine,
-                      int8_sibling, matmul, plan_arch, use_engine)
+from .context import (INT8_BACKENDS, SPARSE_BACKENDS, Engine,
+                      active_engine, backend_in_bytes, decode_requests,
+                      default_engine, int8_sibling, matmul, plan_arch,
+                      sparse_sibling, use_engine)
 from .cost import AnalyticalCostModel, CostModel, TPUModel
 from .plan import ExecutionPlan, KernelDecision, KernelRequest
 from .registry import BACKENDS, KernelRegistry, default_registry
 
 __all__ = [
-    "Engine", "INT8_BACKENDS", "active_engine", "backend_in_bytes",
-    "decode_requests", "default_engine", "int8_sibling",
-    "matmul", "plan_arch", "use_engine",
+    "Engine", "INT8_BACKENDS", "SPARSE_BACKENDS", "active_engine",
+    "backend_in_bytes", "decode_requests", "default_engine",
+    "int8_sibling", "sparse_sibling", "matmul", "plan_arch", "use_engine",
     "AnalyticalCostModel", "CostModel", "TPUModel",
     "ExecutionPlan", "KernelDecision", "KernelRequest",
     "BACKENDS", "KernelRegistry", "default_registry",

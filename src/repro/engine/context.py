@@ -54,6 +54,12 @@ def backend_in_bytes(backend: str | None, itemsize: int) -> int:
     return 1 if backend in INT8_BACKENDS else itemsize
 
 
+#: backends that execute through the N:M structured-sparsity plane
+#: (ISSUE 8).  Their `gemm_sparse` requests carry the storage density
+#: in the decision key; everything else dispatches like the float plane.
+SPARSE_BACKENDS = ("pallas-tpu-sparse", "xla-sparse")
+
+
 #: float backend -> its int8 sibling (quantize=True config upgrade).
 #: Both Pallas spellings map to "pallas-tpu-int8", which auto-resolves
 #: interpret mode off-TPU; int8 names pass through.
@@ -64,6 +70,41 @@ _INT8_SIBLING = {
     "pallas-tpu-int8": "pallas-tpu-int8",
     "xla-int8": "xla-int8",
 }
+
+
+#: backend -> its sparse sibling (sparsity=<N:M> config upgrade).  Both
+#: Pallas spellings map to "pallas-tpu-sparse" (interpret auto-resolves
+#: off-TPU); the int8 names also upgrade — sparse×int8 stores int8
+#: values + scales INSIDE the SparseTensor, so the sparse backends
+#: subsume the int8 ones when both knobs are set; sparse names pass
+#: through.
+_SPARSE_SIBLING = {
+    "xla-einsum": "xla-sparse",
+    "pallas-tpu": "pallas-tpu-sparse",
+    "pallas-interpret": "pallas-tpu-sparse",
+    "xla-int8": "xla-sparse",
+    "pallas-tpu-int8": "pallas-tpu-sparse",
+    "pallas-tpu-sparse": "pallas-tpu-sparse",
+    "xla-sparse": "xla-sparse",
+}
+
+
+def sparse_sibling(backend: str | None) -> str:
+    """The sparse backend a `sparsity="N:M"` Serve/Train config executes
+    on instead of `backend`; raises with the known names otherwise.
+    `None` resolves per host like `int8_sibling`: the Pallas sparse
+    kernel on a TPU, the XLA reference elsewhere."""
+    if backend is None:
+        import jax  # deferred: config construction must not force jax early
+
+        return ("pallas-tpu-sparse" if jax.default_backend() == "tpu"
+                else "xla-sparse")
+    sibling = _SPARSE_SIBLING.get(backend)
+    if sibling is None:
+        raise ValueError(
+            f"sparsity cannot upgrade kernel_backend {backend!r} to a "
+            f"sparse sibling (known: {sorted(_SPARSE_SIBLING)})")
+    return sibling
 
 
 def int8_sibling(backend: str | None) -> str:
@@ -145,6 +186,12 @@ class Engine:
         """True when this engine executes on the quantized plane."""
         return self.backend in INT8_BACKENDS
 
+    @property
+    def sparse(self) -> bool:
+        """True when this engine executes on the structured-sparsity
+        plane (`sparse_matmul` is dispatchable)."""
+        return self.backend in SPARSE_BACKENDS
+
     # -- decide ------------------------------------------------------------
 
     def _rebind(self, request: KernelRequest,
@@ -195,18 +242,23 @@ class Engine:
     # -- execute -----------------------------------------------------------
 
     def _resolve(self, key: tuple, op: str, m: int, k: int, n: int,
-                 groups: int, item_bytes: int) -> tuple:
+                 groups: int, item_bytes: int, *, density: float = 1.0,
+                 in_bytes: int | None = None) -> tuple:
         """Miss path: full request -> decide -> registry, then memoize.
         On an int8 backend requests key at in_bytes=1 (the width the
         kernel actually moves in), so the same float shapes plan larger
         tiles and never collide with a full-precision plan entry; the
         OUTPUT stays the float compute width — the int8 kernels rescale
         the int32 accumulator to a float result, and the cost model must
-        not undercount that output stream."""
+        not undercount that output stream.  `density` keys sparse
+        requests apart from dense siblings; `in_bytes` overrides the
+        backend rule (sparse×int8 storage moves at 1 byte even though
+        the sparse backends are not int8 backends)."""
         req = KernelRequest(op, m, k, n, groups=groups,
-                            in_bytes=backend_in_bytes(self.backend,
-                                                      item_bytes),
-                            out_bytes=item_bytes)
+                            in_bytes=(in_bytes if in_bytes is not None
+                                      else backend_in_bytes(self.backend,
+                                                            item_bytes)),
+                            out_bytes=item_bytes, density=density)
         dec = self.decide(req)
         entry = (dec, self.registry.get(dec.backend, op))
         self._memo[key] = entry
@@ -250,6 +302,42 @@ class Engine:
             raise ValueError(f"matmul dim mismatch {a.shape} @ {w_q.shape}")
         dec, fn = self._resolve(key, "gemm_w8", m, k, n, 1, _dtype_bytes(a))
         return fn(dec, a, w_q, w_scale, out_dtype=out_dtype)
+
+    def sparse_matmul(self, a, st, *, out_dtype=None):
+        """(M, K) float @ N:M structured-sparse weight storage
+        (`sparse.prune_params`): dispatches the planned `gemm_sparse`
+        kernel — the compressed values/indices never densify in HBM.
+        The request carries the storage density (N/M), so the plan
+        never collides with a dense sibling of the same shape;
+        sparse×int8 storage (int8 values + scales) keys at in_bytes=1.
+        Only sparse backends register the op; call sites guard on
+        `engine.sparse`."""
+        scale = st.scale
+        if scale is None:
+            a, v, i = _as_arrays(a, st.values, st.indices)
+            s_aval = None
+        else:
+            a, v, i, scale = _as_arrays(a, st.values, st.indices, scale)
+            s_aval = scale.aval
+        key = ("gemm_sparse", a.aval, v.aval, i.aval, s_aval, st.n, st.m)
+        hit = self._memo.get(key)
+        if hit is not None:
+            self.plan.hits += 1
+            dec, fn = hit
+            return fn(dec, a, v, i, scale, n_keep=st.n, m_group=st.m,
+                      out_dtype=out_dtype)
+        m, k = a.shape
+        n = v.shape[-1]
+        if k != st.k_dense:
+            raise ValueError(
+                f"sparse matmul dim mismatch {a.shape} @ {st!r}")
+        item_bytes = _dtype_bytes(a)
+        dec, fn = self._resolve(
+            key, "gemm_sparse", m, k, n, 1, item_bytes,
+            density=st.n / st.m,
+            in_bytes=1 if st.quantized else None)
+        return fn(dec, a, v, i, scale, n_keep=st.n, m_group=st.m,
+                  out_dtype=out_dtype)
 
     def grouped_matmul(self, x, w, *, out_dtype=None):
         """x (E, C, D) @ w (E, D, F) -> (E, C, F), per-expert."""
@@ -362,6 +450,7 @@ def matmul(a, b, *, out_dtype=None):
 
 def decode_requests(cfg, *, batch: int, dtype_bytes: int = 2,
                     seq: int = 1, quantized_weights: bool = False,
+                    sparse_weights: bool = False, density: float = 0.5,
                     out_bytes: int | None = None, paged_pages: int = 0,
                     page_size: int = 0) -> tuple[KernelRequest, ...]:
     """The exact engine requests one `models.transformer.decode_step`
@@ -381,20 +470,34 @@ def decode_requests(cfg, *, batch: int, dtype_bytes: int = 2,
 
     `quantized_weights=True` mirrors a `quant.quantize_params` server:
     the dense projections dispatch as `gemm_w8` (MoE expert stacks stay
-    float grouped GEMMs — quantize_params skips them).  `out_bytes`
-    (default: `dtype_bytes`) is the OUTPUT width — on an int8 posture
-    pass dtype_bytes=1, out_bytes=<compute width>, matching how the
-    runtime keys its requests (`Engine._resolve`)."""
+    float grouped GEMMs — quantize_params skips them).
+    `sparse_weights=True` mirrors a `sparse.prune_params` server the
+    same way: dense projections dispatch as `gemm_sparse` at `density`
+    (N/M of the pruning spec; grouped GEMMs stay dense — prune_params
+    skips expert stacks too), and combined with `quantized_weights=True`
+    the storage is sparse×int8, which the runtime keys at in_bytes=1.
+    `out_bytes` (default: `dtype_bytes`) is the OUTPUT width — on an
+    int8 posture pass dtype_bytes=1, out_bytes=<compute width>,
+    matching how the runtime keys its requests (`Engine._resolve`)."""
     d, f, hd = cfg.d_model, cfg.d_ff, cfg.head_dim_
     nh, nkv = cfg.n_heads, cfg.n_kv
     tokens = batch * seq
     out_b = out_bytes if out_bytes is not None else dtype_bytes
-    dense_op = "gemm_w8" if quantized_weights else "gemm"
+    dense_in, dense_density = dtype_bytes, 1.0
+    if sparse_weights:
+        dense_op, dense_density = "gemm_sparse", density
+        if quantized_weights:
+            dense_in = 1  # sparse×int8: values move at one byte
+    elif quantized_weights:
+        dense_op = "gemm_w8"
+    else:
+        dense_op = "gemm"
     reqs: list[KernelRequest] = []
 
     def gemm(m, k, n, name):
-        reqs.append(KernelRequest(dense_op, m, k, n, in_bytes=dtype_bytes,
-                                  out_bytes=out_b, name=name))
+        reqs.append(KernelRequest(dense_op, m, k, n, in_bytes=dense_in,
+                                  out_bytes=out_b, density=dense_density,
+                                  name=name))
 
     def mlp_reqs(prefix):
         if cfg.moe is not None:
@@ -442,6 +545,7 @@ def plan_arch(cfg, *, seq_len: int | None = None, batch: int = 1,
               decode_batch: int | None = None,
               admit_widths: tuple[int, ...] = (),
               quantized_weights: bool = False,
+              sparse_weights: bool = False, sparse_density: float = 0.5,
               paged_pages: int = 0, page_size: int = 0,
               verify_k: int = 0) -> ExecutionPlan:
     """Plan every GEMM of one `repro.models.config.ArchConfig` prefill
@@ -458,7 +562,10 @@ def plan_arch(cfg, *, seq_len: int | None = None, batch: int = 1,
     does the same for its ragged-prefill admit widths (the scheduler's
     `prefill_bucket` multiples).  `quantized_weights` plans the decode/
     admit dense projections as `gemm_w8` (a `quant.quantize_params`
-    server dispatches those instead of `gemm`).  `paged_pages` /
+    server dispatches those instead of `gemm`); `sparse_weights` plans
+    them as `gemm_sparse` at `sparse_density` (a `sparse.prune_params`
+    server — both flags together describe sparse×int8 storage, keyed
+    at in_bytes=1 like the runtime does).  `paged_pages` /
     `page_size` (a `cache_layout="paged"` server: slot_pages and the
     page size) additionally plan the paged decode gather-attention
     shape, so the paged scheduler's steady state also re-plans
@@ -484,6 +591,8 @@ def plan_arch(cfg, *, seq_len: int | None = None, batch: int = 1,
             for req in decode_requests(cfg, batch=decode_batch,
                                        dtype_bytes=in_bytes, seq=width,
                                        quantized_weights=quantized_weights,
+                                       sparse_weights=sparse_weights,
+                                       density=sparse_density,
                                        out_bytes=dtype_bytes,
                                        paged_pages=paged_pages,
                                        page_size=page_size):

@@ -74,6 +74,8 @@ class TPUModel:
             return self._decide_attention(request)
         if request.op == "grouped_gemm":
             return self._decide_grouped(request)
+        if request.op == "gemm_sparse":
+            return self._decide_gemm_sparse(request)
         return self._decide_gemm(request)
 
     # -- gemm --------------------------------------------------------------
@@ -91,6 +93,36 @@ class TPUModel:
             meta=_meta(hbm_bytes=cost.hbm_bytes,
                        mxu_utilization=cost.mxu_utilization,
                        padding_efficiency=cost.padding_efficiency))
+
+    # -- structured-sparse gemm (ISSUE 8) ----------------------------------
+
+    def _decide_gemm_sparse(self, req: KernelRequest) -> KernelDecision:
+        """Effective-FLOPs roofline for N:M weight sparsity: the MACs
+        and weight bytes that matter scale by `density`, so the search
+        runs at K_eff = density x K (the FlexSA view — a sparsity-aware
+        array skips pruned groups), plus one index byte per kept value
+        streamed with the weights.  The executed Pallas kernel
+        reconstructs dense tiles in VMEM and realigns blocks itself
+        (kernels/sparse_gemm.py), so the decision stays the planning
+        identity — what matters is that sparse candidates RANK above
+        their dense siblings in proportion to the work sparsity
+        removes."""
+        from repro.core import tpu_model as tm
+
+        k_eff = max(1, round(req.k * req.density))
+        cfg = tm.choose_kernel_config(req.m, k_eff, req.n, req.in_bytes)
+        cost = tm.estimate(req.m, k_eff, req.n, cfg, req.in_bytes,
+                           req.out_bytes)
+        idx_bytes = float(k_eff * req.n)  # int8 in-group offsets
+        return KernelDecision(
+            op=req.op, dataflow=cfg.dataflow,
+            bm=cfg.bm, bk=cfg.bk, bn=cfg.bn,
+            cost_model=self.name,
+            seconds=cost.seconds + idx_bytes / tm.HBM_BW,
+            meta=_meta(hbm_bytes=cost.hbm_bytes + idx_bytes,
+                       mxu_utilization=cost.mxu_utilization,
+                       padding_efficiency=cost.padding_efficiency,
+                       density=req.density, k_effective=k_eff))
 
     # -- grouped gemm ------------------------------------------------------
 
@@ -195,7 +227,14 @@ class AnalyticalCostModel:
                 "the ASIC plane plans GEMMs; lower attention to its "
                 "score/context GEMMs first (core.workloads.arch_gemms)")
         count = request.groups if request.op == "grouped_gemm" else 1
-        gemm = GEMM(request.m, request.k, request.n, count=count,
+        k = request.k
+        if request.op == "gemm_sparse":
+            # effective-FLOPs lowering: the mapper sizes the logical
+            # array for the contraction a sparsity-aware PE grid
+            # actually performs (density x K), so a sparse candidate
+            # ranks above its dense sibling at equal shape.
+            k = max(1, round(k * request.density))
+        gemm = GEMM(request.m, k, request.n, count=count,
                     name=request.name or "engine")
         d = self._mapper_for(request.in_bytes).map_gemm(gemm)
         cfg, rep = d.config, d.report

@@ -31,9 +31,12 @@ PLAN_FORMAT = "redas-execution-plan-v1"
 #: ops the engine knows how to plan and dispatch.  "gemm_w8" is a gemm
 #: whose right operand is pre-quantized int8 storage (ISSUE 5): it plans
 #: through the same search as "gemm" but keys separately so a plan can
-#: hold both postures side by side.
+#: hold both postures side by side.  "gemm_sparse" is a gemm whose right
+#: operand is N:M structured-sparse storage (ISSUE 8, `repro.sparse`):
+#: the request's `density` scales its effective FLOPs/bytes in both cost
+#: models and keys it apart from any dense sibling.
 KNOWN_OPS = ("gemm", "grouped_gemm", "attention", "gemm_w8",
-             "paged_attention")
+             "paged_attention", "gemm_sparse")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,9 +45,13 @@ class KernelRequest:
 
     `m, k, n` are the GEMM dims ((M, K) @ (K, N)); for `grouped_gemm`
     they are the per-group dims and `groups` is the expert count E; for
-    `attention` m = query length, n = kv length, k = head dim.  `name`
-    is a human label only — it is excluded from the cache key so
-    repeated shapes share one decision regardless of which layer asked.
+    `attention` m = query length, n = kv length, k = head dim.
+    `density` is the kept-weight fraction of a structured-sparse right
+    operand (N/M for N:M storage, 1.0 = dense) — part of the cache key
+    so sparse and dense siblings of the same shape never share a
+    decision.  `name` is a human label only — it is excluded from the
+    cache key so repeated shapes share one decision regardless of which
+    layer asked.
     """
 
     op: str
@@ -54,6 +61,7 @@ class KernelRequest:
     groups: int = 1
     in_bytes: int = 2
     out_bytes: int = 2
+    density: float = 1.0
     name: str = ""
 
     def __post_init__(self):
@@ -61,11 +69,13 @@ class KernelRequest:
             raise ValueError(f"unknown op {self.op!r} (known: {KNOWN_OPS})")
         if min(self.m, self.k, self.n, self.groups) < 1:
             raise ValueError(f"degenerate request {self}")
+        if not 0.0 < self.density <= 1.0:
+            raise ValueError(f"density must be in (0, 1], got {self.density}")
 
     def key(self) -> tuple:
         """The decision-cache key (shape identity, name excluded)."""
         return (self.op, self.m, self.k, self.n, self.groups,
-                self.in_bytes, self.out_bytes)
+                self.in_bytes, self.out_bytes, self.density)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -101,6 +111,7 @@ class KernelDecision:
                 "op": request.op, "m": request.m, "k": request.k,
                 "n": request.n, "groups": request.groups,
                 "in_bytes": request.in_bytes, "out_bytes": request.out_bytes,
+                "density": request.density,
             },
             "dataflow": self.dataflow,
             "bm": self.bm, "bk": self.bk, "bn": self.bn,

@@ -18,9 +18,11 @@ from __future__ import annotations
 from typing import Callable
 
 #: the backends the default registry guarantees (ISSUE 3 surface; the
-#: int8 pair is the ISSUE 5 quantization plane).
+#: int8 pair is the ISSUE 5 quantization plane, the sparse pair the
+#: ISSUE 8 structured-sparsity plane).
 BACKENDS = ("pallas-tpu", "pallas-interpret", "xla-einsum", "simulator",
-            "pallas-tpu-int8", "xla-int8")
+            "pallas-tpu-int8", "xla-int8",
+            "pallas-tpu-sparse", "xla-sparse")
 
 
 class KernelRegistry:
@@ -74,7 +76,8 @@ _DEFAULT: KernelRegistry | None = None
 
 def _load_kernel_registrations(reg: KernelRegistry) -> None:
     from repro.kernels import (flash_attention, grouped_gemm,
-                               paged_attention, quant_gemm, redas_gemm)
+                               paged_attention, quant_gemm, redas_gemm,
+                               sparse_gemm)
 
     from . import backends
 
@@ -82,6 +85,7 @@ def _load_kernel_registrations(reg: KernelRegistry) -> None:
     grouped_gemm.register_into(reg)
     flash_attention.register_into(reg)
     quant_gemm.register_into(reg)
+    sparse_gemm.register_into(reg)
     paged_attention.register_into(reg)
     backends.register_into(reg)
 

@@ -225,6 +225,8 @@ def register_into(registry) -> None:
 
     registry.register("xla-einsum", "paged_attention", _reference)
     registry.register("xla-int8", "paged_attention", _reference)
+    registry.register("xla-sparse", "paged_attention", _reference)
     registry.register("pallas-tpu", "paged_attention", _pallas(False))
     registry.register("pallas-interpret", "paged_attention", _pallas(True))
     registry.register("pallas-tpu-int8", "paged_attention", _pallas(None))
+    registry.register("pallas-tpu-sparse", "paged_attention", _pallas(None))

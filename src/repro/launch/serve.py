@@ -97,13 +97,20 @@ def main(argv=None) -> dict:
                          "(bounds jit retraces; 1 = exact)")
     ap.add_argument("--kernel-backend", default=None,
                     choices=("pallas-tpu", "pallas-interpret", "xla-einsum",
-                             "pallas-tpu-int8", "xla-int8"),
+                             "pallas-tpu-int8", "xla-int8",
+                             "pallas-tpu-sparse", "xla-sparse"),
                     help="repro.engine backend for model matmuls")
     ap.add_argument("--quantize", action="store_true",
                     help="full int8 serving posture: quantize the dense "
                          "weights (repro.quant.quantize_params), store the "
                          "KV cache int8 (cache_dtype='int8'), and upgrade "
                          "the kernel backend to its int8 sibling")
+    ap.add_argument("--sparsity", default=None, metavar="N:M",
+                    help="structured-sparse serving posture (e.g. '2:4'): "
+                         "magnitude-prune the dense weights "
+                         "(repro.sparse.prune_params) and upgrade the "
+                         "kernel backend to its sparse sibling; with "
+                         "--quantize the kept values store as sparse×int8")
     ap.add_argument("--plan", default=None,
                     help="ExecutionPlan JSON to warm-start the decision "
                          "cache from (see repro.engine.plan_arch)")
@@ -148,7 +155,7 @@ def main(argv=None) -> dict:
         compute_dtype=dtype,
         cache_dtype=jnp.int8 if args.quantize else dtype,
         kernel_backend=args.kernel_backend, plan_path=args.plan,
-        quantize=args.quantize,
+        quantize=args.quantize, sparsity=args.sparsity,
         cache_layout=args.cache_layout, page_size=args.page_size,
         speculate_k=args.speculate,
         draft=args.draft if args.speculate else None)
@@ -157,7 +164,13 @@ def main(argv=None) -> dict:
     with mesh, shd.use_mesh(mesh):
         params = T.init_params(jax.random.PRNGKey(args.seed), cfg)
         params = jax.tree.map(lambda p: p.astype(dtype), params)
-        if args.quantize:
+        if args.sparsity:
+            from repro.sparse import parse_sparsity, prune_params
+            n, m = parse_sparsity(args.sparsity)
+            # with --quantize the kept values store int8 inside the
+            # SparseTensor (sparse×int8) — quantize_params must not run
+            params = prune_params(params, n, m, quantize=args.quantize)
+        elif args.quantize:
             from repro.quant import quantize_params
             params = quantize_params(params)
         if trace is not None:

@@ -47,9 +47,14 @@ def main(argv=None) -> dict:
                     help="memmap token corpus; default synthetic")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--kernel-backend", default=None,
-                    choices=("pallas-tpu", "pallas-interpret", "xla-einsum"),
+                    choices=("pallas-tpu", "pallas-interpret", "xla-einsum",
+                             "pallas-tpu-sparse", "xla-sparse"),
                     help="repro.engine backend for model matmuls "
                          "(default: XLA-native)")
+    ap.add_argument("--sparsity", default=None, metavar="N:M",
+                    help="sparse-QAT posture (e.g. '2:4'): upgrade the "
+                         "kernel backend to its sparse sibling; pair with "
+                         "repro.sparse.prune_params weights")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -59,6 +64,7 @@ def main(argv=None) -> dict:
         optimizer=AdamWConfig(
             lr=linear_warmup_cosine(args.lr, args.warmup, args.steps)),
         kernel_backend=args.kernel_backend,
+        sparsity=args.sparsity,
     )
     mesh = make_test_mesh()
     source = make_source(cfg, DataConfig(args.batch, args.seq, args.seed),

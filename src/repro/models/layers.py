@@ -44,17 +44,29 @@ def dense(p, x: Array) -> Array:
     `quant.quantize_params` weights (QuantizedTensor: int8 storage +
     per-channel scales) dispatch the planned `gemm_w8` kernel on an int8
     engine (the stored weight never materializes in float); on any other
-    posture they dequantize to the compute dtype first (DESIGN.md §7)."""
+    posture they dequantize to the compute dtype first (DESIGN.md §7).
+    `sparse.prune_params` weights (SparseTensor: N:M compressed values +
+    index metadata) dispatch the planned `gemm_sparse` kernel on a
+    sparse engine (DESIGN.md §10) and densify on any other posture."""
     from repro.engine import active_engine
     from repro.quant import QuantizedTensor
+    from repro.sparse import SparseTensor
     w = p["w"]
     eng = active_engine()
     quantized = isinstance(w, QuantizedTensor)
+    sparse = isinstance(w, SparseTensor)
     x2d = x.reshape(-1, x.shape[-1])
-    if quantized and eng is not None and eng.int8:
+    if sparse and eng is not None and eng.sparse:
+        y2d = eng.sparse_matmul(x2d, w, out_dtype=x.dtype)
+    elif quantized and eng is not None and eng.int8:
         y2d = eng.quant_matmul(x2d, w.q, w.scale, out_dtype=x.dtype)
     else:
-        wf = w.dequantize(x.dtype) if quantized else w.astype(x.dtype)
+        if sparse:
+            wf = w.densify(x.dtype)
+        elif quantized:
+            wf = w.dequantize(x.dtype)
+        else:
+            wf = w.astype(x.dtype)
         y2d = (eng.matmul(x2d, wf, out_dtype=x.dtype) if eng is not None
                else x2d @ wf)
     y = y2d.reshape(*x.shape[:-1], w.shape[-1])

@@ -79,6 +79,13 @@ class ServeConfig:
     # expect `quant.quantize_params` weights.  Orthogonal to
     # cache_dtype="int8" (the KV codec); launch/serve --quantize sets both.
     quantize: bool = False
+    # structured-sparsity plane (ISSUE 8): "N:M" (e.g. "2:4") upgrades
+    # `kernel_backend` to its sparse sibling and expects
+    # `sparse.prune_params` weights.  Composes with quantize=True
+    # (sparse×int8: prune_params(..., quantize=True) storage — the
+    # sparse backends dispatch it, the KV codec stays the quantize
+    # knob's job).
+    sparsity: str | None = None
     # KV layout (DESIGN.md §8): "paged" moves full-attention KV into a
     # page pool behind per-slot block tables (scheduler-only; enables
     # cross-request prefix sharing).  "contiguous" is the PR 4 layout
@@ -119,6 +126,15 @@ class ServeConfig:
             object.__setattr__(
                 self, "kernel_backend",
                 engine_mod.int8_sibling(self.kernel_backend))
+        if self.sparsity is not None:
+            from repro.sparse import parse_sparsity
+
+            parse_sparsity(self.sparsity)  # validate "N:M" early
+            # after the int8 upgrade on purpose: sparse subsumes int8
+            # (sparse×int8 stores int8 values inside the SparseTensor)
+            object.__setattr__(
+                self, "kernel_backend",
+                engine_mod.sparse_sibling(self.kernel_backend))
         if self.cache_layout not in ("contiguous", "paged"):
             raise ValueError(
                 f"cache_layout {self.cache_layout!r} is not one of "

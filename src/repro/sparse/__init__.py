@@ -1,0 +1,28 @@
+"""N:M structured-sparsity plane (ISSUE 8) — see DESIGN.md §10.
+
+Mirrors `repro.quant`: `SparseTensor` (registered pytree: compressed
+values + int8 in-group index metadata), `sparsify`/`densify`
+round-trip, `prune_params` (magnitude N:M pruning of `layers.dense`
+weights, same skip-list as `quantize_params`), and the sparse×int8
+composition (int8 values + per-channel scales in one SparseTensor).
+"""
+
+from .nm import (  # noqa: F401
+    SKIP_KEYS,
+    SparseTensor,
+    densify,
+    densify_params,
+    parse_sparsity,
+    prune_params,
+    sparsify,
+)
+
+__all__ = [
+    "SKIP_KEYS",
+    "SparseTensor",
+    "densify",
+    "densify_params",
+    "parse_sparsity",
+    "prune_params",
+    "sparsify",
+]

@@ -1,0 +1,202 @@
+"""N:M structured sparsity (weights) — the pruned-workload plane.
+
+Layout (DESIGN.md §10): a dense (…, K, N) weight is pruned per group of
+M consecutive K elements per output column — keep the N largest
+magnitudes, drop the rest — and stored compressed:
+
+  values   (…, K_eff, N)  kept values (float, or int8 under sparse×int8)
+  indices  (…, K_eff, N)  int8 in-group offsets (0..M-1) of each kept
+                          value, ascending within its group
+  scale    (…, 1, N)      per-output-channel float32 scale, only when
+                          the values are int8 (sparse×int8 composition)
+
+with K_eff = ceil(K / M) * N.  The index metadata is the whole cost of
+reconstruction — one byte per kept value — which is what makes the 2:4
+default a 1.6x (float) / 3.5x (int8) weight-footprint shrink while the
+consuming GEMM keeps its dense activation layout.
+
+Mirrors the `repro.quant` recipe on purpose: `SparseTensor` is a
+registered pytree whose children share leading dims (so `lax.scan` over
+stacked params slices it exactly like a raw weight leaf), and
+`prune_params` walks the same `{"w": …}` convention with the same
+skip-list as `quantize_params`.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.quantize import QMAX, SKIP_KEYS
+
+
+def parse_sparsity(spec: str) -> tuple[int, int]:
+    """Parse an "N:M" sparsity spec ("2:4" -> (2, 4)) with validation:
+    1 <= N < M.  N == M would be dense storage with pure overhead, and
+    the in-group indices are int8, so M is capped at 128."""
+    try:
+        n_s, m_s = str(spec).split(":")
+        n, m = int(n_s), int(m_s)
+    except ValueError:
+        raise ValueError(f"sparsity must look like 'N:M' (e.g. '2:4'), "
+                         f"got {spec!r}") from None
+    if not 1 <= n < m:
+        raise ValueError(f"sparsity {spec!r}: need 1 <= N < M")
+    if m > 128:
+        raise ValueError(f"sparsity {spec!r}: M is capped at 128 "
+                         f"(in-group indices are int8)")
+    return n, m
+
+
+@jax.tree_util.register_pytree_node_class
+class SparseTensor:
+    """Compressed N:M values + int8 index metadata, as one pytree node.
+
+    `shape`/`ndim` report the DENSE shape (…, K, N) so consumers like
+    `models.layers.dense` reshape on `w.shape[-1]` unchanged.  `n`, `m`
+    and the dense contraction length `k_dense` ride in the static aux
+    data — `lax.scan` over stacked params slices values/indices/scale
+    together and the group structure survives unchanged.
+    """
+
+    def __init__(self, values, indices, scale=None, *, n: int = 2,
+                 m: int = 4, k_dense: int | None = None):
+        self.values = values
+        self.indices = indices
+        self.scale = scale
+        self.n = int(n)
+        self.m = int(m)
+        if k_dense is None:
+            k_dense = values.shape[-2] // self.n * self.m
+        self.k_dense = int(k_dense)
+
+    @property
+    def shape(self):
+        return (*self.values.shape[:-2], self.k_dense,
+                self.values.shape[-1])
+
+    @property
+    def ndim(self):
+        return self.values.ndim
+
+    @property
+    def density(self) -> float:
+        return self.n / self.m
+
+    @property
+    def quantized(self) -> bool:
+        """True for sparse×int8 storage (int8 values + per-col scales)."""
+        return self.scale is not None
+
+    def densify(self, dtype=jnp.float32):
+        """Scatter the kept values back into a dense (…, K, N) array
+        (zeros at pruned positions); dequantizes int8 values first."""
+        v = self.values.astype(jnp.float32)
+        if self.scale is not None:
+            v = v * self.scale
+        lead = v.shape[:-2]
+        k_eff, ncols = v.shape[-2:]
+        groups = k_eff // self.n
+        v4 = v.reshape(*lead, groups, self.n, ncols)
+        i4 = self.indices.reshape(*lead, groups, self.n, ncols)
+        iota = jnp.arange(self.m, dtype=self.indices.dtype).reshape(self.m, 1)
+        # one-hot scatter over the in-group offset: (…, g, n, m, ncols)
+        hit = i4[..., :, None, :] == iota
+        dense = jnp.sum(jnp.where(hit, v4[..., :, None, :], 0.0), axis=-3)
+        dense = dense.reshape(*lead, groups * self.m, ncols)
+        return dense[..., :self.k_dense, :].astype(dtype)
+
+    def tree_flatten(self):
+        return (self.values, self.indices, self.scale), \
+            (self.n, self.m, self.k_dense)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        n, m, k_dense = aux
+        values, indices, scale = children
+        return cls(values, indices, scale, n=n, m=m, k_dense=k_dense)
+
+    def __repr__(self):
+        return (f"SparseTensor({self.n}:{self.m}, dense_shape="
+                f"{tuple(self.shape)}, values_shape="
+                f"{tuple(self.values.shape)}, "
+                f"quantized={self.quantized})")
+
+
+def sparsify(x, n: int = 2, m: int = 4, *,
+             quantize: bool = False) -> SparseTensor:
+    """Magnitude-based N:M pruning of a dense (…, K, N) weight.
+
+    Per group of `m` consecutive K elements per output column, keep the
+    `n` largest magnitudes (stable on ties: earlier offset wins) and
+    record their in-group offsets ascending, so densify is a
+    deterministic scatter.  K is zero-padded up to a multiple of `m`
+    first — padded positions never displace real values (magnitude 0)
+    and `densify` slices them back off.  `quantize=True` additionally
+    stores the kept values as int8 with per-output-channel symmetric
+    scales (the sparse×int8 composition)."""
+    if not 1 <= n < m:
+        raise ValueError(f"need 1 <= N < M, got {n}:{m}")
+    lead = x.shape[:-2]
+    k, ncols = x.shape[-2:]
+    groups = -(-k // m)
+    pad = groups * m - k
+    xf = x.astype(jnp.float32)
+    if pad:
+        xf = jnp.concatenate(
+            [xf, jnp.zeros((*lead, pad, ncols), jnp.float32)], axis=-2)
+    xg = xf.reshape(*lead, groups, m, ncols)
+    order = jnp.argsort(-jnp.abs(xg), axis=-2, stable=True)
+    keep = jnp.sort(order[..., :n, :], axis=-2)
+    vals = jnp.take_along_axis(xg, keep, axis=-2)
+    vals = vals.reshape(*lead, groups * n, ncols)
+    idx = keep.reshape(*lead, groups * n, ncols).astype(jnp.int8)
+    if not quantize:
+        return SparseTensor(vals.astype(x.dtype), idx, n=n, m=m, k_dense=k)
+    amax = jnp.max(jnp.abs(vals), axis=-2, keepdims=True)
+    scale = jnp.where(amax > 0.0, amax / QMAX, 1.0)
+    q = jnp.clip(jnp.round(vals / scale), -QMAX, QMAX).astype(jnp.int8)
+    return SparseTensor(q, idx, scale, n=n, m=m, k_dense=k)
+
+
+def densify(st: SparseTensor, dtype=jnp.float32):
+    return st.densify(dtype)
+
+
+def prune_params(params, n: int = 2, m: int = 4, *,
+                 quantize: bool = False):
+    """Swap every `models.layers.dense` weight for its SparseTensor.
+
+    Same targeting as `quant.quantize_params`: dicts shaped
+    `{"w": <float array, ndim >= 2>}` EXCEPT under `SKIP_KEYS` (weights
+    consumed by a raw `@`).  MoE expert stacks, norms, biases, conv
+    filters and embeddings keep their dtype.  `quantize=True` composes
+    sparse×int8: kept values stored int8 with per-channel scales."""
+
+    def walk(node, skip: bool):
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                child_skip = skip or k in SKIP_KEYS
+                if (k == "w" and not skip
+                        and hasattr(v, "ndim") and v.ndim >= 2
+                        and jnp.issubdtype(v.dtype, jnp.floating)):
+                    out[k] = sparsify(v, n, m, quantize=quantize)
+                else:
+                    out[k] = walk(v, child_skip)
+            return out
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v, skip) for v in node)
+        return node
+
+    return walk(params, False)
+
+
+def densify_params(params, dtype=jnp.float32):
+    """The densified oracle: every SparseTensor scattered back to a
+    dense array (pruned positions zero), everything else untouched —
+    serving it plain must match serving the sparse original exactly."""
+    return jax.tree.map(
+        lambda leaf: leaf.densify(dtype)
+        if isinstance(leaf, SparseTensor) else leaf,
+        params, is_leaf=lambda leaf: isinstance(leaf, SparseTensor))

@@ -51,12 +51,26 @@ class TrainConfig:
     # way into the MXU while the dispatch-layer VJP keeps cotangents in
     # the float compute dtype (quantization-aware training posture).
     quantize: bool = False
+    # structured-sparsity plane (ISSUE 8): "N:M" (e.g. "2:4") upgrades
+    # kernel_backend to its sparse sibling; train with
+    # `sparse.prune_params` weights — the dispatch-layer VJP sends dense
+    # cotangents to the activations and masked cotangents to the kept
+    # values (pruned positions get exactly zero gradient, the mask
+    # stays frozen: the sparse QAT posture).
+    sparsity: str | None = None
 
     def __post_init__(self):
         if self.quantize:
             object.__setattr__(
                 self, "kernel_backend",
                 engine_mod.int8_sibling(self.kernel_backend))
+        if self.sparsity is not None:
+            from repro.sparse import parse_sparsity
+
+            parse_sparsity(self.sparsity)  # validate "N:M" early
+            object.__setattr__(
+                self, "kernel_backend",
+                engine_mod.sparse_sibling(self.kernel_backend))
 
 
 def init_state(key, cfg: ArchConfig, tcfg: TrainConfig) -> dict:

@@ -1,0 +1,539 @@
+"""The N:M structured-sparsity plane (ISSUE 8): round-trip properties,
+the sparse GEMM backends, the VJP masking posture, engine density
+keying, sparse×int8 composition, sharding/scan pytree behavior, and
+pruned-vs-densified scheduler parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro import engine as engine_mod
+from repro.configs import get_config
+from repro.kernels import sparse_gemm as sg
+from repro.models import transformer as T
+from repro.models.layers import dense
+from repro.quant import QuantizedTensor, tree_bytes
+from repro.serve_lib import serve as serve_lib
+from repro.serve_lib.scheduler import Request, Scheduler
+from repro.sparse import (SparseTensor, densify, densify_params,
+                          parse_sparsity, prune_params, sparsify)
+
+
+# --------------------------------------------------------------------------
+# N:M round-trip properties (satellite: property tests)
+# --------------------------------------------------------------------------
+
+
+@settings(max_examples=20)
+@given(st.integers(1, 12), st.integers(1, 24), st.integers(0, 2**31 - 1),
+       st.sampled_from([(1, 2), (2, 4), (1, 4), (4, 8)]))
+def test_sparsify_roundtrip_properties(groups, n_cols, seed, nm):
+    """prune -> densify preserves the kept values exactly, zeros at
+    least M-N positions per group, and keeps the N largest magnitudes
+    (ties broken toward the earlier row: stable argsort)."""
+    n, m = nm
+    k = groups * m
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(k, n_cols)).astype(np.float32)
+    st_ = sparsify(jnp.asarray(w), n, m)
+    assert st_.values.shape == (groups * n, n_cols)
+    assert st_.indices.dtype == jnp.int8
+    assert st_.shape == (k, n_cols) and st_.density == n / m
+    d = np.asarray(st_.densify())
+    wg = w.reshape(groups, m, n_cols)
+    dg = d.reshape(groups, m, n_cols)
+    for g in range(groups):
+        for c in range(n_cols):
+            kept = np.flatnonzero(dg[g, :, c])
+            assert len(kept) <= n
+            # kept entries reproduce the source exactly
+            np.testing.assert_array_equal(dg[g, kept, c], wg[g, kept, c])
+            # magnitude property: nothing pruned beats the kept minimum
+            pruned = np.setdiff1d(np.arange(m), kept)
+            if len(kept) == n and len(pruned):
+                assert np.abs(wg[g, pruned, c]).min() <= \
+                    np.abs(wg[g, kept, c]).min() + 1e-7
+            assert len(pruned) >= m - n
+
+
+@settings(max_examples=15)
+@given(st.integers(1, 8), st.integers(1, 16), st.integers(0, 2**31 - 1))
+def test_sparsify_idempotent_on_already_sparse(groups, n_cols, seed):
+    """densify(sparsify(.)) is a fixed point: re-pruning an already
+    2:4-sparse matrix reproduces it bit-for-bit."""
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(groups * 4, n_cols)).astype(np.float32)
+    d1 = densify(sparsify(jnp.asarray(w), 2, 4))
+    d2 = densify(sparsify(d1, 2, 4))
+    np.testing.assert_array_equal(np.asarray(d1), np.asarray(d2))
+
+
+def test_sparsify_pads_ragged_k():
+    """K not a multiple of M zero-pads the tail group; densify slices
+    back to the dense K."""
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(10, 6)), jnp.float32)  # 10 % 4 != 0
+    st_ = sparsify(w, 2, 4)
+    assert st_.k_dense == 10 and st_.values.shape == (6, 6)
+    assert st_.densify().shape == (10, 6)
+
+
+def test_parse_sparsity_validates():
+    assert parse_sparsity("2:4") == (2, 4)
+    assert parse_sparsity("1:2") == (1, 2)
+    for bad in ("4:2", "0:4", "2:2", "2-4", "2:", "a:b"):
+        with pytest.raises(ValueError):
+            parse_sparsity(bad)
+
+
+def test_quantized_sparsify_stores_int8_with_scales():
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.normal(size=(16, 8)), jnp.float32)
+    st_ = sparsify(w, 2, 4, quantize=True)
+    assert st_.quantized and st_.values.dtype == jnp.int8
+    assert st_.scale.shape == (1, 8)
+    rel = float(jnp.max(jnp.abs(st_.densify() - densify(sparsify(w, 2, 4))))
+                / jnp.max(jnp.abs(w)))
+    assert rel < 0.02  # int8 rounding only
+
+
+# --------------------------------------------------------------------------
+# The sparse GEMM backends: bit-exactness
+# --------------------------------------------------------------------------
+
+
+def test_sparse_gemm_pallas_matches_xla_bit_exact():
+    rng = np.random.default_rng(2)
+    a = jnp.asarray(rng.normal(size=(48, 256)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(256, 128)), jnp.float32)
+    st_ = sparsify(w, 2, 4)
+    y_x = sg.sparse_gemm(a, st_.values, st_.indices, n_keep=2, m_group=4,
+                         use_pallas=False)
+    y_p = sg.sparse_gemm(a, st_.values, st_.indices, n_keep=2, m_group=4,
+                         use_pallas=True, interpret=True)
+    np.testing.assert_array_equal(np.asarray(y_x), np.asarray(y_p))
+    # and both ARE the dense matmul over the densified weight (f32)
+    np.testing.assert_array_equal(np.asarray(y_x),
+                                  np.asarray(a @ st_.densify()))
+
+
+def test_sparse_gemm_quantized_pallas_matches_xla_bit_exact():
+    rng = np.random.default_rng(3)
+    a = jnp.asarray(rng.normal(size=(24, 64)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(64, 32)), jnp.float32)
+    st_ = sparsify(w, 2, 4, quantize=True)
+    y_x = sg.sparse_gemm(a, st_.values, st_.indices, st_.scale,
+                         n_keep=2, m_group=4, use_pallas=False)
+    y_p = sg.sparse_gemm(a, st_.values, st_.indices, st_.scale,
+                         n_keep=2, m_group=4, use_pallas=True,
+                         interpret=True)
+    np.testing.assert_array_equal(np.asarray(y_x), np.asarray(y_p))
+
+
+def test_sparse_gemm_ragged_shapes_pad_correctly():
+    """Non-block-multiple M/N and ragged K still agree with the
+    densified reference on both backends."""
+    rng = np.random.default_rng(4)
+    a = jnp.asarray(rng.normal(size=(13, 44)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(44, 21)), jnp.float32)
+    st_ = sparsify(w, 2, 4)
+    ref = np.asarray(a @ st_.densify())
+    for use_pallas in (False, True):
+        y = sg.sparse_gemm(a, st_.values, st_.indices, n_keep=2, m_group=4,
+                           use_pallas=use_pallas, interpret=True)
+        np.testing.assert_allclose(np.asarray(y), ref, rtol=1e-6, atol=1e-5)
+
+
+def test_sparse_backends_registered_and_dispatch():
+    reg = engine_mod.default_registry()
+    for b in engine_mod.SPARSE_BACKENDS:
+        assert b in reg.backends()
+        assert "gemm_sparse" in reg.ops(b)
+        assert "gemm" in reg.ops(b)  # skip-listed weights stay dense
+    rng = np.random.default_rng(5)
+    a = jnp.asarray(rng.normal(size=(16, 32)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(32, 16)), jnp.float32)
+    st_ = sparsify(w, 2, 4)
+    outs = {}
+    for b in engine_mod.SPARSE_BACKENDS:
+        with engine_mod.use_engine(backend=b) as eng:
+            assert eng.sparse
+            outs[b] = np.asarray(eng.sparse_matmul(a, st_))
+    np.testing.assert_array_equal(outs["pallas-tpu-sparse"],
+                                  outs["xla-sparse"])
+
+
+# --------------------------------------------------------------------------
+# VJP masking posture
+# --------------------------------------------------------------------------
+
+
+def test_sparse_vjp_masks_pruned_weight_grads():
+    """Activation cotangents match the dense oracle exactly; value
+    cotangents are the dense weight grad GATHERED at the kept indices —
+    scattered back to dense, every pruned position is exactly zero."""
+    rng = np.random.default_rng(6)
+    a = jnp.asarray(rng.normal(size=(16, 48)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(48, 24)), jnp.float32)
+    st_ = sparsify(w, 2, 4)
+
+    with engine_mod.use_engine(backend="xla-sparse") as eng:
+        def loss(a_, v_):
+            st2 = SparseTensor(v_, st_.indices, n=2, m=4,
+                               k_dense=st_.k_dense)
+            return jnp.sum(eng.sparse_matmul(a_, st2) ** 2)
+        da, dv = jax.grad(loss, argnums=(0, 1))(a, st_.values)
+
+    wd = st_.densify()
+    da_ref, dw_ref = jax.grad(
+        lambda a_, w_: jnp.sum((a_ @ w_) ** 2), argnums=(0, 1))(a, wd)
+    np.testing.assert_allclose(np.asarray(da), np.asarray(da_ref),
+                               rtol=1e-5, atol=1e-5)
+    # scatter dv to dense: pruned positions exactly zero, kept match
+    dv_dense = np.asarray(densify(
+        SparseTensor(dv, st_.indices, n=2, m=4, k_dense=st_.k_dense)))
+    mask = np.asarray(wd) != 0
+    assert (dv_dense[~mask] == 0).all()
+    np.testing.assert_allclose(dv_dense[mask], np.asarray(dw_ref)[mask],
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_sparse_int8_vjp_is_activation_only():
+    """sparse×int8: int8 storage is data, not a trainable leaf — the
+    activation grad is the only cotangent, close to the float oracle."""
+    rng = np.random.default_rng(7)
+    a = jnp.asarray(rng.normal(size=(8, 32)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(32, 16)), jnp.float32)
+    st_ = sparsify(w, 2, 4, quantize=True)
+
+    with engine_mod.use_engine(backend="xla-sparse") as eng:
+        da = jax.grad(
+            lambda a_: jnp.sum(eng.sparse_matmul(a_, st_) ** 2))(a)
+    da_ref = jax.grad(
+        lambda a_: jnp.sum((a_ @ st_.densify()) ** 2))(a)
+    denom = float(jnp.max(jnp.abs(da_ref)))
+    assert float(jnp.max(jnp.abs(da - da_ref))) / denom < 1e-5
+
+
+# --------------------------------------------------------------------------
+# Engine density keying + cost-model awareness
+# --------------------------------------------------------------------------
+
+
+def test_density_is_part_of_the_decision_cache_key():
+    r_dense = engine_mod.KernelRequest("gemm", 64, 256, 64)
+    r_sparse = engine_mod.KernelRequest("gemm_sparse", 64, 256, 64,
+                                        density=0.5)
+    assert r_dense.key() != r_sparse.key()
+    plan = engine_mod.ExecutionPlan()
+    model = engine_mod.TPUModel()
+    plan.add(r_dense, model.decide(r_dense))
+    assert plan.lookup(r_sparse) is None  # sparse never reuses dense
+    # different densities key apart too (1:4 vs 2:4)
+    r_q = engine_mod.KernelRequest("gemm_sparse", 64, 256, 64, density=0.25)
+    plan.add(r_sparse, model.decide(r_sparse))
+    assert plan.lookup(r_q) is None
+
+
+def test_density_survives_plan_json_roundtrip(tmp_path):
+    plan = engine_mod.ExecutionPlan()
+    model = engine_mod.TPUModel()
+    req = engine_mod.KernelRequest("gemm_sparse", 32, 128, 64, density=0.5)
+    plan.add(req, model.decide(req))
+    p = tmp_path / "plan.json"
+    plan.save(p)
+    loaded = engine_mod.ExecutionPlan.load(p)
+    assert loaded.lookup(req) is not None
+
+
+def test_kernel_request_rejects_bad_density():
+    with pytest.raises(ValueError):
+        engine_mod.KernelRequest("gemm_sparse", 8, 8, 8, density=0.0)
+    with pytest.raises(ValueError):
+        engine_mod.KernelRequest("gemm_sparse", 8, 8, 8, density=1.5)
+
+
+def test_tpu_model_ranks_sparse_above_dense():
+    model = engine_mod.TPUModel()
+    dense_d = model.decide(engine_mod.KernelRequest("gemm", 256, 2048, 512))
+    sparse_d = model.decide(
+        engine_mod.KernelRequest("gemm_sparse", 256, 2048, 512, density=0.5))
+    assert sparse_d.seconds < dense_d.seconds
+    meta = dict(sparse_d.meta)
+    assert meta["density"] == 0.5 and meta["k_effective"] == 1024
+
+
+def test_asic_mapper_ranks_sparse_above_dense():
+    model = engine_mod.AnalyticalCostModel()
+    dense_d = model.decide(engine_mod.KernelRequest("gemm", 49, 2048, 512))
+    sparse_d = model.decide(
+        engine_mod.KernelRequest("gemm_sparse", 49, 2048, 512, density=0.5))
+    assert sparse_d.seconds < dense_d.seconds
+
+
+def test_sparse_int8_storage_keys_at_one_byte():
+    rng = np.random.default_rng(8)
+    a = jnp.asarray(rng.normal(size=(8, 32)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(32, 16)), jnp.float32)
+    with engine_mod.use_engine(backend="xla-sparse") as eng:
+        eng.sparse_matmul(a, sparsify(w, 2, 4))
+        eng.sparse_matmul(a, sparsify(w, 2, 4, quantize=True))
+    by_bytes = {req.in_bytes for req, _ in eng.plan}
+    assert by_bytes == {4, 1}  # float sparse at f32 width, ×int8 at 1
+
+
+def test_decode_requests_sparse_weights():
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    reqs = engine_mod.decode_requests(cfg, batch=2, sparse_weights=True,
+                                      density=0.5, dtype_bytes=4)
+    sparse_ops = [r for r in reqs if r.op == "gemm_sparse"]
+    assert sparse_ops and all(r.density == 0.5 for r in sparse_ops)
+    # dense posture emits no sparse ops
+    reqs_d = engine_mod.decode_requests(cfg, batch=2, dtype_bytes=4)
+    assert not [r for r in reqs_d if r.op == "gemm_sparse"]
+    # sparse×int8: the compressed stream moves at one byte
+    reqs_q = engine_mod.decode_requests(cfg, batch=2, sparse_weights=True,
+                                        density=0.5, quantized_weights=True,
+                                        dtype_bytes=4)
+    assert all(r.in_bytes == 1 for r in reqs_q if r.op == "gemm_sparse")
+
+
+# --------------------------------------------------------------------------
+# sparse×int8 composition
+# --------------------------------------------------------------------------
+
+
+def test_sparse_int8_composition_close_to_float_sparse():
+    rng = np.random.default_rng(9)
+    a = jnp.asarray(rng.normal(size=(16, 64)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(64, 32)), jnp.float32)
+    ref = np.asarray(a @ densify(sparsify(w, 2, 4)))
+    st_q = sparsify(w, 2, 4, quantize=True)
+    outs = {}
+    for b in engine_mod.SPARSE_BACKENDS:
+        with engine_mod.use_engine(backend=b) as eng:
+            outs[b] = np.asarray(eng.sparse_matmul(a, st_q))
+    np.testing.assert_array_equal(outs["pallas-tpu-sparse"],
+                                  outs["xla-sparse"])
+    denom = np.max(np.abs(ref))
+    assert np.max(np.abs(outs["xla-sparse"] - ref)) / denom < 0.03
+
+
+def test_prune_params_quantize_composes():
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    sp = prune_params(params, 2, 4, quantize=True)
+    leaves = [x for x in jax.tree.leaves(
+        sp, is_leaf=lambda x: isinstance(x, SparseTensor))
+        if isinstance(x, SparseTensor)]
+    assert leaves and all(st_.quantized for st_ in leaves)
+    assert tree_bytes(sp) < tree_bytes(prune_params(params, 2, 4))
+
+
+# --------------------------------------------------------------------------
+# Config knobs
+# --------------------------------------------------------------------------
+
+
+def test_serve_config_sparsity_knob_upgrades_backend():
+    scfg = serve_lib.ServeConfig(max_seq=8, batch=1, sparsity="2:4")
+    assert scfg.kernel_backend == "xla-sparse"
+    scfg = serve_lib.ServeConfig(max_seq=8, batch=1, sparsity="2:4",
+                                 kernel_backend="pallas-tpu")
+    assert scfg.kernel_backend == "pallas-tpu-sparse"
+    # sparse subsumes int8 when both knobs are set (ordering matters)
+    scfg = serve_lib.ServeConfig(max_seq=8, batch=1, sparsity="2:4",
+                                 quantize=True)
+    assert scfg.kernel_backend == "xla-sparse"
+    with pytest.raises(ValueError, match="cannot upgrade"):
+        serve_lib.ServeConfig(max_seq=8, batch=1, sparsity="2:4",
+                              kernel_backend="simulator")
+    with pytest.raises(ValueError):
+        serve_lib.ServeConfig(max_seq=8, batch=1, sparsity="4:2")
+
+
+def test_train_config_sparsity_knob():
+    from repro.train_lib.train import TrainConfig
+    tcfg = TrainConfig(sparsity="2:4")
+    assert tcfg.kernel_backend == "xla-sparse"
+    with pytest.raises(ValueError):
+        TrainConfig(sparsity="nope")
+
+
+# --------------------------------------------------------------------------
+# prune_params: targets, skips, pytree behavior
+# --------------------------------------------------------------------------
+
+
+def test_prune_params_targets_dense_and_skips_like_quantize():
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    sp = prune_params(params, 2, 4)
+    blk = sp["stack"]["b0"]
+    assert isinstance(blk["attn"]["wq"]["w"], SparseTensor)
+    assert isinstance(blk["mlp"]["wi"]["w"], SparseTensor)
+    assert not isinstance(sp["embed"], SparseTensor)
+
+    moe_cfg = get_config("granite-moe-1b-a400m", smoke=True)
+    sp_moe = prune_params(T.init_params(jax.random.PRNGKey(0), moe_cfg), 2, 4)
+    moe_blk = sp_moe["stack"]["b0"]["moe"]
+    assert not isinstance(moe_blk["router"]["w"], SparseTensor)
+    assert not isinstance(moe_blk["experts"]["wi"], SparseTensor)
+
+    ssm_cfg = get_config("mamba2-780m", smoke=True)
+    sp_ssm = prune_params(T.init_params(jax.random.PRNGKey(0), ssm_cfg), 2, 4)
+    ssm_p = sp_ssm["stack"]["b0"]["ssm"]
+    assert not isinstance(ssm_p["in_proj"]["w"], SparseTensor)
+    assert not isinstance(ssm_p["out_proj"]["w"], SparseTensor)
+
+
+def test_sparse_tensor_scans_like_a_param_leaf():
+    """lax.scan must slice a stacked SparseTensor per period exactly
+    like a raw stacked weight (the transformer scan contract)."""
+    rng = np.random.default_rng(10)
+    w = jnp.asarray(rng.normal(size=(3, 16, 8)), jnp.float32)
+    st_ = sparsify(w, 2, 4)
+    assert st_.shape == (3, 16, 8)
+
+    def body(c, sl):
+        assert sl.values.shape == (8, 8)
+        return c, sl.densify()
+
+    _, outs = jax.lax.scan(body, 0, st_)
+    np.testing.assert_allclose(np.asarray(outs), np.asarray(st_.densify()),
+                               rtol=1e-6)
+
+
+def test_sharding_places_indices_with_values():
+    """dist.sharding resolves identical PartitionSpecs for a pruned
+    leaf's values and indices (shape-driven rules, integer child
+    paths), so index metadata shards alongside the values it decodes."""
+    from repro.dist import sharding as shd
+    from repro.launch.mesh import make_test_mesh
+
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    sp = prune_params(params, 2, 4)
+    mesh = make_test_mesh()
+    pspecs = shd.params_pspecs(sp, mesh)
+
+    flat_s = jax.tree_util.tree_flatten_with_path(pspecs)[0]
+    by_path = {tuple(str(k) for k in path): spec
+               for path, spec in flat_s}
+    checked = 0
+    for keys in by_path:
+        # SparseTensor children flatten as (values, indices, scale)
+        # under FlattenedIndexKey paths "[<flat index i>]"
+        if keys[-1] == "[<flat index 1>]":  # an indices child
+            values_key = keys[:-1] + ("[<flat index 0>]",)
+            assert by_path[keys] == by_path[values_key], keys
+            checked += 1
+    assert checked > 0
+
+
+# --------------------------------------------------------------------------
+# layers.dense dispatch + scheduler parity
+# --------------------------------------------------------------------------
+
+
+def test_dense_densifies_outside_sparse_engine():
+    rng = np.random.default_rng(11)
+    p = {"w": jnp.asarray(rng.normal(size=(32, 16)), jnp.float32)}
+    x = jnp.asarray(rng.normal(size=(4, 32)), jnp.float32)
+    sp = {"w": sparsify(p["w"], 2, 4)}
+    ref = np.asarray(x @ np.asarray(sp["w"].densify()))
+    out = np.asarray(dense(sp, x))  # no engine: densified float matmul
+    np.testing.assert_allclose(out, ref, rtol=1e-6, atol=1e-6)
+    with engine_mod.use_engine(backend="xla-einsum"):  # float engine
+        out2 = np.asarray(dense(sp, x))
+    np.testing.assert_allclose(out2, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_dense_dispatches_gemm_sparse_on_sparse_engine():
+    rng = np.random.default_rng(12)
+    p = {"w": sparsify(jnp.asarray(rng.normal(size=(32, 16)), jnp.float32),
+                       2, 4),
+         "b": jnp.zeros((16,), jnp.float32)}
+    x = jnp.asarray(rng.normal(size=(4, 32)), jnp.float32)
+    with engine_mod.use_engine(backend="xla-sparse") as eng:
+        out = dense(p, x)
+    assert {req.op for req, _ in eng.plan} == {"gemm_sparse"}
+    assert out.shape == (4, 16)
+
+
+TRACE = [(6, 8), (10, 2), (6, 5), (14, 9), (10, 3), (6, 7), (14, 2), (10, 6)]
+
+
+def _mk_requests(cfg):
+    rng = np.random.default_rng(0)
+    return [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab, p).astype(np.int32),
+                    max_new_tokens=g)
+            for i, (p, g) in enumerate(TRACE)]
+
+
+def test_scheduler_sparse_greedy_parity_vs_densified_oracle():
+    """A pruned model on the sparse engine serves the smoke trace with
+    EXACTLY the densified oracle's greedy tokens — the float sparse
+    path is the same matmul by construction (bit-exact kernel)."""
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    sp = prune_params(params, 2, 4)
+    oracle = densify_params(sp)
+    max_seq = max(p + g for p, g in TRACE) + 1
+
+    scfg_sp = serve_lib.ServeConfig(max_seq=max_seq, batch=3,
+                                    compute_dtype=jnp.float32,
+                                    sparsity="2:4")
+    scfg_dn = serve_lib.ServeConfig(max_seq=max_seq, batch=3,
+                                    compute_dtype=jnp.float32)
+    got = Scheduler(sp, cfg, scfg_sp).run(_mk_requests(cfg))
+    ref = Scheduler(oracle, cfg, scfg_dn).run(_mk_requests(cfg))
+    assert set(got) == set(ref)
+    for uid in ref:
+        np.testing.assert_array_equal(got[uid].tokens, ref[uid].tokens,
+                                      err_msg=f"request {uid}")
+
+
+def test_plan_arch_sparse_weights_warm_serve_no_new_misses():
+    """plan_arch(..., sparse_weights=True) pre-decides every shape a
+    pruned server dispatches: replaying the trace logs zero new misses
+    after warm-up."""
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    sp = prune_params(params, 2, 4)
+    max_seq = max(p + g for p, g in TRACE) + 1
+    scfg = serve_lib.ServeConfig(max_seq=max_seq, batch=3,
+                                 compute_dtype=jnp.float32, sparsity="2:4")
+    bucket = 8
+    width = -(-max(p for p, _ in TRACE) // bucket) * bucket
+    plan = engine_mod.plan_arch(
+        cfg, seq_len=width, decode_batch=3,
+        admit_widths=tuple(range(bucket, width + 1, bucket)),
+        backend=scfg.kernel_backend, sparse_weights=True, dtype_bytes=4)
+    eng = engine_mod.Engine(backend=scfg.kernel_backend, plan=plan)
+    sched = Scheduler(sp, cfg, scfg, engine=eng, prefill_bucket=bucket)
+    for r in _mk_requests(cfg):
+        sched.submit(r)
+    for _ in range(3):
+        sched.step()
+    warm = dict(plan.stats)
+    while sched.queue or sched.n_active:
+        sched.step()
+    final = dict(plan.stats)
+    assert final["misses"] - warm["misses"] == 0
+    assert "gemm_sparse" in {req.op for req, _ in plan}
+
+
+def test_quantized_tensor_not_confused_with_sparse():
+    """The two wrapped-leaf planes coexist: prune_params leaves
+    QuantizedTensor construction to quantize_params and vice versa."""
+    assert not issubclass(SparseTensor, QuantizedTensor)
+    rng = np.random.default_rng(13)
+    w = jnp.asarray(rng.normal(size=(16, 8)), jnp.float32)
+    st_ = sparsify(w, 2, 4)
+    assert isinstance(st_, SparseTensor)
+    assert not isinstance(st_, QuantizedTensor)
