@@ -60,7 +60,8 @@ def _bench_mapper_suite(traces: dict, results: list, parity: dict) -> list[float
         t_s = time.perf_counter() - t0
         div = max(
             abs(db.report.cycles - ds.report.cycles) / ds.report.cycles
-            for db, ds in zip(batched.decisions, scalar.decisions))
+            for db, ds in zip(batched.decisions, scalar.decisions,
+                              strict=True))
         speedups.append(t_s / t_b)
         parity[name] = div
         results.append(_row(f"mapper/{name}", t_b * 1e6 / len(gemms), t_s / t_b))

@@ -59,7 +59,7 @@ def main() -> list[str]:
         rows.append(csv_row(f"fig18.{name}@128", t.us if name == "ReDas-MD" else 0,
                             f"{r[128][name]:.2f}x (paper ~{p}x)"))
     trend = all(r[s]["ReDas-Both"] <= r[n]["ReDas-Both"] + 0.3
-                for s, n in zip(SIZES, SIZES[1:]))
+                for s, n in zip(SIZES, SIZES[1:], strict=False))
     rows.append(csv_row("fig18.rising_trend_with_size", 0,
                         f"{[round(r[s]['ReDas-Both'], 2) for s in SIZES]} "
                         f"monotone~{trend}"))

@@ -61,7 +61,7 @@ def make_trace(smoke: bool) -> tuple[int, list[tuple[int, int]]]:
         pool = 4
         lens = [8, 16, 8, 24, 16, 8, 24, 16, 8, 12, 12, 16, 8, 24, 12, 8]
         gens = [24, 4, 12, 20, 6, 28, 4, 16, 8, 24, 4, 12, 20, 6, 28, 10]
-    return pool, list(zip(lens, gens))
+    return pool, list(zip(lens, gens, strict=True))
 
 
 def make_shared_trace(smoke: bool) -> tuple[int, int, int, list[tuple[int, int]]]:
@@ -78,7 +78,7 @@ def make_shared_trace(smoke: bool) -> tuple[int, int, int, list[tuple[int, int]]
         pool, page, prefix = 4, 16, 448
         sufs = [5, 8, 6, 7, 5, 8, 6, 5, 7, 8, 6, 5, 8, 7, 6, 5]
         gens = [3, 2, 4, 2, 3, 2, 4, 3, 2, 3, 2, 4, 2, 3, 4, 2]
-    return pool, page, prefix, list(zip(sufs, gens))
+    return pool, page, prefix, list(zip(sufs, gens, strict=True))
 
 
 def _build(arch: str, pool: int, max_seq: int, backend=None):

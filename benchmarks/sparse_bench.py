@@ -168,7 +168,7 @@ def _agreement(base_toks: dict, toks: dict) -> dict:
     for uid, tb in base_toks.items():
         tq = toks[uid]
         n = min(len(tb), len(tq))
-        agree += sum(a == b for a, b in zip(tb[:n], tq[:n]))
+        agree += sum(a == b for a, b in zip(tb[:n], tq[:n], strict=True))
         total += n
         exact += int(tb == tq)
     return {"exact_requests": exact, "requests": len(base_toks),

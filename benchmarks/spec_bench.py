@@ -54,7 +54,7 @@ def make_trace(smoke: bool) -> tuple[int, list[tuple[int, int]]]:
         pool = 4
         lens = [8, 12, 8, 16, 12, 8, 16, 12, 8, 12]
         gens = [32, 24, 40, 28, 36, 24, 32, 40, 28, 36]
-    return pool, list(zip(lens, gens))
+    return pool, list(zip(lens, gens, strict=True))
 
 
 def run_engine_posture_spec(arch, pool, max_seq, trace, bucket, k, draft):

@@ -1,0 +1,147 @@
+"""Static invariant checker for kernels, plans, sharding, and jit use.
+
+ReDas's mapper story (Sec. 4.3) is that configuration legality — the
+Eq. 2-5 constraints — is decidable *before* execution.  The same holds
+for this repo's execution stack, and this package checks it at lint
+time instead of TPU time.  Four passes (DESIGN.md §11):
+
+  kernel-legality   Pallas tile floors, the Eq. 2 VMEM gate, and
+                    grid/index_map rank consistency, re-derived from the
+                    registered block ladders across the full
+                    `arch_gemms` corpus (10 configs x float/int8/sparse).
+  plan-coverage     `plan_arch` pre-declares a superset of every shape
+                    the continuous-batching scheduler can request —
+                    admit-width buckets, the k+1 verify width, the paged
+                    gather shape — so "zero steady-state misses" is a
+                    theorem, not a bench observation.
+  sharding-rules    every param leaf and cache leaf matches exactly one
+                    `_auto_spec` / `_CACHE_AXES` rule (orphans and
+                    ambiguous double-matches are the silently-replicated
+                    -leaf failure mode).
+  jit-discipline    AST scan for per-call `jax.jit` construction,
+                    Python `if` on traced values, and module-level
+                    jitted closures over mutable globals.
+
+Stdlib-only at the import surface, like `benchmarks/check_baselines.py`:
+the passes import only the jax-free half of the repo (engine planning,
+configs, core cost models) so the whole CLI runs in the lint lane with
+no jax installed.  Findings that are intentional live in
+`allowlist.txt` next to this module, one line each with a justification.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+
+#: the installed repro package directory — passes analyse the tree under
+#: a --root (tests point it at planted fixtures); dynamic checks that
+#: need importable code only run when root IS the real package.
+REAL_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def is_real_root(root: str) -> bool:
+    return os.path.abspath(root) == REAL_ROOT
+
+
+def rel(path: str) -> str:
+    """Repo-relative spelling for findings/allowlist entries: stable
+    across checkouts when the file lives under the repo root (the
+    grandparent of src/repro), cwd-relative otherwise (fixtures)."""
+    path = os.path.abspath(path)
+    repo = os.path.dirname(os.path.dirname(REAL_ROOT))
+    for base in (repo, os.getcwd()):
+        if path.startswith(base + os.sep):
+            return os.path.relpath(path, base)
+    return path
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation: a stable identity (for the allowlist) plus a
+    file:line anchor (for editors and `--format=github` annotations)."""
+
+    check_id: str   # e.g. "KL002"
+    file: str       # repo-relative path
+    line: int
+    symbol: str     # stable anchor: function / rule / config name
+    message: str
+
+    @property
+    def ident(self) -> str:
+        """The allowlist key: path + symbol, no line number — so an
+        unrelated edit shifting lines does not invalidate entries."""
+        return f"{self.check_id} {self.file}::{self.symbol}"
+
+    def text(self) -> str:
+        return f"{self.file}:{self.line}: {self.check_id} [{self.symbol}] {self.message}"
+
+    def github(self) -> str:
+        # '%0A'-style escaping is only needed for newlines; messages are
+        # single-line by construction.
+        return (f"::error file={self.file},line={self.line},"
+                f"title={self.check_id}::[{self.symbol}] {self.message}")
+
+
+DEFAULT_ALLOWLIST = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                 "allowlist.txt")
+
+
+def load_allowlist(path: str | None = DEFAULT_ALLOWLIST) -> dict[str, str]:
+    """Parse the committed allowlist: one entry per line,
+
+        CHECKID path::symbol -- one-line justification
+
+    Returns {ident: justification}.  A missing justification is itself
+    an error (raised, not a finding: the allowlist is hand-maintained
+    and a silent bad line would un-suppress nothing visibly)."""
+    if path is None or not os.path.exists(path):
+        return {}
+    entries: dict[str, str] = {}
+    with open(path) as fh:
+        for ln, line in enumerate(fh, 1):
+            line = line.strip()
+            if not line or line.startswith("#"):
+                continue
+            parts = line.split(None, 2)
+            if len(parts) < 3 or "::" not in parts[1]:
+                raise ValueError(
+                    f"{path}:{ln}: malformed allowlist entry {line!r} "
+                    f"(want: 'CHECKID path::symbol -- justification')")
+            ident = f"{parts[0]} {parts[1]}"
+            just = parts[2].lstrip("-— ").strip()
+            if not just:
+                raise ValueError(
+                    f"{path}:{ln}: allowlist entry {ident!r} has no "
+                    f"justification — every suppression must say why")
+            entries[ident] = just
+    return entries
+
+
+def run_passes(root: str | None = None,
+               passes: tuple[str, ...] | None = None) -> list[Finding]:
+    """Run the selected passes over `root` (default: the real package)
+    and return every finding, allowlisted or not."""
+    from . import (jit_discipline, kernel_legality, plan_coverage,
+                   sharding_rules)
+
+    table = {
+        "kernel-legality": kernel_legality.run,
+        "plan-coverage": plan_coverage.run,
+        "sharding-rules": sharding_rules.run,
+        "jit-discipline": jit_discipline.run,
+    }
+    root = REAL_ROOT if root is None else os.path.abspath(root)
+    selected = passes or tuple(table)
+    unknown = [p for p in selected if p not in table]
+    if unknown:
+        raise ValueError(f"unknown pass(es) {unknown}; known: {sorted(table)}")
+    findings: list[Finding] = []
+    for name in selected:
+        findings.extend(table[name](root))
+    return sorted(findings, key=lambda f: (f.file, f.line, f.check_id,
+                                           f.message))
+
+
+PASS_NAMES = ("kernel-legality", "plan-coverage", "sharding-rules",
+              "jit-discipline")

@@ -1,0 +1,78 @@
+"""CLI for the static invariant checker.
+
+    python -m repro.analysis                       # all passes, text
+    python -m repro.analysis --format=github       # CI annotations
+    python -m repro.analysis --passes kernel-legality,jit-discipline
+    python -m repro.analysis --root tests/fixtures/analysis/bad_ladder
+
+Stdlib-only, jax-free (same contract as benchmarks/check_baselines.py):
+the lint lane runs this before any heavyweight test collection.  Exit
+status is the number of unsuppressed findings, capped at 125; unused
+allowlist entries are themselves findings so suppressions cannot rot.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from . import (DEFAULT_ALLOWLIST, PASS_NAMES, Finding, load_allowlist,
+               run_passes)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static invariant checker: kernels, plans, sharding, "
+                    "jit discipline")
+    ap.add_argument("--format", choices=("text", "github"), default="text",
+                    help="finding format (github = workflow annotations)")
+    ap.add_argument("--passes", default=None,
+                    help="comma-separated subset of: " + ", ".join(PASS_NAMES))
+    ap.add_argument("--root", default=None,
+                    help="tree to analyze (default: the installed repro "
+                         "package; dynamic corpus checks only run there)")
+    ap.add_argument("--allowlist", default=None,
+                    help="allowlist file ('-' disables; default: the "
+                         "committed allowlist.txt)")
+    args = ap.parse_args(argv)
+
+    passes = None
+    if args.passes:
+        passes = tuple(p.strip() for p in args.passes.split(",") if p.strip())
+
+    if args.allowlist == "-":
+        allow: dict[str, str] = {}
+    else:
+        allow = load_allowlist(args.allowlist or DEFAULT_ALLOWLIST)
+
+    try:
+        findings = run_passes(root=args.root, passes=passes)
+    except ValueError as e:
+        print(f"FAIL: {e}", file=sys.stderr)
+        return 2
+
+    used: set[str] = set()
+    reported: list[Finding] = []
+    for f in findings:
+        if f.ident in allow:
+            used.add(f.ident)
+            continue
+        reported.append(f)
+    for ident in sorted(set(allow) - used):
+        reported.append(Finding(
+            "AL000", "src/repro/analysis/allowlist.txt", 1, ident,
+            f"allowlist entry {ident!r} suppresses nothing — the "
+            f"violation is gone; delete the entry"))
+
+    for f in reported:
+        print(f.github() if args.format == "github" else f.text())
+    n = len(reported)
+    if n:
+        print(f"FAIL: {n} finding(s) "
+              f"({len(used)} suppressed by allowlist)", file=sys.stderr)
+    return min(n, 125)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,146 @@
+"""Shared AST plumbing for the analysis passes (stdlib only).
+
+The passes work on source text, never imports, for anything that lives
+in a jax-importing module (kernels, sharding, serving) — parsing is the
+only way to stay jax-free.  Helpers here keep that honest: constant
+folding for module-level int constants, name->assignment environments
+per function, and dotted-name rendering.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+
+
+def parse_file(path: str) -> ast.Module | None:
+    if not os.path.exists(path):
+        return None
+    with open(path) as fh:
+        return ast.parse(fh.read(), filename=path)
+
+
+def dotted(node: ast.AST) -> str | None:
+    """'jax.numpy.sum' for an Attribute/Name chain; None otherwise."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def fold_int(node: ast.AST, env: dict[str, int]) -> int | None:
+    """Constant-fold an int expression over known module constants
+    (`16 * 2**20`, `SUBLANE`, ...).  None when not statically an int."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, int) \
+            and not isinstance(node.value, bool):
+        return node.value
+    if isinstance(node, ast.Name):
+        return env.get(node.id)
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        v = fold_int(node.operand, env)
+        return None if v is None else -v
+    if isinstance(node, ast.BinOp):
+        lhs, rhs = fold_int(node.left, env), fold_int(node.right, env)
+        if lhs is None or rhs is None:
+            return None
+        if isinstance(node.op, ast.Add):
+            return lhs + rhs
+        if isinstance(node.op, ast.Sub):
+            return lhs - rhs
+        if isinstance(node.op, ast.Mult):
+            return lhs * rhs
+        if isinstance(node.op, ast.FloorDiv) and rhs:
+            return lhs // rhs
+        if isinstance(node.op, ast.Pow) and rhs >= 0:
+            return lhs ** rhs
+    return None
+
+
+def module_int_constants(tree: ast.Module) -> dict[str, int]:
+    """Module-level `NAME = <int expr>` bindings, including tuple
+    unpacking (`SUBLANE, LANE = 8, 128`), folded in source order."""
+    env: dict[str, int] = {}
+    for stmt in tree.body:
+        if not isinstance(stmt, ast.Assign) or len(stmt.targets) != 1:
+            continue
+        tgt, val = stmt.targets[0], stmt.value
+        if isinstance(tgt, ast.Name):
+            v = fold_int(val, env)
+            if v is not None:
+                env[tgt.id] = v
+        elif isinstance(tgt, ast.Tuple) and isinstance(val, ast.Tuple) \
+                and len(tgt.elts) == len(val.elts):
+            for t, e in zip(tgt.elts, val.elts, strict=True):
+                if isinstance(t, ast.Name):
+                    v = fold_int(e, env)
+                    if v is not None:
+                        env[t.id] = v
+    return env
+
+
+def find_def(tree: ast.AST, name: str) -> ast.FunctionDef | None:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef) and node.name == name:
+            return node
+    return None
+
+
+def def_line(path: str, name: str, default: int = 1) -> int:
+    """Anchor line for a finding about function `name` in `path`."""
+    tree = parse_file(path)
+    if tree is None:
+        return default
+    fn = find_def(tree, name)
+    return fn.lineno if fn is not None else default
+
+
+def assignments_in(fn: ast.AST) -> dict[str, list[ast.AST]]:
+    """name -> every value expression assigned to it inside `fn`
+    (Assign + AugAssign; AugAssign contributes its RHS so `in_specs +=
+    [...]` extends the candidate set instead of replacing it)."""
+    env: dict[str, list[ast.AST]] = {}
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    env.setdefault(tgt.id, []).append(node.value)
+        elif isinstance(node, ast.AugAssign) and isinstance(node.target,
+                                                            ast.Name):
+            env.setdefault(node.target.id, []).append(node.value)
+    return env
+
+
+def resolve(expr: ast.AST, env: dict[str, list[ast.AST]]) -> list[ast.AST]:
+    """An expression, or — when it is a bare Name — every value ever
+    assigned to that name in the enclosing function."""
+    if isinstance(expr, ast.Name) and expr.id in env:
+        return env[expr.id]
+    return [expr]
+
+
+def lambda_arity(fn: ast.Lambda | ast.FunctionDef) -> int:
+    a = fn.args
+    return len(a.posonlyargs) + len(a.args)
+
+
+def return_tuple_len(fn: ast.Lambda | ast.FunctionDef) -> int | None:
+    """Length of the tuple an index map returns, when statically a
+    tuple literal; None otherwise (degrade, never guess)."""
+    if isinstance(fn, ast.Lambda):
+        return len(fn.body.elts) if isinstance(fn.body, ast.Tuple) else None
+    lens = {len(n.value.elts) for n in ast.walk(fn)
+            if isinstance(n, ast.Return) and isinstance(n.value, ast.Tuple)}
+    return lens.pop() if len(lens) == 1 else None
+
+
+def py_files(root: str) -> list[str]:
+    out = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+        out.extend(os.path.join(dirpath, f) for f in filenames
+                   if f.endswith(".py"))
+    return sorted(out)

@@ -1,0 +1,233 @@
+"""Pass 4: jit discipline — retrace/trace bugs as lint findings.
+
+The pre-PR-4 serving path rebuilt `jax.jit(decode_step)` per `generate`
+call: every invocation re-traced, a 50x slowdown nothing but a profiler
+would surface.  The fix (memoized jit factories keyed on the posture)
+is a *pattern*, and patterns are AST-checkable:
+
+  JD001  `jax.jit(...)` (or `functools.partial(jax.jit, ...)`)
+         constructed inside a function whose enclosing-function chain
+         carries no `functools.lru_cache`/`cache` memoization: every
+         call builds a fresh jit wrapper whose trace cache starts
+         empty.  Intentional one-shot drivers go in the allowlist.
+  JD002  a Python `if`/`while`/`assert` whose test calls into
+         `jnp.` / `jax.numpy.` / `jax.lax.`: under jit those produce
+         tracers, and branching on a tracer raises
+         TracerBoolConversionError at trace time (dtype/shape metadata
+         helpers are exempt — they return host values).
+  JD003  a module-level jitted function whose body reads a module-level
+         name bound to a mutable literal (list/dict/set): the closure
+         captures the object at definition time, later mutation
+         invisibly changes (or fails to change) traced behavior.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from . import Finding, rel
+from ._astutil import dotted, py_files
+
+#: jnp/jax.lax attributes that return host metadata, not tracers —
+#: branching on them is ordinary config code.
+_METADATA_FNS = frozenset({
+    "dtype", "issubdtype", "result_type", "promote_types", "can_cast",
+    "finfo", "iinfo", "isdtype", "ndim", "shape",
+})
+
+_CACHE_DECORATORS = frozenset({"lru_cache", "cache"})
+
+
+def _is_jit_call(node: ast.Call) -> bool:
+    name = dotted(node.func)
+    if name in ("jax.jit", "jit", "pjit", "jax.pjit"):
+        return True
+    # functools.partial(jax.jit, ...) delays construction but still
+    # builds a fresh jit per call of the enclosing function.
+    if name in ("functools.partial", "partial") and node.args:
+        return dotted(node.args[0]) in ("jax.jit", "jit", "jax.pjit")
+    return False
+
+
+def _is_cached(fn: ast.FunctionDef) -> bool:
+    for dec in fn.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        name = dotted(target) or ""
+        if name.rsplit(".", 1)[-1] in _CACHE_DECORATORS:
+            return True
+    return False
+
+
+def _traced_test_call(test: ast.AST) -> str | None:
+    """Dotted name of the first tracer-producing call in an if/while/
+    assert test, or None."""
+    for node in ast.walk(test):
+        if not isinstance(node, ast.Call):
+            continue
+        name = dotted(node.func)
+        if not name:
+            continue
+        root_, _, attr = name.partition(".")
+        base, leaf = name.rsplit(".", 1)[0], name.rsplit(".", 1)[-1]
+        if base in ("jnp", "jax.numpy", "jax.lax") \
+                and leaf not in _METADATA_FNS:
+            return name
+    return None
+
+
+class _Scanner:
+    """One file: walks with an explicit enclosing-function stack so
+    decorators are attributed to the OUTER scope (a `@jax.jit` on a
+    module-level def is module-level construction, not 'inside' it)."""
+
+    def __init__(self, path: str, tree: ast.Module):
+        self.path = rel(path)
+        self.tree = tree
+        self.findings: list[Finding] = []
+        # module-level names bound to mutable literals (for JD003)
+        self.mutable_globals: dict[str, int] = {}
+        for stmt in tree.body:
+            if isinstance(stmt, (ast.Assign, ast.AnnAssign)):
+                targets = stmt.targets if isinstance(stmt, ast.Assign) \
+                    else [stmt.target]
+                value = stmt.value
+                if value is not None and self._is_mutable_literal(value):
+                    for tgt in targets:
+                        if isinstance(tgt, ast.Name):
+                            self.mutable_globals[tgt.id] = stmt.lineno
+        self.module_defs = {n.name: n for n in tree.body
+                            if isinstance(n, ast.FunctionDef)}
+
+    @staticmethod
+    def _is_mutable_literal(node: ast.AST) -> bool:
+        if isinstance(node, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                             ast.DictComp, ast.SetComp)):
+            return True
+        if isinstance(node, ast.Call):
+            name = (dotted(node.func) or "").rsplit(".", 1)[-1]
+            return name in ("list", "dict", "set", "defaultdict", "deque")
+        return False
+
+    def scan(self):
+        self._walk(self.tree.body, stack=())
+        self._scan_module_level_jits()
+        return self.findings
+
+    # -- JD001 + JD002 -----------------------------------------------------
+
+    def _walk(self, body, stack):
+        for stmt in body:
+            self._visit(stmt, stack)
+
+    def _visit(self, node: ast.AST, stack):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                self._check_exprs(dec, stack)
+            inner = stack + (node,)
+            self._walk(node.body, inner)
+            return
+        if isinstance(node, (ast.If, ast.While)):
+            self._check_test(node.test, node.lineno, stack)
+        elif isinstance(node, ast.Assert):
+            self._check_test(node.test, node.lineno, stack)
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._visit(child, stack)
+            elif isinstance(child, (ast.stmt,)):
+                self._visit(child, stack)
+            else:
+                self._check_exprs(child, stack)
+
+    def _check_exprs(self, node: ast.AST, stack):
+        for sub in ast.walk(node):
+            if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue  # handled via _visit with its own stack
+            if isinstance(sub, ast.Call) and _is_jit_call(sub):
+                self._jit_site(sub, stack)
+
+    def _check_test(self, test: ast.AST, line: int, stack):
+        name = _traced_test_call(test)
+        if name is not None:
+            enclosing = stack[-1].name if stack else "<module>"
+            self.findings.append(Finding(
+                "JD002", self.path, line, enclosing,
+                f"Python branch tests {name}(...): under jit this is a "
+                f"tracer and the branch raises at trace time — use "
+                f"jnp.where / lax.cond, or hoist to config time"))
+        self._check_exprs(test, stack)
+
+    def _jit_site(self, call: ast.Call, stack):
+        if not stack:
+            return  # module-level construction: once per import (JD003's job)
+        if any(_is_cached(fn) for fn in stack
+               if isinstance(fn, ast.FunctionDef)):
+            return  # memoized factory — the sanctioned pattern
+        enclosing = stack[-1].name
+        self.findings.append(Finding(
+            "JD001", self.path, call.lineno, enclosing,
+            f"jax.jit constructed inside {enclosing}() with no memoized "
+            f"(lru_cache) factory in scope: every call builds a fresh "
+            f"jit whose trace cache starts empty (the pre-PR-4 50x "
+            f"retrace bug)"))
+
+    # -- JD003 -------------------------------------------------------------
+
+    def _scan_module_level_jits(self):
+        jitted: list[tuple[ast.AST, str, int]] = []  # (body src, name, line)
+        for stmt in self.tree.body:
+            if isinstance(stmt, ast.FunctionDef):
+                for dec in stmt.decorator_list:
+                    target = dec.func if isinstance(dec, ast.Call) else dec
+                    name = dotted(target) or ""
+                    is_jit = name in ("jax.jit", "jit", "jax.pjit") or (
+                        isinstance(dec, ast.Call)
+                        and name in ("functools.partial", "partial")
+                        and dec.args
+                        and dotted(dec.args[0]) in ("jax.jit", "jit"))
+                    if is_jit:
+                        jitted.append((stmt, stmt.name, stmt.lineno))
+            elif isinstance(stmt, ast.Assign) and isinstance(
+                    stmt.value, ast.Call) and _is_jit_call(stmt.value):
+                args = stmt.value.args
+                target = args[0] if args else None
+                if isinstance(target, ast.Lambda):
+                    jitted.append((target, _first_target(stmt), stmt.lineno))
+                elif isinstance(target, ast.Name) \
+                        and target.id in self.module_defs:
+                    jitted.append((self.module_defs[target.id],
+                                   _first_target(stmt), stmt.lineno))
+        for body, name, line in jitted:
+            loads = {n.id for n in ast.walk(body)
+                     if isinstance(n, ast.Name)
+                     and isinstance(n.ctx, ast.Load)}
+            captured = sorted(loads & set(self.mutable_globals))
+            if captured:
+                self.findings.append(Finding(
+                    "JD003", self.path, line, name,
+                    f"module-level jitted {name!r} reads mutable "
+                    f"module global(s) {', '.join(captured)}: the trace "
+                    f"captures their value once and later mutation "
+                    f"silently diverges from traced behavior"))
+
+
+def _first_target(stmt: ast.Assign) -> str:
+    for tgt in stmt.targets:
+        if isinstance(tgt, ast.Name):
+            return tgt.id
+    return "<assign>"
+
+
+def run(root: str) -> list[Finding]:
+    import os
+
+    findings: list[Finding] = []
+    for path in py_files(root):
+        if os.path.basename(path).startswith("test_"):
+            continue
+        with open(path) as fh:
+            try:
+                tree = ast.parse(fh.read(), filename=path)
+            except SyntaxError:
+                continue
+        findings.extend(_Scanner(path, tree).scan())
+    return findings

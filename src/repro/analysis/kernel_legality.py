@@ -1,0 +1,513 @@
+"""Pass 1: kernel legality — tile floors, Eq. 2 VMEM, grid/index ranks.
+
+Three static sub-checks over the kernel sources plus one dynamic sweep:
+
+  KL001  registration matrix: every `registry.register(backend, op, ..)`
+         names a known op and backend, nothing registers twice, and (on
+         the real tree) every backend can execute "gemm".
+  KL002  ladder alignment: the `_ladder(dim, align, cap)` calls inside
+         `choose_kernel_config` must emit tiles the Pallas kernels
+         accept — align and cap both multiples of the kernel's VREG
+         floors (SUBLANE for bm, LANE for bk/bn) — and the cost model's
+         SUBLANE/LANE/VMEM constants must equal the kernel modules'.
+  KL005  grid rank vs index_map arity (a Pallas call whose index maps
+         take the wrong number of grid coordinates fails only at
+         dispatch on a TPU; here it fails lint).
+  KL006  BlockSpec block rank vs index_map return-tuple length.
+  KL003  dynamic corpus sweep: for every `arch_gemms` shape of all 10
+         configs x {float, int8, sparse} (+ the MoE grouped shapes),
+         the block triple the kernels would EXECUTE satisfies the VREG
+         floors...
+  KL004  ...and the Eq. 2 VMEM budget (`vmem_bytes <= VMEM`).
+
+The int8/sparse executed blocks are re-derived by stdlib mirrors of
+`quant_gemm.align_int8_blocks` / `sparse_gemm.default_sparse_blocks`
+(drift-tested against the real functions under jax in
+tests/test_analysis.py — the analysis itself must not import jax).
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+
+from . import Finding, is_real_root, rel
+from ._astutil import (assignments_in, def_line, dotted, find_def, fold_int,
+                       lambda_arity, module_int_constants, parse_file,
+                       py_files, resolve, return_tuple_len)
+
+#: VREG tiling floors when the kernel sources are absent under --root
+#: (fixture trees); the real tree overrides these from the parsed
+#: kernel constants so the check tracks the source of truth.
+_DEFAULT_FLOORS = {"SUBLANE": 8, "LANE": 128, "INT8_SUBLANE": 32,
+                   "VMEM": 16 * 2**20}
+
+_BASE_BACKENDS = ("pallas-tpu", "pallas-interpret", "xla-einsum", "simulator")
+
+
+def run(root: str) -> list[Finding]:
+    findings: list[Finding] = []
+    findings += _check_registrations(root)
+    findings += _check_ladders(root)
+    findings += _check_pallas_grids(root)
+    if is_real_root(root):
+        findings += _check_decision_corpus(root)
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# KL001: the registration matrix
+# ---------------------------------------------------------------------------
+
+
+def _loop_values(fn: ast.AST, name: str) -> list[str]:
+    """Backend names a loop variable can take, when the enclosing `for`
+    iterates a literal tuple/list of tuples (the quant/sparse
+    `for name, use_pallas in ((...),)` idiom)."""
+    vals: list[str] = []
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.For):
+            continue
+        tgt = node.target
+        names = [e.id for e in tgt.elts if isinstance(e, ast.Name)] \
+            if isinstance(tgt, ast.Tuple) else \
+            ([tgt.id] if isinstance(tgt, ast.Name) else [])
+        if name not in names:
+            continue
+        pos = names.index(name)
+        if isinstance(node.iter, (ast.Tuple, ast.List)):
+            for elt in node.iter.elts:
+                item = elt.elts[pos] if isinstance(elt, ast.Tuple) else elt
+                if isinstance(item, ast.Constant) and isinstance(item.value,
+                                                                 str):
+                    vals.append(item.value)
+    return vals
+
+
+def _registrations(path: str) -> list[tuple[str, str, int]]:
+    """(backend, op, line) for every `*.register(backend, op, fn)` call."""
+    tree = parse_file(path)
+    if tree is None:
+        return []
+    out = []
+    for fn in [n for n in ast.walk(tree) if isinstance(n, ast.FunctionDef)]:
+        for node in ast.walk(fn):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "register"
+                    and len(node.args) >= 2):
+                continue
+            b_node, op_node = node.args[0], node.args[1]
+            if not (isinstance(op_node, ast.Constant)
+                    and isinstance(op_node.value, str)):
+                continue
+            if isinstance(b_node, ast.Constant) and isinstance(b_node.value,
+                                                               str):
+                backends = [b_node.value]
+            elif isinstance(b_node, ast.Name):
+                backends = _loop_values(fn, b_node.id)
+            else:
+                backends = []
+            for b in backends:
+                out.append((b, op_node.value, node.lineno))
+    return out
+
+
+def _check_registrations(root: str) -> list[Finding]:
+    from repro.engine.context import INT8_BACKENDS, SPARSE_BACKENDS
+    from repro.engine.plan import KNOWN_OPS
+
+    known_backends = set(_BASE_BACKENDS) | set(INT8_BACKENDS) \
+        | set(SPARSE_BACKENDS)
+    files = [os.path.join(root, "engine", "backends.py")]
+    kdir = os.path.join(root, "kernels")
+    if os.path.isdir(kdir):
+        files += [os.path.join(kdir, f) for f in sorted(os.listdir(kdir))
+                  if f.endswith(".py")]
+    findings: list[Finding] = []
+    seen: dict[tuple[str, str], tuple[str, int]] = {}
+    for path in files:
+        for backend, op, line in _registrations(path):
+            if op not in KNOWN_OPS:
+                findings.append(Finding(
+                    "KL001", rel(path), line, backend,
+                    f"registers unknown op {op!r} (KNOWN_OPS: "
+                    f"{', '.join(KNOWN_OPS)})"))
+            if backend not in known_backends:
+                findings.append(Finding(
+                    "KL001", rel(path), line, op,
+                    f"registers unknown backend {backend!r} (known: "
+                    f"{', '.join(sorted(known_backends))})"))
+            prev = seen.get((backend, op))
+            if prev is not None:
+                findings.append(Finding(
+                    "KL001", rel(path), line, backend,
+                    f"({backend!r}, {op!r}) registered twice — also at "
+                    f"{prev[0]}:{prev[1]}; last registration silently "
+                    f"wins"))
+            else:
+                seen[(backend, op)] = (rel(path), line)
+    if is_real_root(root):
+        # completeness: a backend without "gemm" cannot even serve the
+        # dense projections; only meaningful over the full tree.
+        for backend in sorted({b for b, _ in seen}):
+            if (backend, "gemm") not in seen:
+                path, line = next(v for (b, _), v in seen.items()
+                                  if b == backend)
+                findings.append(Finding(
+                    "KL001", path, line, backend,
+                    f"backend {backend!r} registers ops but no 'gemm' — "
+                    f"every backend must execute the dense projections"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# KL002: ladder alignment + cross-module constant drift
+# ---------------------------------------------------------------------------
+
+
+def _kernel_floors(root: str) -> dict[str, int]:
+    floors = dict(_DEFAULT_FLOORS)
+    redas = parse_file(os.path.join(root, "kernels", "redas_gemm.py"))
+    if redas is not None:
+        consts = module_int_constants(redas)
+        for k in ("SUBLANE", "LANE"):
+            if k in consts:
+                floors[k] = consts[k]
+        if "VMEM_BYTES" in consts:
+            floors["VMEM"] = consts["VMEM_BYTES"]
+    quant = parse_file(os.path.join(root, "kernels", "quant_gemm.py"))
+    if quant is not None:
+        consts = module_int_constants(quant)
+        if "INT8_SUBLANE" in consts:
+            floors["INT8_SUBLANE"] = consts["INT8_SUBLANE"]
+    return floors
+
+
+def _check_ladders(root: str) -> list[Finding]:
+    path = os.path.join(root, "core", "tpu_model.py")
+    tree = parse_file(path)
+    if tree is None:
+        return []
+    findings: list[Finding] = []
+    floors = _kernel_floors(root)
+    consts = module_int_constants(tree)
+
+    # cross-module drift: the cost model must gate with the same
+    # constants the kernels enforce, or legal-by-model tiles fail floor
+    # validation (or worse: pass a stale VMEM budget) at dispatch.
+    for model_name, kernel_name in (("SUBLANE", "SUBLANE"),
+                                    ("LANE", "LANE"), ("VMEM", "VMEM")):
+        if model_name in consts and consts[model_name] != floors[kernel_name]:
+            findings.append(Finding(
+                "KL002", rel(path), 1, model_name,
+                f"core.tpu_model.{model_name} = {consts[model_name]} but "
+                f"the kernel modules enforce {floors[kernel_name]} — the "
+                f"cost model would emit blocks the kernels reject"))
+    if floors["INT8_SUBLANE"] % floors["SUBLANE"] != 0:
+        findings.append(Finding(
+            "KL002", rel(os.path.join(root, "kernels", "quant_gemm.py")), 1,
+            "INT8_SUBLANE",
+            f"INT8_SUBLANE={floors['INT8_SUBLANE']} is not a multiple of "
+            f"SUBLANE={floors['SUBLANE']}: int8 re-alignment of a "
+            f"float-laddered bm can undershoot the int8 floor"))
+
+    fn = find_def(tree, "choose_kernel_config")
+    if fn is None:
+        return findings
+    calls = [n for n in ast.walk(fn)
+             if isinstance(n, ast.Call) and isinstance(n.func, ast.Name)
+             and n.func.id == "_ladder" and len(n.args) >= 2]
+    if len(calls) != 3:
+        return findings  # search restructured; the dynamic sweep still gates
+    # loop nesting order is bm, bk, bn (matches the kernel's A/B floors)
+    for call, dim, floor_name in zip(calls, ("bm", "bk", "bn"),
+                                     ("SUBLANE", "LANE", "LANE"),
+                                     strict=True):
+        floor = floors[floor_name]
+        env = {**floors, **consts}
+        align = fold_int(call.args[1], env)
+        cap = fold_int(call.args[2], env) if len(call.args) >= 3 else None
+        if align is not None and align % floor != 0:
+            findings.append(Finding(
+                "KL002", rel(path), call.lineno, "choose_kernel_config",
+                f"{dim} ladder align={align} is not a multiple of the "
+                f"kernel {floor_name} floor ({floor}): the search can "
+                f"emit tiles the Pallas kernel rejects"))
+        if cap is not None and cap % floor != 0:
+            findings.append(Finding(
+                "KL002", rel(path), call.lineno, "choose_kernel_config",
+                f"{dim} ladder cap={cap} is not a multiple of the kernel "
+                f"{floor_name} floor ({floor}): min(round_up(dim), cap) "
+                f"can emit a misaligned top rung"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# KL005/KL006: Pallas grid / index_map / BlockSpec rank consistency
+# ---------------------------------------------------------------------------
+
+
+def _grid_info(call: ast.Call, env) -> tuple[int | None, int, list[ast.AST]]:
+    """(grid rank, scalar-prefetch count, extra spec exprs) for one
+    `pl.pallas_call(...)`.  None rank = not statically resolvable."""
+    grid_node = None
+    prefetch = 0
+    extra_specs: list[ast.AST] = []
+    for kw in call.keywords:
+        if kw.arg == "grid":
+            grid_node = kw.value
+        elif kw.arg == "grid_spec":
+            for cand in resolve(kw.value, env):
+                if isinstance(cand, ast.Call) and \
+                        (dotted(cand.func) or "").endswith(
+                            "PrefetchScalarGridSpec"):
+                    for skw in cand.keywords:
+                        if skw.arg == "grid":
+                            grid_node = skw.value
+                        elif skw.arg == "num_scalar_prefetch":
+                            v = fold_int(skw.value, {})
+                            prefetch = v if v is not None else prefetch
+                        elif skw.arg in ("in_specs", "out_specs"):
+                            extra_specs.append(skw.value)
+    if grid_node is None:
+        return None, prefetch, extra_specs
+    ranks = {len(g.elts) for g in resolve(grid_node, env)
+             if isinstance(g, ast.Tuple)}
+    rank = ranks.pop() if len(ranks) == 1 else None
+    return rank, prefetch, extra_specs
+
+
+def _index_maps(spec_exprs, env, local_defs):
+    """(map_node, block_rank|None) pairs found in the spec expressions:
+    lambdas/named functions inside BlockSpec calls carry their block
+    rank; bare lambdas passed through helper calls carry None (arity is
+    still checkable against the grid)."""
+    out, seen = [], set()
+
+    def block_rank_of(bs_call: ast.Call):
+        shp = bs_call.args[0] if bs_call.args else None
+        for kw in bs_call.keywords:
+            if kw.arg == "block_shape":
+                shp = kw.value
+        return len(shp.elts) if isinstance(shp, ast.Tuple) else None
+
+    for expr in spec_exprs:
+        for cand in resolve(expr, env):
+            for node in ast.walk(cand):
+                if not isinstance(node, ast.Call):
+                    continue
+                name = dotted(node.func) or ""
+                if name.endswith("BlockSpec"):
+                    imap = node.args[1] if len(node.args) >= 2 else None
+                    for kw in node.keywords:
+                        if kw.arg == "index_map":
+                            imap = kw.value
+                    if imap is None:
+                        continue
+                    fn = imap if isinstance(imap, ast.Lambda) else \
+                        local_defs.get(imap.id) \
+                        if isinstance(imap, ast.Name) else None
+                    if fn is not None and id(fn) not in seen:
+                        seen.add(id(fn))
+                        out.append((fn, block_rank_of(node)))
+                else:
+                    # helper-call idiom: a_bs(lambda i, j, kk: ...) — the
+                    # lambda still receives the grid coordinates.
+                    for arg in node.args:
+                        if isinstance(arg, ast.Lambda) \
+                                and id(arg) not in seen:
+                            seen.add(id(arg))
+                            out.append((arg, None))
+    return out
+
+
+def _check_pallas_grids(root: str) -> list[Finding]:
+    kdir = os.path.join(root, "kernels")
+    if not os.path.isdir(kdir):
+        return []
+    findings: list[Finding] = []
+    for path in py_files(kdir):
+        tree = parse_file(path)
+        if tree is None:
+            continue
+        for fn in [n for n in ast.walk(tree)
+                   if isinstance(n, ast.FunctionDef)]:
+            env = assignments_in(fn)
+            local_defs = {n.name: n for n in ast.walk(fn)
+                          if isinstance(n, ast.FunctionDef) and n is not fn}
+            for call in ast.walk(fn):
+                if not (isinstance(call, ast.Call)
+                        and (dotted(call.func) or "").endswith("pallas_call")):
+                    continue
+                rank, prefetch, spec_exprs = _grid_info(call, env)
+                for kw in call.keywords:
+                    if kw.arg in ("in_specs", "out_specs", "out_spec"):
+                        spec_exprs.append(kw.value)
+                maps = _index_maps(spec_exprs, env, local_defs)
+                if rank is None:
+                    continue
+                arity = rank + prefetch
+                for imap, block_rank in maps:
+                    got = lambda_arity(imap)
+                    if got != arity:
+                        findings.append(Finding(
+                            "KL005", rel(path), imap.lineno, fn.name,
+                            f"index_map takes {got} args but the grid "
+                            f"is rank {rank}"
+                            + (f" + {prefetch} scalar-prefetch args"
+                               if prefetch else "")
+                            + f" (= {arity}): Pallas would fail at "
+                              f"dispatch"))
+                        continue
+                    ret = return_tuple_len(imap)
+                    if block_rank is not None and ret is not None \
+                            and ret != block_rank:
+                        findings.append(Finding(
+                            "KL006", rel(path), imap.lineno, fn.name,
+                            f"index_map returns a {ret}-tuple but its "
+                            f"BlockSpec block has {block_rank} dims"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# KL003/KL004: the dynamic corpus sweep (real tree only, still jax-free)
+# ---------------------------------------------------------------------------
+
+# Stdlib mirrors of the executed-block derivations.  These MUST track
+# kernels/quant_gemm.align_int8_blocks and
+# kernels/sparse_gemm.{_bk_unit,default_sparse_blocks} — tests/
+# test_analysis.py compares them against the real functions under jax.
+
+
+def _ru(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _int8_vmem(bm: int, bk: int, bn: int) -> int:
+    return 2 * (bm * bk + bk * bn) * 1 + bm * bn * 4
+
+
+def mirror_align_int8(bm: int, bk: int, bn: int, *, sublane: int = 32,
+                      lane: int = 128, vmem: int = 16 * 2**20):
+    """quant_gemm.align_int8_blocks: round the float-planned triple up
+    to int8 floors, then halve bk while the int8 footprint overflows."""
+    bm, bk, bn = _ru(bm, sublane), _ru(bk, lane), _ru(bn, lane)
+    while _int8_vmem(bm, bk, bn) > vmem and bk > lane:
+        bk = max(lane, bk // 2)
+    return bm, bk, bn
+
+
+def _lcm(a: int, b: int) -> int:
+    import math
+    return a * b // math.gcd(a, b)
+
+
+def _sparse_vmem(bm: int, bk: int, bn: int, n_keep: int, m_group: int) -> int:
+    bk_c = bk * n_keep // m_group
+    return (2 * (bm * bk * 4 + bk_c * bn * 4 + bk_c * bn)
+            + bk * bn * 4 + bm * bn * 4)
+
+
+def mirror_sparse_blocks(m: int, k_dense: int, n: int, n_keep: int,
+                         m_group: int, *, lane: int = 128,
+                         vmem: int = 16 * 2**20):
+    """sparse_gemm.default_sparse_blocks: bk quantized to the dense-K
+    unit lcm(LANE, m_group), halved toward it under the Eq. 2 gate."""
+    unit = _lcm(lane, m_group)
+    bm = min(_ru(m, 8), 256)
+    bk = min(_ru(k_dense, unit), 8 * unit)
+    bn = min(_ru(n, lane), 256)
+    while _sparse_vmem(bm, bk, bn, n_keep, m_group) > vmem and bk > unit:
+        bk = max(unit, _ru(bk // 2, unit))
+    return bm, bk, bn
+
+
+def _check_decision_corpus(root: str) -> list[Finding]:
+    from repro.configs import all_configs
+    from repro.core import tpu_model as tm
+    from repro.core.workloads import arch_gemms
+    from repro.engine.context import decode_requests
+    from repro.engine.cost import TPUModel
+    from repro.engine.plan import KernelRequest
+
+    floors = _kernel_floors(root)
+    sub, lane = floors["SUBLANE"], floors["LANE"]
+    isub, vmem = floors["INT8_SUBLANE"], floors["VMEM"]
+    anchors = {
+        "gemm": (rel(os.path.join(root, "core", "tpu_model.py")),
+                 def_line(os.path.join(root, "core", "tpu_model.py"),
+                          "choose_kernel_config"), "choose_kernel_config"),
+        "int8": (rel(os.path.join(root, "kernels", "quant_gemm.py")),
+                 def_line(os.path.join(root, "kernels", "quant_gemm.py"),
+                          "align_int8_blocks"), "align_int8_blocks"),
+        "sparse": (rel(os.path.join(root, "kernels", "sparse_gemm.py")),
+                   def_line(os.path.join(root, "kernels", "sparse_gemm.py"),
+                            "default_sparse_blocks"),
+                   "default_sparse_blocks"),
+        "grouped": (rel(os.path.join(root, "engine", "cost.py")),
+                    def_line(os.path.join(root, "engine", "cost.py"),
+                             "_decide_grouped"), "_decide_grouped"),
+    }
+    model = TPUModel()
+    findings: list[Finding] = []
+    emitted: set[tuple] = set()
+
+    def emit(kind: str, check: str, msg: str):
+        file, line, symbol = anchors[kind]
+        key = (check, kind, msg)
+        if key not in emitted:
+            emitted.add(key)
+            findings.append(Finding(check, file, line, symbol, msg))
+
+    def check_blocks(kind, shape, bm, bk, bn, fm, fk, fn_, used, label):
+        if bm % fm or bk % fk or bn % fn_:
+            emit(kind, "KL003",
+                 f"{label} shape {shape}: executed blocks ({bm},{bk},{bn}) "
+                 f"violate the ({fm},{fk},{fn_}) floors")
+        if used > vmem:
+            emit(kind, "KL004",
+                 f"{label} shape {shape}: executed blocks ({bm},{bk},{bn}) "
+                 f"need {used} B VMEM > the Eq. 2 budget {vmem} B")
+
+    shapes: set[tuple[int, int, int, str]] = set()
+    grouped: set[tuple] = set()
+    for cfg in all_configs().values():
+        for g in arch_gemms(cfg):
+            shapes.add((g.M, g.K, g.N, cfg.name))
+        if cfg.moe is not None:
+            for seq in (1, 8):
+                for req in decode_requests(cfg, batch=4, seq=seq):
+                    if req.op == "grouped_gemm":
+                        grouped.add((req.m, req.k, req.n, req.groups,
+                                     cfg.name))
+
+    for m, k, n, cname in sorted(shapes):
+        shape = (m, k, n)
+        # float plane: the decision IS the executed block triple
+        d = model.decide(KernelRequest("gemm", m, k, n))
+        used = tm.TPUKernelConfig(d.dataflow, d.bm, d.bk, d.bn).vmem_bytes(2)
+        check_blocks("gemm", shape, d.bm, d.bk, d.bn, sub, lane, lane,
+                     used, f"{cname} float")
+        # int8 plane: the kernel re-aligns the planned triple first
+        d8 = model.decide(KernelRequest("gemm_w8", m, k, n, in_bytes=1))
+        bm, bk, bn = mirror_align_int8(d8.bm, d8.bk, d8.bn, sublane=isub,
+                                       lane=lane, vmem=vmem)
+        check_blocks("int8", shape, bm, bk, bn, isub, lane, lane,
+                     _int8_vmem(bm, bk, bn), f"{cname} int8")
+        # sparse plane (2:4): the kernel derives its own default blocks
+        # from the stored (dense-equivalent) K
+        k_store = _ru(k, 4)
+        bm, bk, bn = mirror_sparse_blocks(m, k_store, n, 2, 4, lane=lane,
+                                          vmem=vmem)
+        unit = _lcm(lane, 4)
+        check_blocks("sparse", shape, bm, bk, bn, sub, unit, lane,
+                     _sparse_vmem(bm, bk, bn, 2, 4), f"{cname} 2:4 sparse")
+
+    for m, k, n, groups, cname in sorted(grouped):
+        d = model.decide(KernelRequest("grouped_gemm", m, k, n,
+                                       groups=groups))
+        used = tm.TPUKernelConfig("os", d.bm, d.bk, d.bn).vmem_bytes(2)
+        check_blocks("grouped", (m, k, n), d.bm, d.bk, d.bn, sub, lane, lane,
+                     used, f"{cname} grouped E={groups}")
+    return findings

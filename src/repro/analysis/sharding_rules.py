@@ -1,0 +1,350 @@
+"""Pass 3: sharding consistency — no silently-replicated leaves.
+
+`dist.sharding` places every array by rule tables: `_auto_spec` pattern
+rules for params, `_CACHE_AXES` for cache leaves.  Both FAIL OPEN — an
+unmatched name replicates silently — which is exactly the bug class
+this pass closes: every leaf either config can produce must match
+exactly one rule, and every rule must still be reachable.
+
+  SH001  a cache leaf some (arch, layout, dtype) combination produces
+         with no `_CACHE_AXES` entry (it would replicate onto every
+         device — a paged pool or long-context KV that must shard).
+  SH002  a `_CACHE_AXES` rule no combination produces (dead rule: its
+         leaf was renamed and the rename now replicates, see SH001).
+  SH003  a rule whose axis tuple does not match its leaf's rank
+         (1 + slot ndim: the leading entry covers the stacked-layer
+         dim, `cache_shardings` strips it for tail blocks).
+  SH007  a rule naming a logical axis missing from
+         `LOGICAL_AXIS_RULES` (`spec()` raises at serve time).
+  SH004  a param leaf matching NO `_auto_spec` family (orphan: the
+         catch-all replicates it — fatal for a multi-GB matmul weight).
+  SH005  a param leaf matching MORE THAN ONE name-pattern family
+         (`_auto_spec` resolves by order; which rule wins is silent).
+  SH006  a matmul/expert/embed leaf whose mirror spec degrades to full
+         replication on the reference 2x2 (data, model) mesh — legal,
+         but the silently-replicated failure mode by another route.
+
+The leaf sets come from stdlib mirrors of `models.transformer.
+init_params` / `init_cache` over every real ArchConfig (the configs
+are jax-free); the rule tables are AST-extracted from the sharding
+module under --root, so fixture trees can plant table violations.
+tests/test_analysis.py drift-checks both mirrors against the real
+jax-built trees and the mirror classifier against `_auto_spec`.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+
+from . import Finding, rel
+from ._astutil import find_def, parse_file
+
+#: reference mesh for the SH006 degradation probe.
+_MESH = {"data": 2, "model": 2}
+
+
+# ---------------------------------------------------------------------------
+# Rule-table extraction (AST: the sharding module imports jax)
+# ---------------------------------------------------------------------------
+
+
+def _module_dict_literal(tree: ast.Module, name: str):
+    """(value_dict, {key: line}) for a module-level `NAME = {...}`."""
+    for stmt in tree.body:
+        tgt = None
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                and isinstance(stmt.targets[0], ast.Name):
+            tgt = stmt.targets[0].id
+        elif isinstance(stmt, ast.AnnAssign) and isinstance(stmt.target,
+                                                            ast.Name):
+            tgt = stmt.target.id
+        if tgt != name:
+            continue
+        value = stmt.value
+        if not isinstance(value, ast.Dict):
+            return None, {}
+        try:
+            d = ast.literal_eval(value)
+        except ValueError:
+            return None, {}
+        lines = {k.value: k.lineno for k in value.keys
+                 if isinstance(k, ast.Constant)}
+        return d, lines
+    return None, {}
+
+
+def extract_tables(root: str):
+    """(cache_axes, key_lines, logical_axis_names, auto_spec_line, path)
+    from `<root>/dist/sharding.py`; None when the file is absent."""
+    path = os.path.join(root, "dist", "sharding.py")
+    tree = parse_file(path)
+    if tree is None:
+        return None
+    cache_axes, lines = _module_dict_literal(tree, "_CACHE_AXES")
+    logical, _ = _module_dict_literal(tree, "LOGICAL_AXIS_RULES")
+    fn = find_def(tree, "_auto_spec")
+    return (cache_axes or {}, lines, set(logical or {}),
+            fn.lineno if fn else 1, path)
+
+
+# ---------------------------------------------------------------------------
+# Cache-leaf mirror (models.transformer._slot_cache_shape, stdlib)
+# ---------------------------------------------------------------------------
+
+
+def cache_slot_leaves(cfg, *, paged: bool, int8: bool) -> dict[str, int]:
+    """slot-leaf name -> per-slot ndim for one (arch, layout, dtype)."""
+    leaves: dict[str, int] = {}
+    for kind in sorted(set(cfg.layer_pattern)):
+        if kind == "attn" and paged:
+            leaves["k_pages"] = leaves["v_pages"] = 4
+            if int8:
+                leaves["k_scale_pages"] = leaves["v_scale_pages"] = 3
+        elif kind in ("attn", "local"):
+            leaves["k"] = leaves["v"] = 4
+            if int8:
+                leaves["k_scale"] = leaves["v_scale"] = 3
+        elif kind == "ssm":
+            leaves["conv"] = 3
+            leaves["state"] = 4
+        elif kind == "rglru":
+            leaves["conv"] = 3
+            leaves["h"] = 2
+    return leaves
+
+
+def all_cache_leaves(configs) -> dict[str, int]:
+    """Every slot leaf any (servable-or-not arch, layout, dtype) combo
+    can produce, with its per-slot ndim (consistent across combos)."""
+    leaves: dict[str, int] = {}
+    for cfg in configs:
+        kinds = set(cfg.layer_pattern)
+        int8_ok = bool(kinds & {"attn", "local"})  # validate_cache_dtype
+        for paged in (False, True) if "attn" in kinds else (False,):
+            for int8 in (False, True) if int8_ok else (False,):
+                leaves.update(cache_slot_leaves(cfg, paged=paged, int8=int8))
+    return leaves
+
+
+# ---------------------------------------------------------------------------
+# Param-leaf mirror (models.transformer.init_params, stdlib)
+# ---------------------------------------------------------------------------
+
+
+def _dense_leaves(prefix, d_in, d_out, *, bias=False):
+    out = [(f"{prefix}/w", (d_in, d_out))]
+    if bias:
+        out.append((f"{prefix}/b", (d_out,)))
+    return out
+
+
+def _block_leaves(cfg, kind: str):
+    d, f, hd = cfg.d_model, cfg.d_ff, cfg.head_dim_
+    nh, nkv = cfg.n_heads, cfg.n_kv
+    leaves = [("norm1", (d,))]
+    if kind in ("attn", "local"):
+        leaves += _dense_leaves("attn/wq", d, nh * hd, bias=cfg.qkv_bias)
+        leaves += _dense_leaves("attn/wk", d, nkv * hd, bias=cfg.qkv_bias)
+        leaves += _dense_leaves("attn/wv", d, nkv * hd, bias=cfg.qkv_bias)
+        leaves += _dense_leaves("attn/wo", nh * hd, d)
+        if cfg.qk_norm:
+            leaves += [("attn/q_norm", (hd,)), ("attn/k_norm", (hd,))]
+        leaves.append(("norm2", (d,)))
+        if cfg.moe is not None:
+            e = cfg.moe.n_experts
+            leaves += _dense_leaves("moe/router", d, e)
+            leaves += [("moe/experts/wi", (e, d, f)),
+                       ("moe/experts/wg", (e, d, f)),
+                       ("moe/experts/wo", (e, f, d))]
+        else:
+            leaves += _mlp_leaves(cfg)
+    elif kind == "ssm":
+        s = cfg.ssm
+        d_in = s.expand * d
+        heads = d_in // s.head_dim
+        conv_ch = d_in + 2 * s.n_groups * s.d_state
+        d_proj = 2 * d_in + 2 * s.n_groups * s.d_state + heads
+        leaves += _dense_leaves("ssm/in_proj", d, d_proj)
+        leaves += [("ssm/conv_w", (s.conv_width, conv_ch)),
+                   ("ssm/conv_b", (conv_ch,)), ("ssm/A_log", (heads,)),
+                   ("ssm/D", (heads,)), ("ssm/dt_bias", (heads,)),
+                   ("ssm/norm", (d_in,))]
+        leaves += _dense_leaves("ssm/out_proj", d_in, d)
+    elif kind == "rglru":
+        w = cfg.rglru_width or d
+        leaves += _dense_leaves("rec/lin_x", d, w)
+        leaves += _dense_leaves("rec/lin_y", d, w)
+        leaves += [("rec/conv_w", (4, w)), ("rec/conv_b", (w,))]
+        leaves += _dense_leaves("rec/w_a", w, w)
+        leaves += _dense_leaves("rec/w_x", w, w)
+        leaves += [("rec/lam", (w,))]
+        leaves += _dense_leaves("rec/lin_out", w, d)
+        leaves += [("norm2", (d,))] + _mlp_leaves(cfg)
+    return leaves
+
+
+def _mlp_leaves(cfg):
+    d, f = cfg.d_model, cfg.d_ff
+    leaves = _dense_leaves("mlp/wi", d, f)
+    if cfg.gated_mlp:
+        leaves += _dense_leaves("mlp/wg", d, f)
+    return leaves + _dense_leaves("mlp/wo", f, d)
+
+
+def param_leaves(cfg) -> list[tuple[str, tuple[int, ...]]]:
+    """('/'-joined path, shape) for every init_params leaf of `cfg`."""
+    period = len(cfg.layer_pattern)
+    n_periods, n_tail = cfg.n_layers // period, cfg.n_layers % period
+    leaves: list[tuple[str, tuple[int, ...]]] = []
+    if not cfg.embed_inputs:
+        leaves.append(("embed", (cfg.vocab, cfg.d_model)))
+    for j, kind in enumerate(cfg.layer_pattern):
+        for name, shape in _block_leaves(cfg, kind):
+            leaves.append((f"stack/b{j}/{name}", (n_periods,) + shape))
+    for t in range(n_tail):
+        for name, shape in _block_leaves(cfg, cfg.layer_pattern[t]):
+            leaves.append((f"tail/{t}/{name}", shape))
+    leaves.append(("final_norm", (cfg.d_model,)))
+    if not cfg.tie_embeddings:
+        leaves.append(("lm_head", (cfg.d_model, cfg.vocab)))
+    return leaves
+
+
+# ---------------------------------------------------------------------------
+# Param classification: the _auto_spec rule families, checked exactly-one
+# ---------------------------------------------------------------------------
+
+
+def classify_param(name: str, shape: tuple[int, ...]):
+    """(families, rule) — `families` is every name-pattern family that
+    claims this leaf (>1 = ambiguous), `rule` the shape family that
+    would place it (None = orphan)."""
+    ndim = len(shape)
+    off = 1 if (name.startswith("stack/") or "/stack/" in name) else 0
+    families = []
+    if off == 0 and name.rsplit("/", 1)[-1] == "embed" and ndim >= 2:
+        families.append("embed")
+    if "experts/" in name and ndim - off >= 3:
+        families.append("experts")
+    if len(families) > 1:
+        return families, None
+    if families == ["embed"]:
+        return families, "embed" if ndim == 2 else None
+    if families == ["experts"]:
+        last = name.rsplit("/", 1)[-1]
+        return families, ("experts" if ndim - off == 3
+                          and last in ("wi", "wg", "wo") else None)
+    if ndim - off <= 1:
+        return families, "replicate"
+    if ndim - off == 2:
+        return families, "matmul"
+    return families, None
+
+
+def mirror_spec(name: str, shape: tuple[int, ...],
+                sizes: dict[str, int]) -> tuple:
+    """Stdlib mirror of `_auto_spec` (same divisibility degradation);
+    drift-tested against the real function under jax."""
+    data, model = sizes.get("data", 1), sizes.get("model", 1)
+    ndim = len(shape)
+    if ndim <= 1:
+        return ()
+    off = 1 if (name.startswith("stack/") or "/stack/" in name) else 0
+    if off == 0 and name.rsplit("/", 1)[-1] == "embed":
+        return ("model",) if model > 1 and shape[0] % model == 0 else ()
+    specs: list[str | None] = [None] * ndim
+    if "experts/" in name and ndim - off >= 3:
+        if model > 1 and shape[off] % model == 0:
+            specs[off] = "model"
+        dm = ndim - 1 if name.rsplit("/", 1)[-1] == "wo" else off + 1
+        if data > 1 and shape[dm] % data == 0:
+            specs[dm] = "data"
+        return tuple(specs)
+    if ndim - off >= 2:
+        if model > 1 and shape[-1] % model == 0:
+            specs[-1] = "model"
+        if data > 1 and shape[-2] % data == 0:
+            specs[-2] = "data"
+    return tuple(specs)
+
+
+def check_param_leaves(leaves, *, file: str, line: int,
+                       arch: str) -> list[Finding]:
+    findings = []
+    for name, shape in leaves:
+        families, rule = classify_param(name, shape)
+        if len(families) > 1:
+            findings.append(Finding(
+                "SH005", file, line, arch,
+                f"param leaf {name!r} {shape} matches multiple rule "
+                f"families ({', '.join(families)}): _auto_spec resolves "
+                f"by order and the winner is silent"))
+            continue
+        if rule is None:
+            findings.append(Finding(
+                "SH004", file, line, arch,
+                f"param leaf {name!r} {shape} matches no _auto_spec rule "
+                f"family — the fall-through would replicate it onto "
+                f"every device"))
+            continue
+        if rule in ("matmul", "experts", "embed") \
+                and not any(mirror_spec(name, shape, _MESH)):
+            findings.append(Finding(
+                "SH006", file, line, arch,
+                f"param leaf {name!r} {shape} degrades to full "
+                f"replication on a {_MESH} mesh (no dim divisible): a "
+                f"weight matrix every device holds whole"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# The pass
+# ---------------------------------------------------------------------------
+
+
+def run(root: str) -> list[Finding]:
+    tables = extract_tables(root)
+    if tables is None:
+        return []
+    cache_axes, key_lines, logical, auto_line, path = tables
+    file = rel(path)
+    from repro.configs import all_configs
+
+    configs = list(all_configs().values())
+    findings: list[Finding] = []
+
+    # -- cache rules -------------------------------------------------------
+    produced = all_cache_leaves(configs)
+    for name, ndim in sorted(produced.items()):
+        axes = cache_axes.get(name)
+        if axes is None:
+            findings.append(Finding(
+                "SH001", file, 1, name,
+                f"cache leaf {name!r} has no _CACHE_AXES rule — "
+                f"cache_shardings would replicate it onto every device"))
+            continue
+        if len(axes) != 1 + ndim:
+            findings.append(Finding(
+                "SH003", file, key_lines.get(name, 1), name,
+                f"_CACHE_AXES[{name!r}] has {len(axes)} entries but the "
+                f"leaf is rank {1 + ndim} (stack dim + {ndim} slot dims)"))
+    for name, axes in sorted(cache_axes.items()):
+        if name not in produced:
+            findings.append(Finding(
+                "SH002", file, key_lines.get(name, 1), name,
+                f"_CACHE_AXES[{name!r}] matches no cache leaf any config "
+                f"produces — dead rule (was its leaf renamed?)"))
+        for ax in axes:
+            if ax is not None and ax not in logical:
+                findings.append(Finding(
+                    "SH007", file, key_lines.get(name, 1), name,
+                    f"_CACHE_AXES[{name!r}] names logical axis {ax!r} "
+                    f"missing from LOGICAL_AXIS_RULES — spec() raises at "
+                    f"serve time"))
+
+    # -- param rules -------------------------------------------------------
+    for cfg in configs:
+        findings.extend(check_param_leaves(
+            param_leaves(cfg), file=file, line=auto_line, arch=cfg.name))
+    return findings

@@ -104,7 +104,7 @@ def spec(shape, names, mesh: Mesh) -> P:
     sizes = dict(mesh.shape)
     used: set[str] = set()
     entries = []
-    for dim, name in zip(shape, names):
+    for dim, name in zip(shape, names, strict=False):
         if name is None:
             entries.append(None)
             continue

@@ -1,10 +1,9 @@
 """Execution backends: shape-safe kernel entry points + registrations.
 
-`pallas_gemm` is the shape-safe Pallas entry point (previously
-`kernels.ops.redas_matmul`): it pads arbitrary (M, K, N) to the chosen
-block multiples, invokes `kernels.redas_gemm.gemm`, and slices the
-result.  The engine's Pallas backends dispatch planned decisions through
-it; `kernels/ops.py` keeps `redas_matmul` as a DeprecationWarning alias.
+`pallas_gemm` is the shape-safe Pallas entry point: it pads arbitrary
+(M, K, N) to the chosen block multiples, invokes
+`kernels.redas_gemm.gemm`, and slices the result.  The engine's Pallas
+backends dispatch planned decisions through it.
 
 This module also registers the two non-Pallas backends:
 

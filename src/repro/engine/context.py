@@ -1,8 +1,8 @@
 """The Engine: decide (cost model + plan cache) then execute (registry).
 
-This is the single entry point the models route matmuls through,
-replacing the old `layers.USE_REDAS_KERNEL` global + direct
-`kernels.ops.auto_matmul` calls:
+This is the single entry point the models route matmuls through
+(it replaced the pre-engine `layers.USE_REDAS_KERNEL` global + direct
+per-op dispatch, both long gone):
 
     from repro import engine
 
@@ -428,9 +428,7 @@ _DEFAULT: Engine | None = None
 
 def default_engine() -> Engine:
     """Process-wide engine backing the module-level `matmul` when no
-    `use_engine` context is active.  (The deprecated `kernels.ops`
-    aliases keep their own per-backend engines — see ops._ALIAS_ENGINES
-    — so their `interpret` flag never leaks in here.)"""
+    `use_engine` context is active."""
     global _DEFAULT
     if _DEFAULT is None:
         _DEFAULT = Engine()

@@ -1,5 +1,5 @@
 # Plane-2 compute kernels (Pallas TPU): the ReDas-scheduled GEMM, the
 # grouped (per-expert) GEMM, and flash attention.  Each module exposes
 # `register_into(registry)` so the repro.engine KernelRegistry can bind
-# them as the "pallas-tpu" / "pallas-interpret" backends; `ops.py` is
-# the deprecated pre-engine dispatch surface (DeprecationWarning shims).
+# them as the "pallas-tpu" / "pallas-interpret" backends.  All dispatch
+# goes through repro.engine; the pre-engine `ops.py` surface is gone.

@@ -76,7 +76,7 @@ def apply_updates(cfg: AdamWConfig, state, grads, param_dtype=jnp.bfloat16):
     mu_f = treedef.flatten_up_to(state["mu"])
     nu_f = treedef.flatten_up_to(state["nu"])
     ma_f = treedef.flatten_up_to(state["master"])
-    out = [upd(g, m, n, w) for g, m, n, w in zip(flat, mu_f, nu_f, ma_f)]
+    out = [upd(g, m, n, w) for g, m, n, w in zip(flat, mu_f, nu_f, ma_f, strict=True)]
     mu = jax.tree.unflatten(treedef, [o[0] for o in out])
     nu = jax.tree.unflatten(treedef, [o[1] for o in out])
     master = jax.tree.unflatten(treedef, [o[2] for o in out])

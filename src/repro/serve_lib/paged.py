@@ -145,7 +145,7 @@ class PrefixIndex:
         chunks = self._chunks(tokens)
         assert len(pages) >= len(chunks), (len(pages), len(chunks))
         added, level = 0, self.root
-        for chunk, page in zip(chunks, pages):
+        for chunk, page in zip(chunks, pages, strict=False):
             node = level.get(chunk)
             if node is None:
                 node = _Node(int(page), self._clock)

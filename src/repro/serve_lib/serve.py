@@ -240,6 +240,18 @@ def make_decode_step(cfg: ArchConfig, scfg: ServeConfig):
 
 
 @functools.lru_cache(maxsize=64)
+def _jitted_cache_init(cfg: ArchConfig, scfg: ServeConfig, mesh):
+    """One jitted sharded-cache initializer per (cfg, scfg, mesh):
+    the cache is born sharded (seq over 'data' — a long-context cache
+    may not fit any single device, DESIGN.md §5) and repeated
+    `generate` calls on the same posture reuse the traced executable
+    instead of re-jitting the initializer per call."""
+    cache_sh = shd.cache_shardings(
+        jax.eval_shape(lambda: init_cache(cfg, scfg)), mesh)
+    return jax.jit(lambda: init_cache(cfg, scfg), out_shardings=cache_sh)
+
+
+@functools.lru_cache(maxsize=64)
 def _jitted_steps(cfg: ArchConfig, scfg: ServeConfig, engine):
     """One jitted (prefill, decode) pair per (cfg, scfg, engine):
     repeated `generate` calls reuse the traced executables instead of
@@ -284,14 +296,10 @@ def _generate(params, cfg: ArchConfig, scfg: ServeConfig, prompt: jax.Array,
         cfg, scfg, engine_mod.active_engine())
     mesh = shd.active_mesh()
     if mesh is not None:
-        # Place params (TP/FSDP rule table) before the first step, and
-        # build the cache *born sharded* (seq over 'data') — a long-
-        # context cache may not fit any single device — DESIGN.md §5.
+        # Place params (TP/FSDP rule table) before the first step; the
+        # cache initializer is memoized on (cfg, scfg, mesh) above.
         params = jax.device_put(params, shd.params_shardings(params, mesh))
-        cache_sh = shd.cache_shardings(
-            jax.eval_shape(lambda: init_cache(cfg, scfg)), mesh)
-        cache = jax.jit(lambda: init_cache(cfg, scfg),
-                        out_shardings=cache_sh)()
+        cache = _jitted_cache_init(cfg, scfg, mesh)()
     else:
         cache = init_cache(cfg, scfg)
     logits, cache = prefill_step(params, prompt, cache, embeds)

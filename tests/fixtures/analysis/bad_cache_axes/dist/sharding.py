@@ -1,0 +1,38 @@
+"""Planted fixture for the cache-rule checks: the "conv" rule is
+deleted (SH001), "state" lost an axis entry (SH003), "h" names an
+unknown logical axis (SH007), and "cells" matches nothing (SH002)."""
+
+LOGICAL_AXIS_RULES = {
+    "batch": ("pod", "data"),
+    "seq": ("data",),
+    "seq_kv": ("data",),
+    "embed": ("model",),
+    "residual": ("model",),
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "experts": ("model",),
+}
+
+_CACHE_AXES = {
+    "k": (None, "batch", "seq_kv", "kv_heads", None),
+    "v": (None, "batch", "seq_kv", "kv_heads", None),
+    "k_scale": (None, "batch", "seq_kv", "kv_heads"),
+    "v_scale": (None, "batch", "seq_kv", "kv_heads"),
+    # planted SH001: the "conv" rule (ssm/rglru conv leaf) is deleted
+    # planted SH003: "state" dropped its trailing axis (leaf is rank 5)
+    "state": (None, "batch", "heads", None),
+    # planted SH007: "mlpz" is not in LOGICAL_AXIS_RULES
+    "h": (None, "batch", "mlpz"),
+    "k_pages": (None, "seq_kv", None, "kv_heads", None),
+    "v_pages": (None, "seq_kv", None, "kv_heads", None),
+    "k_scale_pages": (None, "seq_kv", None, "kv_heads"),
+    "v_scale_pages": (None, "seq_kv", None, "kv_heads"),
+    # planted SH002: no config produces a "cells" leaf
+    "cells": (None, "batch", None),
+}
+
+
+def _auto_spec(name, shape, sizes):
+    return ()

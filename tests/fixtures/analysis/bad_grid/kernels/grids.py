@@ -1,0 +1,31 @@
+"""Planted fixture: one KL005 (index_map arity != grid rank) and one
+KL006 (index_map return tuple != BlockSpec block rank)."""
+
+import jax
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = a_ref[...] + b_ref[...]
+
+
+def bad_arity(a, b):
+    return pl.pallas_call(
+        _kernel,
+        grid=(2, 2),
+        in_specs=[pl.BlockSpec((8, 128), lambda i: (i, 0)),  # planted KL005
+                  pl.BlockSpec((8, 128), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((8, 128), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((16, 256), a.dtype),
+    )(a, b)
+
+
+def bad_return(a, b):
+    return pl.pallas_call(
+        _kernel,
+        grid=(2,),
+        in_specs=[pl.BlockSpec((8, 128), lambda i: (0, i, 0)),  # planted KL006
+                  pl.BlockSpec((8, 128), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((8, 128), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((16, 128), a.dtype),
+    )(a, b)

@@ -1,0 +1,23 @@
+"""Planted fixture: a fresh jax.jit per call, no memoized factory
+(JD001), plus a Python branch on a traced reduction (JD002) and a
+module-level jitted closure over a mutable global (JD003)."""
+
+import jax
+import jax.numpy as jnp
+
+_SCALES = {"attn": 2.0}
+
+
+def make_step(fn):
+    return jax.jit(fn)  # planted JD001
+
+
+def forward(x):
+    if jnp.sum(x) > 0:  # planted JD002
+        return x
+    return -x
+
+
+@jax.jit
+def apply(x):
+    return x * _SCALES["attn"]  # planted JD003

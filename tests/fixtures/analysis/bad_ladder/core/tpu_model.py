@@ -1,0 +1,18 @@
+"""Planted fixture: the bm ladder aligns to 4, below the SUBLANE=8
+VREG floor (KL002 must fire on the first `_ladder` call)."""
+
+SUBLANE, LANE = 8, 128
+VMEM = 16 * 2**20
+
+
+def _ladder(dim, align, cap):
+    return [min(align, cap)]
+
+
+def choose_kernel_config(m, k, n, in_bytes=2):
+    best = None
+    for bm in _ladder(m, 4, 512):  # planted: align 4 < SUBLANE floor
+        for bk in _ladder(k, LANE, 2048):
+            for bn in _ladder(n, LANE, 512):
+                best = (bm, bk, bn)
+    return best

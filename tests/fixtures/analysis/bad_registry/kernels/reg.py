@@ -1,0 +1,10 @@
+"""Planted fixture: registers an op outside KNOWN_OPS (KL001)."""
+
+
+def _gemm(a, b, decision):
+    return a @ b
+
+
+def register_into(registry):
+    registry.register("pallas-tpu", "gemm", _gemm)
+    registry.register("pallas-tpu", "gemm_typo", _gemm)  # planted KL001

@@ -1,0 +1,19 @@
+"""Clean fixture: index maps agree with their grid and blocks."""
+
+import jax
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = a_ref[...] + b_ref[...]
+
+
+def add_blocks(a, b):
+    return pl.pallas_call(
+        _kernel,
+        grid=(2, 2),
+        in_specs=[pl.BlockSpec((8, 128), lambda i, j: (i, 0)),
+                  pl.BlockSpec((8, 128), lambda i, j: (0, j))],
+        out_specs=pl.BlockSpec((8, 128), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((16, 256), a.dtype),
+    )(a, b)

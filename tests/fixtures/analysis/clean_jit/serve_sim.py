@@ -1,0 +1,25 @@
+"""Clean fixture: the sanctioned patterns — a memoized jit factory,
+a metadata-only dtype branch, and a jitted fn over immutable globals."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+_SCALE = 2.0
+
+
+@functools.lru_cache(maxsize=8)
+def jitted_step(fn):
+    return jax.jit(fn)
+
+
+def cast(x):
+    if jnp.issubdtype(x.dtype, jnp.floating):  # metadata, not a tracer
+        return x
+    return x.astype(jnp.float32)
+
+
+@jax.jit
+def apply(x):
+    return x * _SCALE

@@ -1,0 +1,17 @@
+"""Clean fixture: every ladder aligns and caps on its VREG floor."""
+
+SUBLANE, LANE = 8, 128
+VMEM = 16 * 2**20
+
+
+def _ladder(dim, align, cap):
+    return [min(align, cap)]
+
+
+def choose_kernel_config(m, k, n, in_bytes=2):
+    best = None
+    for bm in _ladder(m, SUBLANE, 512):
+        for bk in _ladder(k, LANE, 2048):
+            for bn in _ladder(n, LANE, 512):
+                best = (bm, bk, bn)
+    return best

@@ -54,7 +54,7 @@ def test_runtime_monotone_in_volume():
 def test_dram_efficiency_monotone():
     xs = [64, 256, 1024, 4096, 65536, 2**20, 2**23]
     effs = [dram_efficiency(x) for x in xs]
-    assert all(a <= b for a, b in zip(effs, effs[1:]))
+    assert all(a <= b for a, b in zip(effs, effs[1:], strict=False))
     assert dram_access_cycles(0, 1.0) == 0.0
     assert dram_access_cycles(1024, 1.0) > 1024  # latency + <1.0 efficiency
 

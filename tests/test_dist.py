@@ -105,7 +105,7 @@ def test_multidevice_train_and_dryrun():
             state2, m2 = step2(state2, jax.tree.map(jnp.asarray,
                                                     src2.batch(s)))
             ref.append(float(m2["ce"]))
-        err = max(abs(a - b) for a, b in zip(losses, ref))
+        err = max(abs(a - b) for a, b in zip(losses, ref, strict=True))
         print(json.dumps({"losses": losses, "ref": ref, "err": err}))
     """)
     out = _run_subprocess(code)

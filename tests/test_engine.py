@@ -82,7 +82,7 @@ def test_plan_json_roundtrip_byte_identical(tmp_path):
     assert path2.read_text() == text1          # byte-identical round trip
     assert len(plan2) == 3
     # decisions survive with full fidelity
-    for (req, dec), (req2, dec2) in zip(eng.plan, plan2):
+    for (req, dec), (req2, dec2) in zip(eng.plan, plan2, strict=True):
         assert req == req2 and dec == dec2
 
 
@@ -126,7 +126,7 @@ def test_plan_arch_verify_k_roundtrip_byte_identical(tmp_path):
     plan2.save(p2)
     assert p2.read_text() == p1.read_text()
     import dataclasses
-    for (req, dec), (req2, dec2) in zip(plan, plan2):
+    for (req, dec), (req2, dec2) in zip(plan, plan2, strict=True):
         # `name` is a human label, excluded from the key and the JSON
         assert dataclasses.replace(req, name="") == req2 and dec == dec2
 

@@ -153,25 +153,9 @@ def test_model_forward_through_engine():
                                rtol=1e-4, atol=1e-3)
 
 
-def test_deprecated_aliases_warn_and_work():
-    """kernels.ops keeps redas_matmul/auto_matmul/use_redas_kernels as
-    DeprecationWarning aliases that forward to the engine."""
-    from repro.kernels import ops
-
-    rng = np.random.default_rng(6)
-    a = jnp.asarray(rng.normal(size=(16, 64)), jnp.float32)
-    b = jnp.asarray(rng.normal(size=(64, 32)), jnp.float32)
-    want = np.asarray(matmul_ref(a, b))
-    with pytest.warns(DeprecationWarning, match="redas_matmul"):
-        got = ops.redas_matmul(a, b, dataflow="os", interpret=True)
-    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-5, atol=2e-4)
-    with pytest.warns(DeprecationWarning, match="auto_matmul"):
-        got = ops.auto_matmul(a, b, interpret=True)
-    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-5, atol=2e-4)
-    with pytest.warns(DeprecationWarning, match="use_redas_kernels"):
-        ctx = ops.use_redas_kernels()
-    with ctx:
-        from repro.engine import active_engine
-        assert active_engine() is not None
-    with pytest.warns(DeprecationWarning, match="default_blocks"):
-        assert ops.default_blocks(100, 100, 100) == default_blocks(100, 100, 100)
+def test_pre_engine_dispatch_surface_removed():
+    """The PR 3 `kernels.ops` DeprecationWarning shims are gone: the
+    engine API (`repro.engine.matmul` / `use_engine` /
+    `backends.pallas_gemm`) is the only dispatch surface."""
+    with pytest.raises(ImportError):
+        from repro.kernels import ops  # noqa: F401

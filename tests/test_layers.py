@@ -60,7 +60,7 @@ def test_flash_grads_match_naive():
 
     gf = jax.grad(lf, (0, 1, 2))(q, k, v)
     gr = jax.grad(lr, (0, 1, 2))(q, k, v)
-    for a, b in zip(gf, gr):
+    for a, b in zip(gf, gr, strict=True):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=2e-4, atol=2e-5)
 

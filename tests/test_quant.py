@@ -375,7 +375,7 @@ def test_int8_cache_hybrid_arch_keeps_recurrent_state_bf16():
                                  cache_dtype=jnp.int8)
     cache = serve_lib.init_cache(cfg, scfg)
     kinds = dict(zip([f"b{j}" for j in range(len(cfg.layer_pattern))],
-                     cfg.layer_pattern))
+                     cfg.layer_pattern, strict=True))
     for name, kind in kinds.items():
         slot = cache["slots"][name]
         if kind in ("attn", "local"):

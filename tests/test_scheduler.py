@@ -242,7 +242,7 @@ def test_decode_inactive_slots_frozen(arch):
                                    compute_dtype=jnp.float32, active=active)
     frozen_before = jax.tree.leaves(_slot_view(cache, 1))
     frozen_after = jax.tree.leaves(_slot_view(cache2, 1))
-    for a, b in zip(frozen_before, frozen_after):
+    for a, b in zip(frozen_before, frozen_after, strict=True):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     np.testing.assert_array_equal(np.asarray(cache2["t"]),
                                   np.asarray(cache["t"]) + [1, 0, 1])

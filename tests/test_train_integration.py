@@ -43,7 +43,8 @@ def test_microbatching_equivalent_to_full_batch():
     b = jax.tree.map(jnp.asarray, src.batch(0))
     n1, _ = step1(s1, b)
     n4, _ = step4(s4, b)
-    for a, c in zip(jax.tree.leaves(n1["params"]), jax.tree.leaves(n4["params"])):
+    for a, c in zip(jax.tree.leaves(n1["params"]), jax.tree.leaves(n4["params"]),
+                    strict=True):
         # f32 GEMM reduction order differs between one batch-8 grad and
         # four accumulated batch-2 grads; observed worst case ~9e-5 abs.
         np.testing.assert_allclose(np.asarray(a), np.asarray(c),
@@ -69,7 +70,7 @@ def test_checkpoint_restart_bitexact():
         restored = ck.restore(3, like)
     for b in batches[3:]:
         restored, _ = step2(restored, b)
-    for a, c in zip(jax.tree.leaves(ref), jax.tree.leaves(restored)):
+    for a, c in zip(jax.tree.leaves(ref), jax.tree.leaves(restored), strict=True):
         np.testing.assert_allclose(np.asarray(a), np.asarray(c),
                                    rtol=1e-5, atol=1e-6)
 
