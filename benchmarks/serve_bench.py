@@ -38,6 +38,17 @@ steady state.
 
     PYTHONPATH=src python -m benchmarks.serve_bench --smoke --check \
         --shared-prefix --out BENCH_PR6.json
+
+``--latency`` switches to the PR-10 latency-SLO trace (DESIGN.md §12):
+steady decoders plus (long, short) arrival pairs, served with and
+without ``ServeConfig.prefill_chunk``.  Reports p50/p99 time-to-first-
+token and inter-token latency per mode; ``--check`` gates interactive
+p99 TTFT improving >= 2x under chunking, exact greedy parity, and a
+miss-free engine steady state (the chunk width is pre-planned).  Emits
+``BENCH_PR10.json``.
+
+    PYTHONPATH=src python -m benchmarks.serve_bench --smoke --check \
+        --latency --out BENCH_PR10.json
 """
 
 from __future__ import annotations
@@ -269,6 +280,201 @@ def run_engine_posture_paged(arch, pool, page, prefix_len, max_seq, trace,
     }
 
 
+def make_latency_trace(smoke: bool):
+    """Adversarial prompt-length-mix trace for the chunked-prefill
+    latency bench (DESIGN.md §12): a few STEADY decoders occupy slots
+    for the whole horizon (their inter-token gaps are the head-of-line
+    victims), while (long, short) request pairs arrive together at
+    spaced ticks — the long prompt is the blocker, the short one is the
+    interactive class whose time-to-first-token the chunked scheduler
+    must protect.  Returns (pool, chunk, steady, long_len, short_len,
+    pair_gens, arrival_ticks)."""
+    if smoke:
+        return 5, 16, [(8, 70)] * 3, 288, 8, (2, 8), [5, 30]
+    return 6, 32, [(8, 140)] * 4, 448, 8, (2, 8), [5, 35, 65, 95]
+
+
+def _latency_schedule(cfg, smoke: bool):
+    """[(arrival_tick, Request)] for the latency trace; interactive
+    (short-prompt) uids are >= 200."""
+    import numpy as np
+
+    from repro.serve_lib.scheduler import Request
+
+    pool, chunk, steady, long_len, short_len, gens, ticks = \
+        make_latency_trace(smoke)
+    rng = np.random.default_rng(0)
+    mk = lambda uid, n, g: Request(
+        uid=uid, prompt=rng.integers(0, cfg.vocab, n).astype(np.int32),
+        max_new_tokens=g)
+    sched = [(0, mk(i, p, g)) for i, (p, g) in enumerate(steady)]
+    for j, t in enumerate(ticks):
+        sched.append((t, mk(100 + j, long_len, gens[0])))
+        sched.append((t, mk(200 + j, short_len, gens[1])))
+    return sched
+
+
+def _serve_timed(sched, schedule):
+    """Drive the scheduler tick by tick, submitting each request at its
+    arrival tick, and timestamp every emitted token at the end of the
+    tick that produced it (the step's np.asarray already synced the
+    device).  Returns (submit_time, emit_times) keyed by uid."""
+    import collections
+
+    submit_time: dict[int, float] = {}
+    emit_times: dict[int, list[float]] = collections.defaultdict(list)
+    pending = sorted(schedule, key=lambda x: x[0])
+    idx = 0
+    while idx < len(pending) or sched.queue or sched.n_active:
+        while idx < len(pending) and pending[idx][0] <= sched.step_count:
+            req = pending[idx][1]
+            submit_time[req.uid] = time.perf_counter()
+            sched.submit(req)
+            idx += 1
+        fin = sched.step()
+        now = time.perf_counter()
+        counts = {s.req.uid: len(s.emitted)
+                  for s in sched.slots if s is not None}
+        counts.update({c.uid: len(c.tokens) for c in fin})
+        for uid, n in counts.items():
+            et = emit_times[uid]
+            while len(et) < n:
+                et.append(now)
+    return submit_time, emit_times
+
+
+def _latency_metrics(submit, emits):
+    """p50/p99 TTFT (all + interactive class) and inter-token gaps."""
+    import numpy as np
+
+    ttft = {u: (emits[u][0] - submit[u]) * 1e3
+            for u in submit if emits.get(u)}
+    inter = [u for u in ttft if u >= 200]
+    gaps = [(b - a) * 1e3 for ts in emits.values()
+            for a, b in zip(ts, ts[1:])]
+    pct = lambda xs, q: float(np.percentile(np.asarray(xs), q))
+    return {
+        "ttft_p50_ms": round(pct(list(ttft.values()), 50), 3),
+        "ttft_p99_ms": round(pct(list(ttft.values()), 99), 3),
+        "interactive_ttft_p50_ms": round(
+            pct([ttft[u] for u in inter], 50), 3),
+        "interactive_ttft_p99_ms": round(
+            pct([ttft[u] for u in inter], 99), 3),
+        "inter_token_p50_ms": round(pct(gaps, 50), 3),
+        "inter_token_p99_ms": round(pct(gaps, 99), 3),
+    }
+
+
+def run_latency_mode(cfg, params, scfg, smoke: bool, bucket: int):
+    """Serve the latency schedule 1 warm-up + 3 timed times; per-metric
+    median across the timed runs (wall-clock noise), plus token parity
+    data from the last run."""
+    import numpy as np
+
+    from repro.serve_lib.scheduler import Scheduler
+
+    runs = []
+    toks = None
+    for it in range(4):
+        sched = Scheduler(params, cfg, scfg, prefill_bucket=bucket)
+        submit, emits = _serve_timed(sched, _latency_schedule(cfg, smoke))
+        if it:  # run 0 is the jit warm-up
+            runs.append(_latency_metrics(submit, emits))
+        toks = {u: c.tokens.tolist() for u, c in sched.completions.items()}
+    med = {k: round(float(np.median([r[k] for r in runs])), 3)
+           for k in runs[0]}
+    return med, toks
+
+
+def run_engine_posture_chunked(arch, pool, max_seq, chunk, bucket, smoke):
+    """Serve the latency schedule twice through ONE engine warm-started
+    with `plan_arch(..., prefill_chunk=...)`: the second pass must add
+    ZERO new plan misses — chunked ingestion introduces exactly one new
+    width (the chunk), and the plan pre-decides it."""
+    import dataclasses
+
+    from repro import engine as engine_mod
+    from repro.serve_lib.scheduler import Scheduler
+
+    cfg, params, scfg = _build(arch, pool, max_seq, backend="xla-einsum")
+    scfg = dataclasses.replace(scfg, prefill_chunk=chunk)
+    plan = engine_mod.plan_arch(
+        cfg, seq_len=chunk, dtype_bytes=4, decode_batch=pool,
+        admit_widths=tuple(range(bucket, chunk + 1, bucket)),
+        backend="xla-einsum", prefill_chunk=chunk)
+    eng = engine_mod.Engine(backend="xla-einsum", plan=plan)
+    planned = len(plan)
+    reqs = lambda: [r for _, r in _latency_schedule(cfg, smoke)]
+    Scheduler(params, cfg, scfg, engine=eng, prefill_bucket=bucket).run(reqs())
+    warm = dict(plan.stats)
+    Scheduler(params, cfg, scfg, engine=eng, prefill_bucket=bucket).run(reqs())
+    final = dict(plan.stats)
+    return {
+        "backend": "xla-einsum",
+        "planned_decisions": planned,
+        "after_warmup": warm,
+        "final": final,
+        "steady_state_new_misses": final["misses"] - warm["misses"],
+        "steady_state_new_hits": final["hits"] - warm["hits"],
+    }
+
+
+def run_latency(args) -> tuple[dict, list[str]]:
+    """PR-10 mode: chunked vs unchunked ingestion on the adversarial
+    prompt-mix trace; gates p99 TTFT of the interactive class."""
+    import dataclasses
+
+    pool, chunk, steady, long_len, short_len, gens, ticks = \
+        make_latency_trace(args.smoke)
+    max_seq = max(long_len + gens[0], short_len + gens[1],
+                  max(p + g for p, g in steady)) + 1
+    cfg, params, scfg = _build(args.arch, pool, max_seq)
+    scfg_chunked = dataclasses.replace(scfg, prefill_chunk=chunk)
+
+    unchunked, un_toks = run_latency_mode(cfg, params, scfg, args.smoke,
+                                          args.prefill_bucket)
+    chunked, ch_toks = run_latency_mode(cfg, params, scfg_chunked,
+                                        args.smoke, args.prefill_bucket)
+    parity = un_toks == ch_toks
+    engine = run_engine_posture_chunked(args.arch, pool, max_seq, chunk,
+                                        args.prefill_bucket, args.smoke)
+
+    report = {
+        "bench": "serve_chunked_latency",
+        "arch": args.arch, "smoke": args.smoke, "pool_slots": pool,
+        "prefill_chunk": chunk,
+        "trace": {"steady": steady, "long_len": long_len,
+                  "short_len": short_len, "pair_gens": list(gens),
+                  "arrival_ticks": ticks},
+        "unchunked": unchunked,
+        "chunked": chunked,
+        # host-invariant same-run ratios (trend-gated): how much
+        # head-of-line blocking the chunked scheduler removes
+        "p99_ttft_ratio": round(
+            unchunked["interactive_ttft_p99_ms"]
+            / chunked["interactive_ttft_p99_ms"], 3),
+        "inter_token_ratio": round(
+            unchunked["inter_token_p99_ms"]
+            / chunked["inter_token_p99_ms"], 3),
+        "greedy_parity": parity,
+        "engine": engine,
+    }
+
+    failures = []
+    if not parity:
+        failures.append("chunked and unchunked emitted different tokens")
+    if args.check:
+        if report["p99_ttft_ratio"] < 2.0:
+            failures.append(
+                f"chunked prefill did not improve interactive p99 TTFT "
+                f">= 2x ({report['p99_ttft_ratio']}x)")
+        if engine["steady_state_new_misses"] != 0:
+            failures.append(
+                f"chunked serve re-planned after warm-up "
+                f"({engine['steady_state_new_misses']} new misses)")
+    return report, failures
+
+
 def run_shared_prefix(args) -> tuple[dict, list[str]]:
     """PR-6 mode: contiguous vs paged Scheduler on a shared-prefix
     trace.  Returns (report, check_failures)."""
@@ -332,15 +538,25 @@ def main(argv=None) -> int:
     ap.add_argument("--shared-prefix", action="store_true",
                     help="PR-6 mode: contiguous vs paged cache layout on "
                          "a shared-prefix trace (emits BENCH_PR6.json)")
+    ap.add_argument("--latency", action="store_true",
+                    help="PR-10 mode: chunked vs unchunked prefill on an "
+                         "adversarial prompt-length mix, reporting p50/"
+                         "p99 TTFT + inter-token latency (emits "
+                         "BENCH_PR10.json)")
     ap.add_argument("--check", action="store_true",
                     help="exit nonzero unless continuous wins and the "
                          "engine steady state re-plans nothing")
     args = ap.parse_args(argv)
+    if args.shared_prefix and args.latency:
+        ap.error("--shared-prefix and --latency are separate modes")
     if args.out is None:
-        args.out = "BENCH_PR6.json" if args.shared_prefix else "BENCH_PR4.json"
+        args.out = ("BENCH_PR10.json" if args.latency
+                    else "BENCH_PR6.json" if args.shared_prefix
+                    else "BENCH_PR4.json")
 
-    if args.shared_prefix:
-        report, failures = run_shared_prefix(args)
+    if args.shared_prefix or args.latency:
+        report, failures = (run_latency(args) if args.latency
+                            else run_shared_prefix(args))
         with open(args.out, "w") as f:
             json.dump(report, f, indent=1, sort_keys=True)
             f.write("\n")

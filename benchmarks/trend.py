@@ -34,7 +34,12 @@ import sys
 #: throughput metric (same-run ratios; absolute tokens/s is reported
 #: but never gated — see the module docstring).
 THROUGHPUT_MARKERS = ("speedup", "geomean", "relative_throughput",
-                      "reuse_ratio", "accept_rate", "accepted_tokens_ratio")
+                      "reuse_ratio", "accept_rate", "accepted_tokens_ratio",
+                      # latency-SLO ratios (PR 10): unchunked / chunked
+                      # p99 latency on the same trace in the same run —
+                      # higher means chunked prefill removes more
+                      # head-of-line blocking
+                      "p99_ttft_ratio", "inter_token_ratio")
 
 #: noisy / non-metric paths never worth a table row.
 SKIP_MARKERS = ("trace", "shapes", "prefill_widths")

@@ -3,7 +3,7 @@
 ReDas's mapper story (Sec. 4.3) is that configuration legality — the
 Eq. 2-5 constraints — is decidable *before* execution.  The same holds
 for this repo's execution stack, and this package checks it at lint
-time instead of TPU time.  Four passes (DESIGN.md §11):
+time instead of TPU time.  Five passes (DESIGN.md §11):
 
   kernel-legality   Pallas tile floors, the Eq. 2 VMEM gate, and
                     grid/index_map rank consistency, re-derived from the
@@ -21,6 +21,10 @@ time instead of TPU time.  Four passes (DESIGN.md §11):
   jit-discipline    AST scan for per-call `jax.jit` construction,
                     Python `if` on traced values, and module-level
                     jitted closures over mutable globals.
+  docs-consistency  README/DESIGN linted against the tree: every
+                    `DESIGN.md §N` citation resolves to a real section,
+                    every `src/repro` package has a module-map row, and
+                    no doc references a deleted module or symbol.
 
 Stdlib-only at the import surface, like `benchmarks/check_baselines.py`:
 the passes import only the jax-free half of the repo (engine planning,
@@ -122,14 +126,15 @@ def run_passes(root: str | None = None,
                passes: tuple[str, ...] | None = None) -> list[Finding]:
     """Run the selected passes over `root` (default: the real package)
     and return every finding, allowlisted or not."""
-    from . import (jit_discipline, kernel_legality, plan_coverage,
-                   sharding_rules)
+    from . import (docs_consistency, jit_discipline, kernel_legality,
+                   plan_coverage, sharding_rules)
 
     table = {
         "kernel-legality": kernel_legality.run,
         "plan-coverage": plan_coverage.run,
         "sharding-rules": sharding_rules.run,
         "jit-discipline": jit_discipline.run,
+        "docs-consistency": docs_consistency.run,
     }
     root = REAL_ROOT if root is None else os.path.abspath(root)
     selected = passes or tuple(table)
@@ -144,4 +149,4 @@ def run_passes(root: str | None = None,
 
 
 PASS_NAMES = ("kernel-legality", "plan-coverage", "sharding-rules",
-              "jit-discipline")
+              "jit-discipline", "docs-consistency")

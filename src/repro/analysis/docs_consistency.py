@@ -1,0 +1,278 @@
+"""Pass 5: docs consistency — the documentation layer linted like code.
+
+PR 9 deleted `kernels/ops.py`; the §3 migration table kept describing
+it as a live DeprecationWarning shim until a human noticed.  That class
+of rot is mechanically checkable: documentation references *name* parts
+of the tree, and the tree is right here.
+
+  DC001  a `DESIGN.md §N` citation (src docstrings/comments,
+         benchmarks, README, DESIGN itself) naming a section that does
+         not exist — the renumbered-section failure mode.
+  DC002  a package under `src/repro/` with no row in the README module
+         map — a plane that shipped undocumented.
+  DC003  a backticked code reference in README/DESIGN (a `pkg/mod.py`
+         path or a dotted `repro.x.y` / `serve_lib.scheduler` module
+         path) that no longer resolves against the tree.  A paragraph
+         that itself says "removed"/"deleted" is exempt: documenting a
+         removal (the §3 migration table) is the fix, not the bug.
+
+Stale-doc findings are burned down in the docs, never allowlisted.
+
+Fixture trees (`tests/fixtures/analysis/*_docs`) carry their own
+README.md/DESIGN.md next to a miniature package tree; on the real
+package the docs live at the repo root, two levels above ``REAL_ROOT``.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+import re
+
+from . import Finding, is_real_root, rel
+from ._astutil import py_files
+
+#: ``DESIGN.md §<token>`` citation, token = section number ("12"),
+#: dotted subsection ("2.7"), or named section ("Arch-applicability").
+_CITE = re.compile(r"DESIGN\.md\s*§([\w][\w.-]*)")
+
+#: §-tokens on a DESIGN header line ("## §12 ...", "(a.k.a. §Arch)").
+_HEADER_TOKEN = re.compile(r"§([\w][\w.-]*)")
+
+_BACKTICK = re.compile(r"`([^`]+)`")
+_PATH_REF = re.compile(r"[\w][\w/-]*\.py\b")
+_EXEMPT = re.compile(r"\b(removed|deleted|renamed)\b", re.IGNORECASE)
+
+
+def _docroot(root: str) -> str:
+    """README/DESIGN live at the repo root for the real package, and in
+    the fixture directory itself for planted trees."""
+    if is_real_root(root):
+        return os.path.dirname(os.path.dirname(root))
+    return root
+
+
+def _doc_files(root: str) -> list[str]:
+    out = []
+    for name in ("README.md", "DESIGN.md"):
+        path = os.path.join(_docroot(root), name)
+        if os.path.exists(path):
+            out.append(path)
+    return out
+
+
+def _cite_files(root: str) -> list[str]:
+    """Where DC001 looks for citations: the package sources, the
+    benchmarks (real tree only), and the docs themselves."""
+    files = [p for p in py_files(root)
+             if not os.path.basename(p).startswith("test_")]
+    if is_real_root(root):
+        bench = os.path.join(_docroot(root), "benchmarks")
+        if os.path.isdir(bench):
+            files.extend(py_files(bench))
+    return files + _doc_files(root)
+
+
+# -- DC001 -----------------------------------------------------------------
+
+
+def _section_tokens(root: str) -> set[str] | None:
+    """Every §-token the DESIGN headers declare, plus the words of those
+    header lines (so `§Batched` may cite "§2.7 Batched search engine").
+    None when there is no DESIGN.md to resolve against."""
+    path = os.path.join(_docroot(root), "DESIGN.md")
+    if not os.path.exists(path):
+        return None
+    tokens: set[str] = set()
+    with open(path) as fh:
+        for line in fh:
+            if not line.startswith("#") or "§" not in line:
+                continue
+            tokens.update(m.group(1).rstrip(".-")
+                          for m in _HEADER_TOKEN.finditer(line))
+            tokens.update(re.findall(r"\w+", line))
+    return tokens
+
+
+def _check_citations(root: str) -> list[Finding]:
+    valid = _section_tokens(root)
+    if valid is None:
+        return []
+    findings = []
+    for path in _cite_files(root):
+        with open(path) as fh:
+            for ln, line in enumerate(fh, 1):
+                for m in _CITE.finditer(line):
+                    token = m.group(1).rstrip(".-")
+                    if token in valid or token.split(".")[0] in valid:
+                        continue
+                    findings.append(Finding(
+                        "DC001", rel(path), ln, f"§{token}",
+                        f"cites DESIGN.md §{token}, which matches no "
+                        f"DESIGN.md section header — a renumbered or "
+                        f"deleted section"))
+    return findings
+
+
+# -- DC002 -----------------------------------------------------------------
+
+
+def _packages(root: str) -> list[str]:
+    return sorted(
+        name for name in os.listdir(root)
+        if os.path.isdir(os.path.join(root, name))
+        and os.path.exists(os.path.join(root, name, "__init__.py")))
+
+
+def _check_module_map(root: str) -> list[Finding]:
+    readme = os.path.join(_docroot(root), "README.md")
+    if not os.path.exists(readme):
+        return []
+    with open(readme) as fh:
+        lines = fh.read().splitlines()
+    anchor = next((i for i, line in enumerate(lines, 1)
+                   if "module map" in line.lower()), 1)
+    text = "\n".join(lines)
+    findings = []
+    for pkg in _packages(root):
+        if f"`{pkg}/`" in text or f"repro.{pkg}" in text:
+            continue
+        findings.append(Finding(
+            "DC002", rel(readme), anchor, pkg,
+            f"package src/repro/{pkg}/ has no README module-map row "
+            f"(`{pkg}/`) — a plane shipped without documentation"))
+    return findings
+
+
+# -- DC003 -----------------------------------------------------------------
+
+
+def _py_index(root: str) -> list[str]:
+    """Relative paths ('/'-joined) of every .py file reachable from the
+    doc root — the universe a doc path reference may name."""
+    base = _docroot(root)
+    out = []
+    for dirpath, dirnames, filenames in os.walk(base):
+        dirnames[:] = [d for d in dirnames
+                       if d != "__pycache__" and not d.startswith(".")]
+        for f in filenames:
+            if f.endswith(".py"):
+                full = os.path.join(dirpath, f)
+                out.append(os.path.relpath(full, base).replace(os.sep, "/"))
+    return out
+
+
+def _path_resolves(ref: str, index: list[str]) -> bool:
+    if "/" in ref:
+        return any(p == ref or p.endswith("/" + ref) for p in index)
+    base = ref.rsplit("/", 1)[-1]
+    return any(p.rsplit("/", 1)[-1] == base for p in index)
+
+
+def _init_names(pkg_dir: str) -> set[str]:
+    """Top-level names a package's __init__.py binds (defs, classes,
+    assignments, import aliases) — the statically-visible attributes."""
+    init = os.path.join(pkg_dir, "__init__.py")
+    try:
+        with open(init) as fh:
+            tree = ast.parse(fh.read(), filename=init)
+    except (OSError, SyntaxError):
+        return set()
+    names: set[str] = set()
+    for stmt in tree.body:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            names.add(stmt.name)
+        elif isinstance(stmt, ast.Assign):
+            for tgt in stmt.targets:
+                if isinstance(tgt, ast.Name):
+                    names.add(tgt.id)
+        elif isinstance(stmt, ast.AnnAssign) and isinstance(stmt.target,
+                                                            ast.Name):
+            names.add(stmt.target.id)
+        elif isinstance(stmt, (ast.Import, ast.ImportFrom)):
+            names.update(a.asname or a.name.split(".")[0]
+                         for a in stmt.names)
+    return names
+
+
+def _dotted_resolves(parts: list[str], base: str) -> bool:
+    """Walk `parts` down from package dir `base`: directories descend,
+    a `part.py` or an __init__-bound name terminates (the remainder is
+    attribute access on a module/object — out of static reach)."""
+    cur = base
+    for part in parts:
+        nxt = os.path.join(cur, part)
+        if os.path.isdir(nxt) and os.path.exists(
+                os.path.join(nxt, "__init__.py")):
+            cur = nxt
+            continue
+        if os.path.exists(nxt + ".py"):
+            return True
+        return part in _init_names(cur)
+    return True
+
+
+def _check_code_refs(root: str) -> list[Finding]:
+    heads = set(_packages(root))
+    dotted_re = re.compile(
+        r"\b((?:repro|benchmarks|%s)(?:\.[A-Za-z_]\w+)+)" %
+        "|".join(map(re.escape, sorted(heads))) if heads else
+        r"\b((?:repro|benchmarks)(?:\.[A-Za-z_]\w+)+)")
+    index = _py_index(root)
+    bench_dir = os.path.join(_docroot(root), "benchmarks")
+    findings = []
+    for doc in _doc_files(root):
+        with open(doc) as fh:
+            lines = fh.read().splitlines()
+        # paragraph = blank-line-delimited block; the exemption keyword
+        # is looked up per paragraph because markdown wraps sentences.
+        para_start = 0
+        paras: list[tuple[int, list[str]]] = []
+        block: list[str] = []
+        for i, line in enumerate(lines, 1):
+            if line.strip():
+                if not block:
+                    para_start = i
+                block.append(line)
+            elif block:
+                paras.append((para_start, block))
+                block = []
+        if block:
+            paras.append((para_start, block))
+        for start, block in paras:
+            if _EXEMPT.search("\n".join(block)):
+                continue
+            for off, line in enumerate(block):
+                for span in _BACKTICK.findall(line):
+                    for ref in _PATH_REF.findall(span):
+                        if not _path_resolves(ref, index):
+                            findings.append(Finding(
+                                "DC003", rel(doc), start + off, ref,
+                                f"references {ref}, which matches no "
+                                f".py file in the tree — deleted or "
+                                f"renamed module"))
+                    for m in dotted_re.finditer(span):
+                        parts = m.group(1).split(".")
+                        head, tail = parts[0], parts[1:]
+                        if head == "repro":
+                            ok = _dotted_resolves(tail, root)
+                        elif head == "benchmarks":
+                            if not os.path.isdir(bench_dir):
+                                continue  # fixtures carry no benchmarks
+                            ok = _dotted_resolves(tail, bench_dir)
+                        else:
+                            ok = _dotted_resolves(tail,
+                                                  os.path.join(root, head))
+                        if not ok:
+                            findings.append(Finding(
+                                "DC003", rel(doc), start + off, m.group(1),
+                                f"references {m.group(1)}, which does not "
+                                f"resolve in the tree — deleted or renamed "
+                                f"module/symbol"))
+    return findings
+
+
+def run(root: str) -> list[Finding]:
+    return (_check_citations(root) + _check_module_map(root)
+            + _check_code_refs(root))

@@ -44,6 +44,12 @@ MAX_SEQ = 64
 PREFILL_BUCKET = 16
 PAGE_SIZE = 16
 SPECULATE_K = 2
+#: chunked-ingestion width (DESIGN.md §12).  The Scheduler aligns the
+#: chunk to the prefill bucket, so every legal chunk width is already a
+#: member of the admit-width ladder — passing it to plan_arch makes the
+#: posture explicit without adding a shape (the proof would catch a
+#: future chunk width escaping the ladder).
+PREFILL_CHUNK = 32
 SEED_BACKEND = "pallas-tpu"
 
 
@@ -190,7 +196,7 @@ def build_plan(cfg, surface: Surface):
         sparse_weights=surface.sparse, sparse_density=0.5,
         paged_pages=slot_pages if surface.layout == "paged" else 0,
         page_size=PAGE_SIZE if surface.layout == "paged" else 0,
-        verify_k=surface.speculate_k)
+        verify_k=surface.speculate_k, prefill_chunk=PREFILL_CHUNK)
 
 
 def check_plan(cfg, surface: Surface, plan, *, file: str, line: int

@@ -545,7 +545,7 @@ def plan_arch(cfg, *, seq_len: int | None = None, batch: int = 1,
               quantized_weights: bool = False,
               sparse_weights: bool = False, sparse_density: float = 0.5,
               paged_pages: int = 0, page_size: int = 0,
-              verify_k: int = 0) -> ExecutionPlan:
+              verify_k: int = 0, prefill_chunk: int = 0) -> ExecutionPlan:
     """Plan every GEMM of one `repro.models.config.ArchConfig` prefill
     pass via the `core.workloads.arch_gemms` lowering and return the
     warm `ExecutionPlan` (save it for serve warm-start).  `dtype_bytes`
@@ -571,7 +571,13 @@ def plan_arch(cfg, *, seq_len: int | None = None, batch: int = 1,
     speculative verify width — the only extra decode shape the
     speculative tick introduces (the draft's propose steps are the
     width-1 shapes, its prefill the admit widths; the paged verify
-    bypasses the engine's paged_attention op entirely)."""
+    bypasses the engine's paged_attention op entirely).  `prefill_chunk`
+    (a `ServeConfig.prefill_chunk` server, DESIGN.md §12) adds the
+    chunk width — every chunked-ingestion call is exactly that wide, so
+    it is the ONE extra shape chunking introduces; the scheduler aligns
+    the chunk to `prefill_bucket`, so when `admit_widths` covers the
+    bucket multiples the chunk width is already planned and this kwarg
+    merely makes the posture explicit."""
     from repro.core.workloads import ARCH_TRACE_SEQ, arch_gemms
 
     in_bytes = backend_in_bytes(backend, dtype_bytes)
@@ -583,6 +589,8 @@ def plan_arch(cfg, *, seq_len: int | None = None, batch: int = 1,
                    out_bytes=dtype_bytes)
     if decode_batch:
         widths = (1,) + tuple(admit_widths)
+        if prefill_chunk and prefill_chunk not in widths:
+            widths = widths + (prefill_chunk,)
         if verify_k:
             widths = widths + (verify_k + 1,)
         for width in widths:

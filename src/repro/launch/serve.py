@@ -61,7 +61,14 @@ def _run_trace(params, cfg, scfg, args, trace) -> dict:
             key=sub if args.temperature > 0 else None))
     sched = Scheduler(params, cfg, scfg, prefill_bucket=args.prefill_bucket)
     t0 = time.time()
-    comps = sched.run(reqs)
+    if args.async_ingest:
+        with sched.serve_async(max_queue=max(len(reqs), 1)) as srv:
+            futs = [srv.submit(r) for r in reqs]
+            for f in futs:
+                f.result()
+        comps = sched.completions
+    else:
+        comps = sched.run(reqs)
     dt = time.time() - t0
     n_tok = sum(len(c.tokens) for c in comps.values())
     print(f"served {len(comps)} requests / {n_tok} tokens in {dt:.2f}s "
@@ -95,6 +102,16 @@ def main(argv=None) -> dict:
     ap.add_argument("--prefill-bucket", type=int, default=8,
                     help="round admit widths up to this multiple "
                          "(bounds jit retraces; 1 = exact)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked prefill (trace mode only, DESIGN.md "
+                         "§12): stream prompts longer than this into "
+                         "their slot CHUNK tokens per tick, interleaved "
+                         "with decode, instead of one blocking prefill; "
+                         "must be a multiple of --prefill-bucket")
+    ap.add_argument("--async-ingest", action="store_true",
+                    help="drive the trace through Scheduler.serve_async "
+                         "(worker thread + bounded request queue) instead "
+                         "of the synchronous run loop")
     ap.add_argument("--kernel-backend", default=None,
                     choices=("pallas-tpu", "pallas-interpret", "xla-einsum",
                              "pallas-tpu-int8", "xla-int8",
@@ -142,6 +159,10 @@ def main(argv=None) -> dict:
     if args.cache_layout == "paged" and trace is None:
         raise SystemExit("--cache-layout paged needs --trace (the block-table "
                          "plane lives in the continuous-batching scheduler)")
+    if (args.prefill_chunk or args.async_ingest) and trace is None:
+        raise SystemExit("--prefill-chunk / --async-ingest need --trace "
+                         "(chunked ingestion lives in the continuous-"
+                         "batching scheduler)")
     if args.speculate:
         if trace is None:
             raise SystemExit("--speculate needs --trace (the draft/verify "
@@ -158,7 +179,8 @@ def main(argv=None) -> dict:
         quantize=args.quantize, sparsity=args.sparsity,
         cache_layout=args.cache_layout, page_size=args.page_size,
         speculate_k=args.speculate,
-        draft=args.draft if args.speculate else None)
+        draft=args.draft if args.speculate else None,
+        prefill_chunk=args.prefill_chunk)
     mesh = make_test_mesh()
 
     with mesh, shd.use_mesh(mesh):

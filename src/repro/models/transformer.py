@@ -459,17 +459,30 @@ def prefill(params, cfg: ArchConfig, tokens: Array, cache: dict, *,
     hit): `tokens` then holds only the un-resident suffix, queries take
     absolute positions `hist_len + i`, and attention runs over the
     gathered history pages plus the suffix.  `hist_pages` (static)
-    bounds the history gather: max(hist_len) // page_size."""
+    bounds the history gather: max(hist_len) // page_size.
+
+    Chunked mode (DESIGN.md §12): on a CONTIGUOUS cache `hist_len` (B,)
+    instead means "tokens this slot already prefilled in earlier chunk
+    calls" — `tokens` holds the next chunk, every cache kind continues
+    from the slot's resident state (attention rows land at absolute
+    rows, ring rows step write-then-attend like decode, SSM / RG-LRU
+    scans seed from the stored recurrent state), and slots with
+    `hist_len == 0` behave exactly like a fresh ragged admit, so one
+    call can mix first and continuation chunks."""
     if lengths is not None and (embeds is not None or cfg.prefix_tokens):
         raise NotImplementedError(
             "ragged prefill does not support embeds / VLM prefix archs")
     if block_tables is not None and lengths is None:
         raise NotImplementedError(
             "paged prefill is ragged-only (pass lengths)")
-    if hist_len is not None and block_tables is None:
-        raise ValueError("hist_len needs block_tables (paged cache)")
+    if hist_len is not None and lengths is None:
+        raise NotImplementedError(
+            "hist_len (chunked/suffix continuation) is ragged-only "
+            "(pass lengths)")
     if hist_pages and hist_len is None:
         raise ValueError("hist_pages needs hist_len")
+    if hist_pages and block_tables is None:
+        raise ValueError("hist_pages needs block_tables (paged cache)")
     if block_tables is not None and hist_pages > block_tables.shape[1]:
         raise ValueError(f"hist_pages {hist_pages} exceeds block table "
                          f"span {block_tables.shape[1]}")
@@ -602,6 +615,79 @@ def _paged_prefill_attn(cfg: ArchConfig, q, k, v, c: dict, positions,
     return new_c, o
 
 
+def _chunk_prefill_attn(p, cfg: ArchConfig, kind: str, q, store: dict,
+                        c: dict, positions, lengths, size: int):
+    """Contiguous chunk-continuation attention prefill (DESIGN.md §12):
+    the chunk's rows join a cache that already holds each slot's earlier
+    chunks at rows [0, hist), `positions` carrying the absolute offsets.
+
+    Full attention writes every chunk row at its absolute cache row in
+    one shot (rows past a slot's chunk length write back the old value —
+    clipping could alias a live row) and attends with per-query
+    `kv_len = pos + 1`, the same masked read the decode step uses.
+
+    Sliding windows can NOT batch the writes: a wrapped write at
+    absolute position p destroys the ring row holding p - size, which is
+    still inside the window of every earlier query in the chunk.  The
+    ring steps write-then-attend sequentially at query width 1 (only the
+    attention — QKV and the MLP stay chunk-wide), which is bit-for-bit
+    the decode path's operation order; rows past a slot's chunk length
+    skip their write so live window rows survive.  This is the
+    speculative verify's ring discipline (`_spec_block`) re-applied to
+    ingestion."""
+    b, s = q.shape[0], q.shape[1]
+    if kind == "attn":
+        j = jnp.arange(s, dtype=jnp.int32)[None, :]
+        valid = j < lengths[:, None]
+        rows = jnp.clip(positions, 0, size - 1)
+        bidx = jnp.arange(b, dtype=jnp.int32)[:, None]
+        new_c = {}
+        for nm, val in store.items():
+            old = c[nm][bidx, rows]
+            vmask = valid.reshape(valid.shape + (1,) * (val.ndim - 2))
+            new_c[nm] = layers.slot_update_many(
+                c[nm], rows, jnp.where(vmask, val.astype(c[nm].dtype), old))
+        o = layers.cached_attention(
+            p["attn"], cfg, q, new_c["k"], new_c["v"], positions,
+            jnp.minimum(positions + 1, size),
+            k_scale=new_c.get("k_scale"), v_scale=new_c.get("v_scale"))
+        return new_c, o
+
+    valid = jnp.arange(s, dtype=jnp.int32)[None, :] < lengths[:, None]
+
+    def astep(cc, inp):
+        q_i, pos_i, vals, valid_i = inp
+        idx_i = jnp.mod(pos_i, size).astype(jnp.int32)
+        cc = {nm: layers.slot_update(cc[nm], idx_i, vals[nm],
+                                     active=valid_i)
+              for nm in cc}
+        h_i = layers.cached_attention(
+            p["attn"], cfg, q_i[:, None], cc["k"], cc["v"],
+            pos_i[:, None], jnp.minimum(pos_i + 1, size),
+            k_scale=cc.get("k_scale"), v_scale=cc.get("v_scale"))
+        return cc, h_i[:, 0]
+
+    new_c, hs = jax.lax.scan(
+        astep, {nm: c[nm] for nm in store},
+        (jnp.moveaxis(q, 1, 0), jnp.moveaxis(positions, 1, 0),
+         {nm: jnp.moveaxis(val, 1, 0) for nm, val in store.items()},
+         jnp.moveaxis(valid, 1, 0)))
+    return new_c, jnp.moveaxis(hs, 0, 1)
+
+
+def _chunk_state(c: dict, hist_len: Array, names: tuple[str, ...]) -> dict:
+    """Recurrent state a chunk continuation seeds its scans with: the
+    slot's stored state, zeroed for slots whose history is empty — a
+    first chunk must start from the fresh-state identity, not whatever
+    the slot's previous occupant left behind (zero IS that identity for
+    conv windows, SSD state and RG-LRU h alike), so one fused call can
+    mix first and continuation chunks."""
+    live = hist_len > 0
+    return {nm: jnp.where(live.reshape((-1,) + (1,) * (c[nm].ndim - 1)),
+                          c[nm], 0)
+            for nm in names}
+
+
 def _prefill_block(kind: str, p, cfg: ArchConfig, x, positions, c,
                    lengths: Array | None = None,
                    update_mask: Array | None = None,
@@ -628,7 +714,10 @@ def _prefill_block(kind: str, p, cfg: ArchConfig, x, positions, c,
                 store = {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
             else:
                 store = {"k": k, "v": v}
-            if size >= s:  # full cache: write rows [0, s)
+            if hist_len is not None:  # chunk continuation (DESIGN.md §12)
+                new_c, o = _chunk_prefill_attn(p, cfg, kind, q, store, c,
+                                               positions, lengths, size)
+            elif size >= s:  # full cache: write rows [0, s)
                 new_c = {nm: jax.lax.dynamic_update_slice(
                     c[nm], val.astype(c[nm].dtype), (0,) * c[nm].ndim)
                     for nm, val in store.items()}
@@ -641,15 +730,20 @@ def _prefill_block(kind: str, p, cfg: ArchConfig, x, positions, c,
                 new_c = {nm: _ring_place(val, lengths,
                                          size).astype(c[nm].dtype)
                          for nm, val in store.items()}
-            kv_len = (jnp.full((b,), s, jnp.int32) if lengths is None
-                      else lengths.astype(jnp.int32))
-            if window > 0 and cfg.is_causal:
-                o = layers.local_attention(q, k, v, window)
-            else:
-                o = layers.flash_attention(q, k, v, positions, kv_len,
-                                           cfg.is_causal, window, min(512, s))
-        x = x + dense(p["attn"]["wo"],
-                      o.reshape(b, s, cfg.n_heads * cfg.head_dim_))
+            if hist_len is None:
+                kv_len = (jnp.full((b,), s, jnp.int32) if lengths is None
+                          else lengths.astype(jnp.int32))
+                if window > 0 and cfg.is_causal:
+                    o = layers.local_attention(q, k, v, window)
+                else:
+                    o = layers.flash_attention(q, k, v, positions, kv_len,
+                                               cfg.is_causal, window,
+                                               min(512, s))
+        if hist_len is not None and "k_pages" not in c:
+            x = x + o  # cached_attention already applied wo
+        else:
+            x = x + dense(p["attn"]["wo"],
+                          o.reshape(b, s, cfg.n_heads * cfg.head_dim_))
         h2in = rms_norm(p["norm2"], x, cfg.norm_eps)
         if cfg.moe is not None:
             h2, _ = moe.moe_block(p["moe"], cfg, h2in)
@@ -658,11 +752,16 @@ def _prefill_block(kind: str, p, cfg: ArchConfig, x, positions, c,
         return x + h2, new_c
     if kind == "ssm":
         xin = rms_norm(p["norm1"], x, cfg.norm_eps)
-        h, conv, state = _ssm_prefill(p["ssm"], cfg, xin, lengths)
+        st = (None if hist_len is None
+              else _chunk_state(c, hist_len, ("conv", "state")))
+        h, conv, state = _ssm_prefill(p["ssm"], cfg, xin, lengths, state=st)
         return x + h, {"conv": conv.astype(c["conv"].dtype), "state": state}
     if kind == "rglru":
         xin = rms_norm(p["norm1"], x, cfg.norm_eps)
-        h, conv, hstate = _rglru_prefill(p["rec"], cfg, xin, lengths)
+        st = (None if hist_len is None
+              else _chunk_state(c, hist_len, ("conv", "h")))
+        h, conv, hstate = _rglru_prefill(p["rec"], cfg, xin, lengths,
+                                         state=st)
         x = x + h
         x = x + mlp(p["mlp"], rms_norm(p["norm2"], x, cfg.norm_eps))
         return x, {"conv": conv.astype(c["conv"].dtype),
@@ -670,12 +769,15 @@ def _prefill_block(kind: str, p, cfg: ArchConfig, x, positions, c,
     raise ValueError(kind)
 
 
-def _ssm_prefill(p, cfg, x, lengths: Array | None = None):
+def _ssm_prefill(p, cfg, x, lengths: Array | None = None,
+                 state: dict | None = None):
     sc = cfg.ssm
     d_in = sc.expand * cfg.d_model
     u = x @ p["in_proj"]["w"].astype(x.dtype)
     z, xbc, dt, (s_, d_in, heads, gn) = ssm._split(p, cfg, u)
-    xbc_c, conv_state = ssm._causal_conv(p["conv_w"], p["conv_b"], xbc)
+    conv_in = None if state is None else state["conv"]
+    xbc_c, conv_state = ssm._causal_conv(p["conv_w"], p["conv_b"], xbc,
+                                         conv_in)
     xs, b_mat, c_mat = jnp.split(xbc_c, [d_in, d_in + gn], axis=-1)
     bsz, length = x.shape[0], x.shape[1]
     xs = xs.reshape(bsz, length, heads, s_.head_dim)
@@ -689,25 +791,47 @@ def _ssm_prefill(p, cfg, x, lengths: Array | None = None):
         # token; the conv state is re-gathered at per-slot offsets.
         valid = jnp.arange(length)[None, :, None] < lengths[:, None, None]
         dt_full = jnp.where(valid, dt_full, 0.0)
-        conv_state = ssm.ragged_conv_state(xbc, lengths, sc.conv_width)
-    y, state = ssm.ssd_chunked(xs, dt_full, p["A_log"], b_mat, c_mat,
-                               p["D"], s_.chunk)
+        if conv_in is None:
+            conv_state = ssm.ragged_conv_state(xbc, lengths, sc.conv_width)
+        else:
+            # chunk continuation: the decode state after this chunk may
+            # reach back into the PREVIOUS chunk's inputs (chunks shorter
+            # than the conv window), so re-gather over [prior state ‖
+            # chunk] with the valid prefix shifted by the state rows
+            w1 = sc.conv_width - 1
+            conv_state = ssm.ragged_conv_state(
+                jnp.concatenate([conv_in.astype(xbc.dtype), xbc], axis=1),
+                lengths + w1, sc.conv_width)
+    y, state_out = ssm.ssd_chunked(xs, dt_full, p["A_log"], b_mat, c_mat,
+                                   p["D"], s_.chunk,
+                                   h0=None if state is None
+                                   else state["state"])
     y = y.reshape(bsz, length, d_in).astype(x.dtype)
     y = rms_norm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
-    return y @ p["out_proj"]["w"].astype(x.dtype), conv_state, state
+    return y @ p["out_proj"]["w"].astype(x.dtype), conv_state, state_out
 
 
-def _rglru_prefill(p, cfg, x, lengths: Array | None = None):
+def _rglru_prefill(p, cfg, x, lengths: Array | None = None,
+                   state: dict | None = None):
     y = jax.nn.gelu(dense(p["lin_y"], x))
     u_in = dense(p["lin_x"], x)
+    conv_in = None if state is None else state["conv"]
     u, conv_state = ssm._causal_conv(p["conv_w"], p["conv_b"], u_in,
-                                     act=False)
+                                     conv_in, act=False)
+    width = p["conv_w"].shape[0]
     valid = None
     if lengths is not None:
         valid = (jnp.arange(x.shape[1])[None, :] < lengths[:, None])
-        conv_state = ssm.ragged_conv_state(u_in, lengths,
-                                           p["conv_w"].shape[0])
-    h, h_last = rglru.rglru_scan(p, u, valid=valid)
+        if conv_in is None:
+            conv_state = ssm.ragged_conv_state(u_in, lengths, width)
+        else:  # chunk continuation: same [prior state ‖ chunk] re-gather
+            # as `_ssm_prefill` (chunks can be shorter than the window)
+            conv_state = ssm.ragged_conv_state(
+                jnp.concatenate([conv_in.astype(u_in.dtype), u_in], axis=1),
+                lengths + (width - 1), width)
+    h, h_last = rglru.rglru_scan(p, u,
+                                 h0=None if state is None else state["h"],
+                                 valid=valid)
     return dense(p["lin_out"], h * y), conv_state, h_last
 
 

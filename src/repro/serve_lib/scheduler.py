@@ -29,6 +29,17 @@ Prefill is the only shape-variable call: prompt widths are rounded up
 to `prefill_bucket` (1 = exact group max — bitwise-parity mode; larger
 buckets bound jit retraces to O(max_seq / bucket) distinct widths).
 
+Chunked prefill (`ServeConfig.prefill_chunk`, DESIGN.md §12) bounds the
+other head-of-line blocker: without it, one long arriving prompt
+monopolizes a whole tick, stalling every in-flight decode for the full
+prompt's prefill latency.  With a chunk size set, a long prompt streams
+into its slot `prefill_chunk` tokens per tick (`transformer.prefill`'s
+`hist_len` continuation — exact for all four cache kinds), each chunk
+sharing its tick with the pool's fused decode, so in-flight slots keep
+emitting.  `Scheduler.serve_async()` wraps the tick loop in a worker
+thread behind a bounded request queue for callers that want submission
+decoupled from stepping.
+
 Greedy outputs match per-request `serve.generate` exactly for every
 cache kind; the one caveat is MoE capacity dropping: expert capacity
 scales with the CALL's padded width, so at drop-inducing capacity
@@ -40,9 +51,12 @@ static `generate` path already has versus `forward`.
 from __future__ import annotations
 
 import collections
+import concurrent.futures
 import contextlib
 import dataclasses
 import functools
+import queue
+import threading
 
 import jax
 import jax.numpy as jnp
@@ -85,6 +99,12 @@ class _Slot:
     emitted: list[int]
     last_token: int
     admit_step: int
+    # chunked ingestion (DESIGN.md §12): tokens of the prompt already
+    # resident in the cache (shared-prefix pages included); while
+    # `ingesting` the slot sits out of decode ticks and receives one
+    # chunk per `_ingest_tick` until the whole prompt is resident.
+    ingest_pos: int = 0
+    ingesting: bool = False
 
 
 @functools.lru_cache(maxsize=64)
@@ -96,7 +116,13 @@ def _jitted_steps(cfg: ArchConfig, scfg: serve_lib.ServeConfig, engine,
     engine context active when first taken (DESIGN.md §3).  The paged
     pair additionally threads the block tables (and the shared-prefix
     history: `hist_pages` is static — one retrace per distinct history
-    page count, same O(max_seq / page) bound the prefill widths have)."""
+    page count, same O(max_seq / page) bound the prefill widths have).
+
+    The third element is the chunk-continuation prefill (DESIGN.md
+    §12): the contiguous layout needs a separate trace that threads
+    `hist_len`; the paged prefill already does (chunk history rides the
+    same gathered-pages path shared prefixes use), so there the chunk
+    step IS the admit step."""
     if paged:
         def _paged_prefill(p, tok, cache, lens, mask, bt, hist, *,
                            hist_pages):
@@ -110,7 +136,7 @@ def _jitted_steps(cfg: ArchConfig, scfg: serve_lib.ServeConfig, engine,
             lambda p, cache, tok, act, bt: T.decode_step(
                 p, cfg, cache, tok, compute_dtype=scfg.compute_dtype,
                 active=act, block_tables=bt))
-        return prefill, decode
+        return prefill, decode, prefill
     prefill = jax.jit(
         lambda p, tok, cache, lens, mask: T.prefill(
             p, cfg, tok, cache, compute_dtype=scfg.compute_dtype,
@@ -119,7 +145,11 @@ def _jitted_steps(cfg: ArchConfig, scfg: serve_lib.ServeConfig, engine,
         lambda p, cache, tok, act: T.decode_step(
             p, cfg, cache, tok, compute_dtype=scfg.compute_dtype,
             active=act))
-    return prefill, decode
+    chunk_prefill = jax.jit(
+        lambda p, tok, cache, lens, mask, hist: T.prefill(
+            p, cfg, tok, cache, compute_dtype=scfg.compute_dtype,
+            lengths=lens, update_mask=mask, hist_len=hist))
+    return prefill, decode, chunk_prefill
 
 
 @functools.lru_cache(maxsize=64)
@@ -221,8 +251,18 @@ class Scheduler:
                       "spec_ticks": 0, "draft_tokens": 0,
                       "accepted_draft_tokens": 0}
         self._live_uids: set[int] = set()
-        self._prefill, self._decode = _jitted_steps(
+        self._prefill, self._decode, self._chunk_prefill = _jitted_steps(
             cfg, scfg, self.engine, self.paged is not None)
+        # chunked ingestion (DESIGN.md §12): chunk calls are always
+        # exactly `chunk` wide; aligning the chunk to the prefill bucket
+        # keeps it inside the admit-width universe plan_arch pre-decides
+        self.chunk = scfg.prefill_chunk
+        if self.chunk is not None and self.chunk % prefill_bucket:
+            raise ValueError(
+                f"prefill_chunk {self.chunk} is not a multiple of "
+                f"prefill_bucket {prefill_bucket}: the chunk width must "
+                f"sit in the bucketed admit-width universe the engine "
+                f"plan pre-decides (zero steady-state misses)")
         # -- speculative plane (DESIGN.md §9) -----------------------------
         self.spec_k = scfg.speculate_k
         self.draft_params = self.draft_cfg = self.draft_cache = None
@@ -361,6 +401,24 @@ class Scheduler:
         else:
             while free and self.queue:
                 picks.append((free.pop(0), self.queue.popleft()))
+        self.stats["admitted"] += len(picks)
+        # Chunked ingestion (DESIGN.md §12): a pick whose un-resident
+        # suffix exceeds the chunk does NOT prefill here — its slot
+        # enters `ingesting` and `_ingest_tick` streams the prompt in
+        # one chunk per tick, alongside the pool's decode.  Short picks
+        # keep the single-shot path (their bucketed widths are <= chunk).
+        if self.chunk is not None:
+            short: list[tuple[int, Request]] = []
+            for i, req in picks:
+                n = int(np.asarray(req.prompt).size)
+                if n - hists.get(i, 0) > self.chunk:
+                    self.slots[i] = _Slot(
+                        req=req, key=req.key, emitted=[], last_token=0,
+                        admit_step=self.step_count,
+                        ingest_pos=hists.get(i, 0), ingesting=True)
+                else:
+                    short.append((i, req))
+            picks = short
         # Bucket the admit group by shared-history page count: one
         # prefill call per distinct hist_pages, each at ITS OWN group-max
         # suffix width.  A mixed-history group no longer pays the widest
@@ -377,14 +435,15 @@ class Scheduler:
             rows.update(self._prefill_group(buckets[hp], hists, hp))
         if self.paged is not None:
             # index the now-resident full prompt pages so later
-            # admissions with the same prefix reuse them
+            # admissions with the same prefix reuse them (ingesting
+            # slots defer to their final chunk — the index must not
+            # advertise pages whose rows are not written yet)
             for i, req in picks:
                 self.paged.note_prefilled(
                     i, np.asarray(req.prompt, np.int32).tolist())
             self.stats["shared_prefix_tokens"] = self.paged.shared_tokens
-        if self.spec_k:
+        if self.spec_k and picks:
             self._draft_prefill(picks)
-        self.stats["admitted"] += len(picks)
         # first output token comes from the prefill logits (same
         # semantics as serve.generate)
         for i, _ in picks:
@@ -433,6 +492,82 @@ class Scheduler:
         self.stats["prefill_width_sum"] += width * len(picks)
         return {i: out_rows[i] for i, _ in picks}
 
+    def _ingest_tick(self, finished: list[Completion]) -> None:
+        """Advance every ingesting slot by one `prefill_chunk`-wide
+        chunk (DESIGN.md §12).  One fused call covers all ingesting
+        slots — `hist_len` is a traced array, so slots at different
+        depths (including a first chunk at hist 0) share the trace.  On
+        the paged layout slots are grouped by resident page count
+        (`hist_pages` is a static arg) and the shallowest group goes
+        first: deeper slots wait a tick, bounding retraces exactly like
+        the shared-prefix admit buckets.  A slot whose prompt completes
+        this tick leaves `ingesting`, emits its first output token from
+        the chunk logits, registers its prefix pages, and (when
+        speculating) replays its full prompt through the draft cache —
+        all the steps the single-shot admit runs, just deferred to the
+        final chunk."""
+        ing = [(i, s) for i, s in enumerate(self.slots)
+               if s is not None and s.ingesting]
+        if not ing:
+            return
+        if self.paged is not None:
+            groups: dict[int, list[tuple[int, _Slot]]] = {}
+            for i, s in ing:
+                groups.setdefault(
+                    s.ingest_pos // self.scfg.page_size, []).append((i, s))
+            hp = min(groups)
+            ing = groups[hp]
+        else:
+            hp = 0
+        b, ch = self.scfg.batch, self.chunk
+        tokens = np.zeros((b, ch), np.int32)
+        lengths = np.ones((b,), np.int32)
+        mask = np.zeros((b,), bool)
+        hist_arr = np.zeros((b,), np.int32)
+        takes: dict[int, int] = {}
+        for i, s in ing:
+            prompt = np.asarray(s.req.prompt, np.int32).reshape(-1)
+            take = min(ch, prompt.size - s.ingest_pos)
+            tokens[i, :take] = prompt[s.ingest_pos:s.ingest_pos + take]
+            lengths[i] = take
+            hist_arr[i] = s.ingest_pos
+            mask[i] = True
+            takes[i] = take
+        with self._scope():
+            if self.paged is not None:
+                logits, self.cache = self._chunk_prefill(
+                    self.params, jnp.asarray(tokens), self.cache,
+                    jnp.asarray(lengths), jnp.asarray(mask),
+                    jnp.asarray(self.paged.tables), jnp.asarray(hist_arr),
+                    hist_pages=hp)
+            else:
+                logits, self.cache = self._chunk_prefill(
+                    self.params, jnp.asarray(tokens), self.cache,
+                    jnp.asarray(lengths), jnp.asarray(mask),
+                    jnp.asarray(hist_arr))
+        rows = np.asarray(logits[:, -1], np.float32)
+        self.stats["prefill_calls"] += 1
+        self.stats["prefill_widths"].add(ch)
+        self.stats["prefill_tokens"] += sum(takes.values())
+        self.stats["prefill_width_sum"] += ch * len(ing)
+        done: list[tuple[int, Request]] = []
+        for i, s in ing:
+            s.ingest_pos += takes[i]
+            if s.ingest_pos >= int(np.asarray(s.req.prompt).size):
+                s.ingesting = False
+                done.append((i, s.req))
+        if not done:
+            return
+        if self.paged is not None:
+            for i, req in done:
+                self.paged.note_prefilled(
+                    i, np.asarray(req.prompt, np.int32).tolist())
+            self.stats["shared_prefix_tokens"] = self.paged.shared_tokens
+        if self.spec_k:
+            self._draft_prefill(done)
+        for i, _ in done:
+            self._emit(i, self._sample(self.slots[i], rows[i]), finished)
+
     def _draft_prefill(self, picks: list[tuple[int, Request]]) -> None:
         """Prefill the draft cache with the FULL prompts of the slots
         just admitted (the draft shares no prefixes — its cache is
@@ -457,7 +592,10 @@ class Scheduler:
                 jnp.asarray(lengths), jnp.asarray(mask))
 
     def _decode_active(self, finished: list[Completion]) -> None:
-        active = np.asarray([s is not None for s in self.slots])
+        # ingesting slots sit decode out: their prompt is still streaming
+        # in and they have no token to feed back yet (DESIGN.md §12)
+        active = np.asarray(
+            [s is not None and not s.ingesting for s in self.slots])
         if not active.any():
             return
         toks = np.asarray(
@@ -469,7 +607,7 @@ class Scheduler:
             # write position is the slot's clock: prompt_len + emitted - 1
             # (the first emitted token came from prefill, not decode).
             for i, s in enumerate(self.slots):
-                if s is not None:
+                if active[i]:
                     pos = (int(np.asarray(s.req.prompt).size)
                            + len(s.emitted) - 1)
                     self.paged.ensure_decode_page(i, pos)
@@ -495,7 +633,8 @@ class Scheduler:
         prefix plus the target's correction token, resync the draft.
         Three dispatches replace the k+1 sequential decode steps the
         same tokens would otherwise cost."""
-        active = np.asarray([s is not None for s in self.slots])
+        active = np.asarray(
+            [s is not None and not s.ingesting for s in self.slots])
         if not active.any():
             return
         k = self.spec_k
@@ -506,7 +645,7 @@ class Scheduler:
             # the verify writes span pos..pos+k: make every page on the
             # span exist (and be private) before the fused pass
             for i, s in enumerate(self.slots):
-                if s is not None:
+                if active[i]:
                     pos = (int(np.asarray(s.req.prompt).size)
                            + len(s.emitted) - 1)
                     page = self.paged.page
@@ -555,11 +694,14 @@ class Scheduler:
     # -- driver ------------------------------------------------------------
 
     def step(self) -> list[Completion]:
-        """One scheduler tick: admit into free slots, then one fused
-        decode (or draft/verify/resync, when speculating) over the
-        pool.  Returns requests finished this tick."""
+        """One scheduler tick: admit into free slots, advance chunked
+        ingestion, then one fused decode (or draft/verify/resync, when
+        speculating) over the pool.  Returns requests finished this
+        tick."""
         finished: list[Completion] = []
         self._admit(finished)
+        if self.chunk is not None:
+            self._ingest_tick(finished)
         if self.spec_k:
             self._spec_tick(finished)
         else:
@@ -582,3 +724,114 @@ class Scheduler:
                     f"scheduler did not drain in {max_steps} steps "
                     f"({self.n_active} active, {len(self.queue)} queued)")
         return self.completions
+
+    def serve_async(self, *, max_queue: int = 0,
+                    start: bool = True) -> "AsyncServer":
+        """Wrap this scheduler in the async ingestion plane (DESIGN.md
+        §12): a worker thread drives the tick loop, callers submit
+        through a bounded queue and get a Future per request.  The
+        scheduler must not be stepped directly while the server is
+        running — the worker owns it."""
+        return AsyncServer(self, max_queue=max_queue, start=start)
+
+
+class AsyncServer:
+    """Async ingestion plane over a `Scheduler` (DESIGN.md §12).
+
+    One worker thread owns the scheduler: it drains the submission
+    queue into `Scheduler.submit` and drives `step()` while there is
+    work, blocking on the queue when idle — the jitted step never runs
+    concurrently with itself, so no lock guards the cache.  Callers
+    touch only the queue and the returned futures:
+
+        with sched.serve_async(max_queue=32) as srv:
+            futs = [srv.submit(r) for r in requests]
+            outs = [f.result() for f in futs]
+
+    Backpressure: with `max_queue > 0`, `submit` blocks while the queue
+    is full (bounding the submission rate to the service rate); pass
+    `timeout=` to get `queue.Full` instead of blocking.  Requests the
+    scheduler rejects (validation errors) surface on the request's
+    Future, not in the worker.  `shutdown()` stops intake, lets the
+    worker drain everything already submitted, and joins it."""
+
+    _IDLE_POLL = 0.05  # seconds the idle worker blocks per queue wait
+
+    def __init__(self, sched: Scheduler, *, max_queue: int = 0,
+                 start: bool = True):
+        if max_queue < 0:
+            raise ValueError(f"max_queue must be >= 0: {max_queue}")
+        self._sched = sched
+        self._q: queue.Queue = queue.Queue(maxsize=max_queue)
+        self._futures: dict[int, concurrent.futures.Future] = {}
+        self._stop = threading.Event()
+        self._started = False
+        self._thread = threading.Thread(
+            target=self._worker, name="serve-async-worker", daemon=True)
+        if start:
+            self.start()
+
+    def start(self) -> None:
+        if not self._started:
+            self._started = True
+            self._thread.start()
+
+    def submit(self, req: Request,
+               timeout: float | None = None) -> concurrent.futures.Future:
+        """Queue `req`; returns a Future resolving to its Completion.
+        Blocks while the bounded queue is full (backpressure); with
+        `timeout=` raises `queue.Full` instead.  Raises RuntimeError
+        after `shutdown`."""
+        if self._stop.is_set():
+            raise RuntimeError("submit after shutdown")
+        fut: concurrent.futures.Future = concurrent.futures.Future()
+        self._q.put((req, fut), timeout=timeout)
+        return fut
+
+    def shutdown(self, wait: bool = True) -> None:
+        """Stop intake; the worker drains every request already queued
+        or in flight, then exits.  `wait=True` joins it."""
+        self._stop.set()
+        if wait and self._started:
+            self._thread.join()
+
+    def __enter__(self) -> "AsyncServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()
+
+    # -- worker side -------------------------------------------------------
+
+    def _intake(self, item) -> None:
+        req, fut = item
+        try:
+            self._sched.submit(req)
+        except Exception as e:  # validation error -> the caller's future
+            fut.set_exception(e)
+            return
+        self._futures[req.uid] = fut
+
+    def _drain_submissions(self) -> None:
+        while True:
+            try:
+                self._intake(self._q.get_nowait())
+            except queue.Empty:
+                return
+
+    def _worker(self) -> None:
+        sched = self._sched
+        while True:
+            self._drain_submissions()
+            if sched.queue or sched.n_active:
+                for comp in sched.step():
+                    fut = self._futures.pop(comp.uid, None)
+                    if fut is not None:
+                        fut.set_result(comp)
+            elif self._stop.is_set() and self._q.empty():
+                return
+            else:  # idle: block on the queue instead of spinning
+                try:
+                    self._intake(self._q.get(timeout=self._IDLE_POLL))
+                except queue.Empty:
+                    pass

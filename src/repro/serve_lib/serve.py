@@ -107,6 +107,15 @@ class ServeConfig:
     # Scheduler(draft_params=, draft_cfg=) overrides with an explicit
     # small arch.
     draft: str | None = None
+    # Chunked prefill (DESIGN.md §12): a prompt whose un-resident suffix
+    # exceeds this many tokens streams into its slot one fixed-width
+    # chunk per scheduler tick, interleaved with decode — in-flight
+    # slots keep emitting instead of stalling behind one long prompt.
+    # None (default) keeps the single-shot admit.  Chunk calls are
+    # always exactly this wide (ONE extra jit trace); on the paged
+    # layout the chunk must be page-aligned so every chunk boundary is
+    # a page boundary.
+    prefill_chunk: int | None = None
 
     def __post_init__(self):
         # Normalize to jnp.dtype so "bfloat16", jnp.bfloat16 and
@@ -147,6 +156,22 @@ class ServeConfig:
                     f"n_pages={self.n_pages} cannot hold even one full "
                     f"slot ({self.slot_pages} pages for max_seq="
                     f"{self.max_seq} at page_size={self.page_size})")
+        if self.prefill_chunk is not None:
+            if self.prefill_chunk < 1:
+                raise ValueError(
+                    f"prefill_chunk must be >= 1: {self.prefill_chunk}")
+            if self.prefill_chunk > self.max_seq:
+                raise ValueError(
+                    f"prefill_chunk {self.prefill_chunk} exceeds max_seq "
+                    f"{self.max_seq} — a chunk wider than the cache can "
+                    f"never fill")
+            if (self.cache_layout == "paged"
+                    and self.prefill_chunk % self.page_size):
+                raise ValueError(
+                    f"prefill_chunk {self.prefill_chunk} is not a multiple "
+                    f"of page_size {self.page_size}: paged chunk "
+                    f"continuation gathers whole resident pages, so every "
+                    f"chunk boundary must be a page boundary")
         if self.speculate_k < 0:
             raise ValueError(f"speculate_k must be >= 0: {self.speculate_k}")
         if self.draft is not None:

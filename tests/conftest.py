@@ -6,7 +6,22 @@ than kill collection.  pyproject.toml declares the real dependency."""
 import os
 import sys
 
+import pytest
+
 try:
     import hypothesis  # noqa: F401
 except ImportError:
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "_compat"))
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _bounded_compile_state():
+    # Executables are never shared across test modules (each builds its
+    # own model shapes), but jit caches pin every one of them for the
+    # whole pytest process.  With ~400 tests the accumulated XLA CPU
+    # state eventually segfaults backend_compile mid-suite, so drop the
+    # caches at each module boundary to keep live state per-module.
+    yield
+    import jax
+
+    jax.clear_caches()

@@ -1,0 +1,4 @@
+"""Fixture module.
+
+Cites a section that does not exist: DESIGN.md §77 (DC001, line 3).
+"""

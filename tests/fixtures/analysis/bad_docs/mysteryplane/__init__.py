@@ -1,0 +1,1 @@
+# undocumented package: no README module-map row (DC002)

@@ -1,0 +1,1 @@
+present = 1

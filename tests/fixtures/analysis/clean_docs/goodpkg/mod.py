@@ -1,0 +1,1 @@
+"""Fixture module citing a real section: DESIGN.md §1."""

@@ -247,6 +247,42 @@ def test_clean_jit_fixture_is_silent():
 
 
 # ---------------------------------------------------------------------------
+# Docs consistency: planted fixtures + the real tree staying clean
+# ---------------------------------------------------------------------------
+
+
+def test_docs_plants_each_fire_once():
+    found = run_pass("docs-consistency", "bad_docs")
+    by_id = {}
+    for f in found:
+        by_id.setdefault(f.check_id, []).append(f)
+    assert set(by_id) == {"DC001", "DC002", "DC003"}
+    # DC001: the stale README citation and the stale docstring citation
+    assert [(f.symbol, f.line) for f in by_id["DC001"]] == [
+        ("§99", 5), ("§77", 3)]
+    assert by_id["DC001"][1].file.endswith("goodpkg/mod.py")
+    # DC002: the undocumented package, anchored to the module-map header
+    assert [(f.symbol, f.line) for f in by_id["DC002"]] == [
+        ("mysteryplane", 7)]
+    # DC003: one dead path ref + one dead dotted ref, at the planted lines
+    assert [(f.symbol, f.line) for f in by_id["DC003"]] == [
+        ("goodpkg/gone.py", 13), ("repro.goodpkg.vanished", 14)]
+    # the "is removed" paragraph is exempt — documenting a removal is fine
+    assert not any("olde" in f.message for f in found)
+
+
+def test_clean_docs_fixture_is_silent():
+    assert run_pass("docs-consistency", "clean_docs") == []
+
+
+def test_real_docs_have_no_stale_findings():
+    """Acceptance gate: stale-doc findings are burned down in the docs,
+    never allowlisted — the DC pass must be clean on the real tree."""
+    found = analysis.run_passes(passes=("docs-consistency",))
+    assert found == [], "\n".join(f.text() for f in found)
+
+
+# ---------------------------------------------------------------------------
 # Drift tests: the stdlib mirrors vs the real jax implementations
 # ---------------------------------------------------------------------------
 

@@ -22,6 +22,8 @@ from repro.serve_lib.scheduler import Request, Scheduler
 
 KINDS = ["qwen2-1.5b", "mixtral-8x7b", "mamba2-780m", "recurrentgemma-2b"]
 
+CHUNK = 8  # > one page / bucket, small enough that smoke prompts span it
+
 
 def _cfg(arch):
     cfg = get_config(arch, smoke=True)
@@ -282,3 +284,142 @@ def test_decode_plan_coverage(arch):
     assert plan.misses == misses_before
     if any(k in ("attn", "local", "rglru") for k in cfg.layer_pattern):
         assert plan.hits > 0  # ssm-only archs route no decode matmuls
+
+
+# --------------------------------------------------------------------------
+# Chunked prefill (DESIGN.md §12): chunked == unchunked, all postures
+# --------------------------------------------------------------------------
+
+
+def _mix_requests(cfg, rng, n_short=3, long_len=24):
+    """One ingestion-forcing long prompt plus short interactive ones,
+    with prompts fixed once so both serves see identical requests."""
+    reqs = [Request(uid=0,
+                    prompt=rng.integers(0, cfg.vocab, long_len)
+                    .astype(np.int32),
+                    max_new_tokens=6)]
+    for uid in range(1, n_short + 1):
+        plen = int(rng.integers(3, 8))
+        reqs.append(Request(
+            uid=uid, prompt=rng.integers(0, cfg.vocab, plen)
+            .astype(np.int32), max_new_tokens=6))
+    return reqs
+
+
+def _clone(reqs):
+    return [dataclasses.replace(r) for r in reqs]
+
+
+@pytest.mark.parametrize("arch", KINDS)
+def test_chunked_prefill_matches_unchunked(arch):
+    """A long prompt streamed in CHUNK-token slices emits exactly the
+    tokens monolithic admission produces, on every cache kind."""
+    cfg, params, scfg = _setup(arch, batch=2)
+    reqs = _mix_requests(cfg, np.random.default_rng(3))
+    plain = Scheduler(params, cfg, scfg).run(_clone(reqs), max_steps=300)
+    chunked_scfg = dataclasses.replace(scfg, prefill_chunk=CHUNK)
+    sched = Scheduler(params, cfg, chunked_scfg)
+    chunked = sched.run(_clone(reqs), max_steps=300)
+    assert sorted(chunked) == sorted(plain)
+    for uid in plain:
+        np.testing.assert_array_equal(chunked[uid].tokens, plain[uid].tokens,
+                                      err_msg=f"{arch} uid={uid}")
+    # the long prompt actually went through the ingestion plane
+    assert CHUNK in sched.stats["prefill_widths"]
+
+
+@pytest.mark.parametrize("posture", ["paged", "int8", "paged-int8"])
+def test_chunked_prefill_paged_and_int8(posture):
+    """Chunk boundaries stay exact on the paged and int8 cache layouts
+    (chunk % page_size == 0 keeps hist page-aligned; the int8 contract
+    is greedy-token parity, as everywhere in the int8 plane)."""
+    cfg, params, scfg = _setup("qwen2-1.5b", batch=2)
+    over = {}
+    if "paged" in posture:
+        over.update(cache_layout="paged", page_size=8)
+    if "int8" in posture:
+        over.update(cache_dtype=jnp.int8)
+    scfg = dataclasses.replace(scfg, **over)
+    reqs = _mix_requests(cfg, np.random.default_rng(4))
+    plain = Scheduler(params, cfg, scfg).run(_clone(reqs), max_steps=300)
+    chunked_scfg = dataclasses.replace(scfg, prefill_chunk=CHUNK)
+    chunked = Scheduler(params, cfg, chunked_scfg).run(_clone(reqs),
+                                                       max_steps=300)
+    for uid in plain:
+        np.testing.assert_array_equal(chunked[uid].tokens, plain[uid].tokens,
+                                      err_msg=f"{posture} uid={uid}")
+
+
+def test_chunked_composes_with_speculative():
+    """speculate_k drafts only after a slot finishes ingesting, so
+    chunking + speculation stays bitwise identical to plain greedy."""
+    cfg, params, scfg = _setup("qwen2-1.5b", batch=2, max_seq=50)
+    reqs = _mix_requests(cfg, np.random.default_rng(5))
+    plain = Scheduler(params, cfg, scfg).run(_clone(reqs), max_steps=300)
+    spec_scfg = dataclasses.replace(scfg, prefill_chunk=CHUNK,
+                                    speculate_k=2, draft="self")
+    chunked = Scheduler(params, cfg, spec_scfg).run(_clone(reqs),
+                                                    max_steps=300)
+    for uid in plain:
+        np.testing.assert_array_equal(chunked[uid].tokens, plain[uid].tokens,
+                                      err_msg=f"uid={uid}")
+
+
+def test_chunk_width_validation():
+    cfg, params, scfg = _setup("qwen2-1.5b", batch=2)
+    bad = dataclasses.replace(scfg, prefill_chunk=6)
+    with pytest.raises(ValueError, match="prefill_bucket"):
+        Scheduler(params, cfg, bad, prefill_bucket=4)
+    with pytest.raises(ValueError, match="page_size"):
+        dataclasses.replace(scfg, prefill_chunk=12,
+                            cache_layout="paged", page_size=8)
+
+
+# --------------------------------------------------------------------------
+# Async ingestion plane (DESIGN.md §12): parity, backpressure, shutdown
+# --------------------------------------------------------------------------
+
+
+def test_serve_async_matches_run():
+    """Futures resolve to exactly the Completions the synchronous loop
+    produces, including through the chunked ingestion path."""
+    cfg, params, scfg = _setup("qwen2-1.5b", batch=2)
+    scfg = dataclasses.replace(scfg, prefill_chunk=CHUNK)
+    reqs = _mix_requests(cfg, np.random.default_rng(6))
+    ref = Scheduler(params, cfg, scfg).run(_clone(reqs), max_steps=300)
+    sched = Scheduler(params, cfg, scfg)
+    with sched.serve_async(max_queue=len(reqs)) as srv:
+        futs = {r.uid: srv.submit(r) for r in _clone(reqs)}
+        comps = {uid: f.result(timeout=120) for uid, f in futs.items()}
+    for uid in ref:
+        np.testing.assert_array_equal(comps[uid].tokens, ref[uid].tokens)
+        assert comps[uid].finish_reason == ref[uid].finish_reason
+    assert not sched.n_active and not sched.queue
+
+
+def test_async_backpressure_and_clean_shutdown():
+    """A full bounded queue raises queue.Full under a submit timeout;
+    shutdown drains accepted work and then refuses new submissions."""
+    import queue as queue_mod
+
+    cfg, params, scfg = _setup("qwen2-1.5b", batch=1)
+    reqs = _mix_requests(cfg, np.random.default_rng(7), n_short=1)
+    sched = Scheduler(params, cfg, scfg)
+    srv = sched.serve_async(max_queue=1, start=False)  # worker not running
+    fut0 = srv.submit(reqs[0])            # fills the queue
+    with pytest.raises(queue_mod.Full):
+        srv.submit(reqs[1], timeout=0.05)  # backpressure surfaces
+    srv.start()
+    srv.shutdown(wait=True)               # drains the accepted request
+    assert fut0.result(timeout=5).finish_reason == "length"
+    with pytest.raises(RuntimeError, match="shutdown"):
+        srv.submit(reqs[1])
+    # a rejected request surfaces on ITS future, not in the worker
+    sched2 = Scheduler(params, cfg, scfg)
+    with sched2.serve_async() as srv2:
+        good = srv2.submit(reqs[0])
+        bad = srv2.submit(Request(uid=reqs[0].uid,  # duplicate uid
+                                  prompt=reqs[1].prompt, max_new_tokens=2))
+        assert good.result(timeout=120).finish_reason == "length"
+        with pytest.raises(ValueError):
+            bad.result(timeout=120)
